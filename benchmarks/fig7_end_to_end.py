@@ -1,0 +1,104 @@
+"""Paper Fig. 7a/7b + Table 4: end-to-end echo throughput/latency + tails.
+
+The paper's echo experiment: clients submit timestamped values, servers echo
+on deliver; latency = client round-trip, throughput = deliveries/s.  We run
+the identical workload against (a) the libpaxos-like software baseline and
+(b) the CAANS hardware dataplane, at increasing offered load (threads ->
+submit burst size), and report p50/p99 + std at 25/50/75% of each system's
+max throughput (Table 4's predictability comparison).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import PaxosConfig, PaxosContext, SoftwarePaxos
+
+from .common import emit
+
+CFG = PaxosConfig(n_acceptors=3, n_instances=1 << 14, batch=256)
+N_MSG = 4000
+
+
+def _drive(system, submit, pump, n: int, burst: int) -> Tuple[float, np.ndarray]:
+    """Returns (throughput msg/s, latencies_us)."""
+    lat: List[float] = []
+    t_submit = {}
+    delivered = {0: 0}
+
+    def on_deliver(value, size, inst):
+        k = bytes(value)
+        if k in t_submit:
+            lat.append(time.perf_counter() - t_submit.pop(k))
+        delivered[0] += 1
+
+    system.deliver_cb = lambda *a: None
+    # warm every dispatch shape (jit compiles are not steady-state latency)
+    for _ in range(3):
+        for _ in range(burst):
+            submit(b"warmup")
+        pump()
+    for _ in range(50):
+        pump()
+    system.deliver_cb = on_deliver
+    t0 = time.perf_counter()
+    i = 0
+    while i < n:
+        for _ in range(min(burst, n - i)):
+            payload = f"m{i:08d}".encode()
+            t_submit[payload] = time.perf_counter()
+            submit(payload)
+            i += 1
+        pump()
+    # drain
+    for _ in range(200):
+        if not t_submit:
+            break
+        pump()
+    dt = time.perf_counter() - t0
+    return delivered[0] / dt, np.asarray(lat) * 1e6
+
+
+def run() -> None:
+    results = {}
+    for name, make in (
+        ("libpaxos_sw", lambda: SoftwarePaxos(CFG)),
+        ("caans_hw_staged", lambda: PaxosContext(CFG)),
+        ("caans_hw", lambda: PaxosContext(CFG, fused=True)),
+    ):
+        best = 0.0
+        for burst in (1, 8, 32, 64, 256):
+            sysm = make()
+            tput, lat = _drive(
+                sysm, sysm.submit, lambda s=sysm: s.pump(), N_MSG, burst
+            )
+            best = max(best, tput)
+            emit(
+                f"fig7a/{name}/burst={burst}",
+                float(np.median(lat)) if len(lat) else 0.0,
+                f"tput={tput:.0f}/s p99={np.percentile(lat,99):.0f}us"
+                if len(lat)
+                else f"tput={tput:.0f}/s",
+            )
+            results.setdefault(name, []).append((burst, tput, lat))
+        emit(f"fig7a/{name}/max_throughput", 1e6 / best, f"{best:.0f} msg/s")
+
+    # Table 4: predictability at fractional load (approximated by the burst
+    # closest to that fraction of max throughput)
+    for name, rows in results.items():
+        maxt = max(t for _, t, _ in rows)
+        for frac in (0.25, 0.5, 0.75):
+            burst, tput, lat = min(rows, key=lambda r: abs(r[1] - frac * maxt))
+            if len(lat):
+                emit(
+                    f"table4/{name}/load={int(frac*100)}%",
+                    float(np.mean(lat)),
+                    f"std={np.std(lat):.1f}us (burst={burst})",
+                )
+    # paper's headline: CAANS/libpaxos throughput ratio (paper: 2.24x)
+    r = max(t for _, t, _ in results["caans_hw"]) / max(
+        t for _, t, _ in results["libpaxos_sw"]
+    )
+    emit("fig7a/throughput_ratio_caans_vs_sw", 0.0, f"{r:.2f}x (paper: 2.24x)")

@@ -1,0 +1,64 @@
+"""Paper Fig. 7c: with CAANS the bottleneck moves to the learner.
+
+We measure per-role host time in the CAANS deployment: coordinator+acceptor
+work is inside the compiled dataplane (device time), while the learner's
+quorum bookkeeping and the application callback run on the host.  The paper's
+claim — hardware roles ~idle on host, learner saturated — falls out as the
+host-share of the learner dominating.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import PaxosConfig, PaxosContext
+
+from .common import emit
+
+CFG = PaxosConfig(n_acceptors=3, n_instances=1 << 14, batch=64)
+N = 2000
+
+
+def run() -> None:
+    ctx = PaxosContext(CFG)
+    t_dataplane = 0.0
+    t_learner = 0.0
+
+    # instrument by wrapping the role pumps
+    orig_coord = ctx._pump_coordinator
+    orig_learn = ctx._pump_learners
+
+    def timed_coord():
+        nonlocal t_dataplane
+        t0 = time.perf_counter()
+        orig_coord()
+        t_dataplane += time.perf_counter() - t0
+
+    def timed_learn():
+        nonlocal t_learner
+        t0 = time.perf_counter()
+        orig_learn()
+        t_learner += time.perf_counter() - t0
+
+    # warm dispatch shapes before instrumentation
+    for k in range(256):
+        ctx.submit(b"w" * 48)
+        if k % 64 == 63:
+            ctx.pump()
+    ctx.run_until_quiescent(max_rounds=200)
+
+    ctx._pump_coordinator = timed_coord
+    ctx._pump_learners = timed_learn
+
+    for k in range(N):
+        ctx.submit(b"y" * 48)
+        if k % 64 == 63:
+            ctx.pump()
+    ctx.run_until_quiescent(max_rounds=300)
+
+    total = t_dataplane + t_learner
+    emit(
+        "fig7c/caans_host_share/learner",
+        t_learner / N * 1e6,
+        f"learner={t_learner/total:.2f} dataplane={t_dataplane/total:.2f} "
+        f"(paper: learner ~100% CPU, coord/acc in hardware)",
+    )

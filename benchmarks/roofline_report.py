@@ -1,0 +1,45 @@
+"""§Roofline report: aggregate the dry-run artifacts into the roofline table.
+
+Reads benchmarks/artifacts/dryrun/*.json (produced by repro.launch.dryrun)
+and emits one row per (arch x shape x mesh x rules): the three terms, the
+dominant bottleneck, and MODEL_FLOPS/HLO ratio.  This is the §Perf scoreboard.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.analysis.roofline import from_record
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if not files:
+        emit("roofline/no_artifacts", 0.0, "run: python -m repro.launch.dryrun --all")
+        return
+    n_ok = n_skip = 0
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        if rec.get("skipped"):
+            n_skip += 1
+            continue
+        if not rec.get("ok"):
+            emit(f"roofline/{tag}", 0.0, f"FAILED: {rec.get('error','?')[:60]}")
+            continue
+        n_ok += 1
+        rl = from_record(rec)
+        emit(
+            f"roofline/{tag}",
+            rl.t_bound * 1e6,
+            f"dom={rl.dominant} tc={rl.t_compute*1e3:.2f}ms "
+            f"tm={rl.t_memory*1e3:.2f}ms tx={rl.t_collective*1e3:.2f}ms "
+            f"useful={rl.useful_ratio:.2f} frac={rl.roofline_fraction:.3f}",
+        )
+    emit("roofline/summary", 0.0, f"cells_ok={n_ok} skipped={n_skip}")

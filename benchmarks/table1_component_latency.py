@@ -1,0 +1,108 @@
+"""Paper Table 1/2: per-message dataplane component latency & throughput.
+
+Three implementations of the same coordinator/acceptor logic, mirroring the
+paper's forwarding-vs-Paxos comparison:
+
+  software   — scalar Python role step (libpaxos-like baseline)
+  jit        — jnp batched dataplane (XLA-compiled, per-message amortized)
+  pallas     — the TPU kernels (interpret mode on CPU: correctness-true,
+               *not* a TPU latency claim — Table 2's computed numbers for the
+               target come from the dry-run HLO instead)
+
+"forwarding" is the no-op baseline (same batch moved through an identity
+jit), matching the paper's forwarding-latency row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched
+from repro.core.paxos import Acceptor, Coordinator, Msg
+from repro.core.types import MSG_P2A, AcceptorState, CoordinatorState, MsgBatch
+
+from .common import block, emit, time_fn
+
+B = 512            # messages per burst
+V = 16             # value words (64B, paper's value size)
+N = 1 << 16        # instance ring (paper Table 3)
+
+
+def _mk_batch(base: int) -> MsgBatch:
+    return MsgBatch(
+        msgtype=jnp.full((B,), MSG_P2A, jnp.int32),
+        inst=jnp.arange(base, base + B, dtype=jnp.int32),
+        rnd=jnp.zeros((B,), jnp.int32),
+        vrnd=jnp.full((B,), -1, jnp.int32),
+        swid=jnp.zeros((B,), jnp.int32),
+        value=jnp.ones((B, V), jnp.int32),
+    )
+
+
+def run() -> None:
+    # ---- software (scalar) --------------------------------------------------
+    co = Coordinator()
+    acc = Acceptor(aid=0, n_instances=N)
+    msgs = [Msg(MSG_P2A, inst=i, rnd=0, value=b"x" * 64) for i in range(B)]
+
+    def sw_coordinator():
+        for m in msgs:
+            co.on_submit(m)
+
+    def sw_acceptor():
+        for m in msgs:
+            acc.on_p2a(m)
+
+    us = time_fn(sw_coordinator) / B
+    emit("table1/software/coordinator", us, f"{1e6/us:.0f} msg/s/core")
+    us = time_fn(sw_acceptor) / B
+    emit("table1/software/acceptor", us, f"{1e6/us:.0f} msg/s/core")
+
+    # ---- jit batched dataplane ----------------------------------------------
+    fwd = jax.jit(lambda m: jax.tree_util.tree_map(lambda x: x + 0, m))
+    seq = jax.jit(batched.coordinator_sequence)
+    vote = jax.jit(batched.acceptor_phase2)
+
+    batch = _mk_batch(0)
+    cstate = CoordinatorState.init()
+    astate = AcceptorState.init(N, V)
+    vals = jnp.ones((B, V), jnp.int32)
+    active = jnp.ones((B,), bool)
+
+    us = time_fn(lambda: block(fwd(batch))) / B
+    emit("table1/jit/forwarding", us, f"{1e6/us:.0f} msg/s")
+    us = time_fn(lambda: block(seq(cstate, vals, active))) / B
+    emit("table1/jit/coordinator", us, f"{1e6/us:.0f} msg/s")
+    us = time_fn(lambda: block(vote(astate, batch, 0))) / B
+    emit("table1/jit/acceptor", us, f"{1e6/us:.0f} msg/s")
+
+    q = jax.jit(lambda vt, vi, vr, vv: batched.learner_quorum(vt, vi, vr, vv, 2))
+    vt = jnp.full((3, B), 4, jnp.int32)
+    vi = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None], (3, B))
+    vr = jnp.zeros((3, B), jnp.int32)
+    vv = jnp.ones((3, B, V), jnp.int32)
+    us = time_fn(lambda: block(q(vt, vi, vr, vv))) / B
+    emit("table1/jit/learner_quorum", us, f"{1e6/us:.0f} msg/s")
+
+    # ---- pallas kernels (interpret mode: correctness path) -------------------
+    from repro.kernels.acceptor import acceptor_phase2_window
+    from repro.kernels.coordinator import coordinator_sequence_window
+
+    us = time_fn(
+        lambda: block(
+            coordinator_sequence_window(
+                jnp.int32(0), jnp.int32(0), active.astype(jnp.int32), interpret=True
+            )
+        )
+    ) / B
+    emit("table1/pallas_interpret/coordinator", us, "CPU interpret (not TPU time)")
+    st = (astate.rnd, astate.vrnd, astate.value)
+    us = time_fn(
+        lambda: block(
+            acceptor_phase2_window(
+                *st, 0, 0, batch.msgtype, batch.rnd, batch.value, interpret=True
+            )
+        )
+    ) / B
+    emit("table1/pallas_interpret/acceptor", us, "CPU interpret (not TPU time)")

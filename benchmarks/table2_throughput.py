@@ -1,0 +1,47 @@
+"""Paper Table 2: computed throughput across targets/batch ("clock rates").
+
+The paper computes throughput from SDNet cycle reports at three clock rates.
+Our analogue: dataplane messages/s as a function of burst size — the batch
+amortization curve is the TPU's "clock rate" lever.  Also derives the
+target-TPU acceptor throughput bound from the kernel's bytes-touched per
+message vs HBM bandwidth (819 GB/s): the acceptor is memory-bound, so
+msgs/s = HBM_bw / bytes_per_msg.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batched
+from repro.core.types import MSG_P2A, AcceptorState, CoordinatorState, MsgBatch
+
+from .common import block, emit, time_fn
+
+V = 16
+N = 1 << 16
+
+
+def run() -> None:
+    vote = jax.jit(batched.acceptor_phase2)
+    astate = AcceptorState.init(N, V)
+    for b in (64, 256, 1024, 4096):
+        batch = MsgBatch(
+            msgtype=jnp.full((b,), MSG_P2A, jnp.int32),
+            inst=jnp.arange(b, dtype=jnp.int32),
+            rnd=jnp.zeros((b,), jnp.int32),
+            vrnd=jnp.full((b,), -1, jnp.int32),
+            swid=jnp.zeros((b,), jnp.int32),
+            value=jnp.ones((b, V), jnp.int32),
+        )
+        us = time_fn(lambda: block(vote(astate, batch, 0))) / b
+        emit(f"table2/jit_acceptor/burst={b}", us, f"{1e6/us:.0f} msg/s (CPU)")
+
+    # target-TPU analytical bound: bytes touched per message
+    # state rw: (rnd+vrnd) 2x4B x2 + value 64B x2 ; msg read ~76B; vote write ~76B
+    bytes_per_msg = (2 * 4 * 2) + (64 * 2) + 76 + 76
+    hbm = 819e9
+    emit(
+        "table2/tpu_target_acceptor_bound",
+        1e6 * bytes_per_msg / hbm,
+        f"{hbm/bytes_per_msg/1e6:.0f} Mmsg/s @819GB/s (vs paper 9.3Mmsg/s @10G line rate)",
+    )

@@ -1,0 +1,44 @@
+"""Batched serving example: continuous batching over a reduced qwen3.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.serve.engine import Request, ServeLoop
+
+
+def main() -> None:
+    cfg = get_config("qwen3-4b").reduced()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    requests = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                max_new=8)
+        for i in range(12)
+    ]
+    loop = ServeLoop(cfg, params, batch_size=4, max_len=24)
+    t0 = time.time()
+    out = loop.run(requests)
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"served {len(requests)} requests / {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s, {loop.steps} decode steps)")
+    for rid in sorted(out)[:3]:
+        print(f"  req {rid}: {out[rid]}")
+    # determinism across batches with identical prompts
+    r2 = ServeLoop(cfg, params, batch_size=4, max_len=24).run(requests)
+    assert r2 == out
+    print("deterministic across re-serve: OK")
+
+
+if __name__ == "__main__":
+    main()

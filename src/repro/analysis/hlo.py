@@ -1,0 +1,112 @@
+"""Post-optimization HLO parsing: collective bytes + op census.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+traffic, so we parse the partitioned HLO text and sum the payload bytes of
+every collective op:
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+    (+ their async -start forms)
+
+Payload per op = the largest ``dtype[dims]`` type on the defining line (for
+async tuple types this is the gathered/transferred operand).  The partitioned
+module is the *per-device* program, so the sums are per-device bytes — the
+roofline divides by per-chip link bandwidth directly.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_TYPE_RE = re.compile(r"\b([a-z]+\d+(?:e\d+m\d+\w*)?|pred)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*[^=]*?\b(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\("
+)
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def loop_bodies(hlo_text: str) -> set:
+    """Names of computations used as while-loop bodies."""
+    bodies = set()
+    for line in hlo_text.splitlines():
+        if " while(" in line:
+            m = _WHILE_BODY_RE.search(line)
+            if m:
+                bodies.add(m.group(1))
+    return bodies
+
+
+def collective_bytes(
+    hlo_text: str, loop_trip_hint: int = 1
+) -> Tuple[int, Dict[str, int], Dict[str, int]]:
+    """Returns (total_bytes, bytes_by_op, count_by_op) for the module.
+
+    XLA emits each while-loop body ONCE in the module text, but its
+    collectives execute trip-count times.  We cannot recover trip counts from
+    the partitioned HLO, but we know the dominant loop: the layer scan (and
+    its backward twin), whose trip count the caller passes as
+    ``loop_trip_hint``.  Collectives inside any while-body computation are
+    multiplied by the hint; entry-level collectives count once.  (Inner
+    chunked-attention loops carry no collectives under the baseline rules;
+    if sequence parallelism puts any there, the hint under-counts them —
+    noted in EXPERIMENTS.md.)
+    """
+    bodies = loop_bodies(hlo_text)
+    by_op: Dict[str, int] = defaultdict(int)
+    count: Dict[str, int] = defaultdict(int)
+    current = ""
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMPUTATION_RE.match(line.strip())
+            if m:
+                current = m.group(1)
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async completion — payload counted at -start
+        op = m.group(1)
+        sizes = [_type_bytes(d, s) for d, s in _TYPE_RE.findall(line)]
+        if not sizes:
+            continue
+        mult = loop_trip_hint if current in bodies else 1
+        by_op[op] += max(sizes) * mult
+        count[op] += mult
+    return sum(by_op.values()), dict(by_op), dict(count)
+
+
+def op_census(hlo_text: str, ops=("fusion", "custom-call", "while", "convolution", "dot")) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if f" {op}(" in line:
+                out[op] += 1
+    return dict(out)

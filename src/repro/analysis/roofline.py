@@ -1,0 +1,120 @@
+"""Roofline-term derivation from dry-run artifacts.
+
+Hardware constants (per spec; TPU v5-class):
+    peak bf16:   197 TFLOP/s per chip
+    HBM bw:      819 GB/s per chip
+    ICI link bw: ~50 GB/s per link per chip
+
+Terms (seconds per step, per chip — cost_analysis of the GSPMD-partitioned
+executable is per-device, so no further division by chip count):
+
+    compute    = HLO_FLOPs_dev / peak
+    memory     = HLO_bytes_dev / hbm_bw
+    collective = collective_bytes_dev / link_bw
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) with D = tokens processed
+by the step; the ratio MODEL_FLOPS / (HLO_FLOPs_dev × chips) flags remat /
+redundant-compute waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_dev: float
+    hbm_bytes_dev: float
+    coll_bytes_dev: float
+    model_flops: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (remat / redundancy waste)."""
+        total = self.flops_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput achieved at the bound, vs pure-compute peak.
+
+        = (MODEL_FLOPS / chips / t_bound) / PEAK — i.e. the MFU the step would
+        achieve if it ran exactly at its dominant roofline term.
+        """
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.t_bound) / PEAK_FLOPS
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N_active·D with D = tokens processed by the lowered step."""
+    n = cfg.n_active_params
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d          # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def from_record(rec: Dict) -> Roofline:
+    return Roofline(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        chips=rec["chips"],
+        flops_dev=rec.get("flops", 0.0),
+        hbm_bytes_dev=rec.get("bytes_accessed", 0.0),
+        coll_bytes_dev=rec.get("collective_bytes", 0.0),
+        model_flops=rec.get("model_flops", 0.0),
+    )

@@ -1,0 +1,25 @@
+"""CAANS core: the paper's contribution — consensus as a (fabric) service.
+
+Layers:
+  * ``types``     — Paxos header/state as structure-of-arrays (paper Fig. 5)
+  * ``paxos``     — scalar reference role semantics (the oracle + baseline)
+  * ``batched``   — jnp batched multi-instance dataplane ("hardware" logic)
+  * ``fabric``    — shard_map in-fabric consensus over a mesh axis
+  * ``api``       — drop-in submit / deliver / recover (paper Fig. 4)
+  * ``log``       — replicated log, gaps, quorum trim
+  * ``failover``  — coordinator takeover (safe Phase-1 variant of §3.1)
+  * ``network``   — seeded lossy message fabric (UDP loss model)
+  * ``baseline``  — libpaxos-like software deployment (comparison baseline)
+"""
+from .types import (  # noqa: F401
+    AcceptorState,
+    CoordinatorState,
+    MsgBatch,
+    PaxosConfig,
+    decode_value,
+    encode_value,
+)
+from .api import PaxosContext  # noqa: F401
+from .baseline import SoftwarePaxos  # noqa: F401
+from .log import ReplicatedLog  # noqa: F401
+from .network import FaultSpec, SimNet  # noqa: F401

@@ -1,0 +1,448 @@
+"""The drop-in CAANS application API (paper Fig. 4).
+
+    submit(ctx, value, size)          -> propose a value
+    ctx.deliver = cb(value, size, inst)  (registered callback)
+    recover(ctx, inst, nop, size)     -> learn a previously decided instance
+
+A ``PaxosContext`` wires software proposers/learners to the "hardware"
+coordinator/acceptor dataplane.  The dataplane is the jitted batched engine
+(or the Pallas kernels when ``use_kernels=True``) — the same hardware/software
+divide as the paper: applications only ever see ``submit``/``deliver``/
+``recover``; everything between is the network's problem.
+
+Messages between the host roles travel over the fault-injected ``SimNet``;
+retransmission on timeout (counted in ``pump`` rounds) and duplicate
+suppression at learners implement the paper's §3.1 failure-handling contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import batched
+from .network import SimNet
+from .paxos import Coordinator as SoftCoordinator
+from .types import (
+    MSG_NOP,
+    MSG_P1A,
+    MSG_P2A,
+    MSG_P2B,
+    AcceptorState,
+    CoordinatorState,
+    MsgBatch,
+    PaxosConfig,
+    decode_value,
+    encode_value,
+)
+
+NO_ROUND = -1
+NOP_SENTINEL = -0x7FFFFFFF  # first value word marking an internal filler slot
+
+
+@dataclasses.dataclass
+class _Pending:
+    payload: bytes
+    age: int = 0
+
+
+class HardwareDataplane:
+    """The coordinator + acceptor array, executing as one jitted program."""
+
+    def __init__(self, cfg: PaxosConfig, use_kernels: bool = False):
+        self.cfg = cfg
+        self.cstate = CoordinatorState.init()
+        # acceptor register files, permanently stacked (A, ...) — the paper's
+        # per-device BRAM, one shard per acceptor
+        one = AcceptorState.init(cfg.n_instances, cfg.value_words)
+        self.stack: AcceptorState = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_acceptors,) + x.shape).copy(), one
+        )
+        self.alive = [True] * cfg.n_acceptors
+        self.use_kernels = use_kernels
+        if use_kernels:
+            from repro.kernels import ops as kops
+
+            self._seq = kops.coordinator_sequence
+            self._vote = kops.acceptor_phase2
+        else:
+            self._seq = jax.jit(batched.coordinator_sequence)
+            self._vote = jax.jit(batched.acceptor_phase2, static_argnames=())
+        self._phase1 = jax.jit(batched.acceptor_phase1)
+        self._fused = None  # built lazily
+
+    def _get_acceptor(self, aid: int) -> AcceptorState:
+        return jax.tree_util.tree_map(lambda x: x[aid], self.stack)
+
+    def _set_acceptor(self, aid: int, st: AcceptorState) -> None:
+        self.stack = jax.tree_util.tree_map(
+            lambda x, y: x.at[aid].set(y), self.stack, st
+        )
+
+    # -- fused fast path: whole Phase-2 round in ONE compiled program --------
+    def _build_fused(self):
+        a = self.cfg.n_acceptors
+        quorum = self.cfg.quorum
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def fused(cstate, stack, values, active, alive):
+            cstate, p2a = batched.coordinator_sequence(cstate, values, active)
+
+            def vote_one(st, aid):
+                return batched.acceptor_phase2(st, p2a, aid=aid)
+
+            stack, votes = jax.vmap(vote_one)(stack, jnp.arange(a))
+            # dead acceptors vote nothing and keep their old state
+            vt = jnp.where(alive[:, None], votes.msgtype, 7)  # MSG_REJECT
+            deliver, inst, win, value = batched.learner_quorum(
+                vt, votes.inst, votes.vrnd, votes.value, quorum
+            )
+            return cstate, stack, deliver, inst, value
+
+        return fused
+
+    def pipeline(self, values: np.ndarray, active: np.ndarray):
+        """One dispatch: sequence + all acceptor votes + quorum decision.
+
+        This is the CAANS wire path — consensus logic fused end-to-end below
+        the host boundary (DESIGN.md §2).  Returns host (deliver, inst, value).
+        """
+        if self._fused is None:
+            self._fused = self._build_fused()
+        alive = jnp.asarray(self.alive)
+        self.cstate, self.stack, deliver, inst, value = self._fused(
+            self.cstate, self.stack, jnp.asarray(values), jnp.asarray(active), alive
+        )
+        return np.asarray(deliver), np.asarray(inst), np.asarray(value)
+
+    def kill_acceptor(self, aid: int) -> None:
+        self.alive[aid] = False
+
+    def revive_acceptor(self, aid: int) -> None:
+        self.alive[aid] = True
+
+    def sequence(self, values: np.ndarray, active: np.ndarray) -> MsgBatch:
+        self.cstate, p2a = self._seq(
+            self.cstate, jnp.asarray(values), jnp.asarray(active)
+        )
+        return p2a
+
+    def vote(self, p2a: MsgBatch) -> List[Optional[MsgBatch]]:
+        votes: List[Optional[MsgBatch]] = []
+        for aid in range(self.cfg.n_acceptors):
+            if not self.alive[aid]:
+                votes.append(None)
+                continue
+            st, v = self._vote(self._get_acceptor(aid), p2a, aid)
+            self._set_acceptor(aid, st)
+            votes.append(v)
+        return votes
+
+    def prepare(self, p1a: MsgBatch) -> List[Optional[MsgBatch]]:
+        outs: List[Optional[MsgBatch]] = []
+        for aid in range(self.cfg.n_acceptors):
+            if not self.alive[aid]:
+                outs.append(None)
+                continue
+            st, v = self._phase1(self._get_acceptor(aid), p1a, aid)
+            self._set_acceptor(aid, st)
+            outs.append(v)
+        return outs
+
+
+class PaxosContext:
+    """Drop-in replacement context (the paper's ``paxos_ctx``)."""
+
+    def __init__(
+        self,
+        cfg: Optional[PaxosConfig] = None,
+        deliver: Optional[Callable[[bytes, int, int], None]] = None,
+        net: Optional[SimNet] = None,
+        use_kernels: bool = False,
+        retransmit_after: int = 3,
+        n_learners: int = 1,
+        fused: bool = False,
+    ):
+        self.cfg = cfg or PaxosConfig()
+        self.deliver_cb = deliver
+        self.net = net or SimNet()
+        self.hw = HardwareDataplane(self.cfg, use_kernels=use_kernels)
+        self.fused = fused
+        self._delivered_seqs: set = set()
+        self.retransmit_after = retransmit_after
+        self.n_learners = n_learners
+        # learner state (software role), one per learner
+        self.learned: List[Dict[int, bytes]] = [dict() for _ in range(n_learners)]
+        self._partial: List[Dict[int, Dict[int, Tuple[int, bytes]]]] = [
+            dict() for _ in range(n_learners)
+        ]
+        self.delivered_log: List[Tuple[int, bytes]] = []
+        self._pending: Dict[int, _Pending] = {}   # client-seq -> payload
+        self._next_client_seq = 0
+        self._next_epoch = 1                      # round-allocator epochs
+        self._softco: Optional[SoftCoordinator] = None  # failover coordinator
+        self.stats = {"submitted": 0, "delivered": 0, "retransmits": 0}
+
+    # -- paper API -----------------------------------------------------------
+    def submit(self, payload: bytes) -> int:
+        """paxos_submit(ctx, value, size)"""
+        seq = self._next_client_seq
+        self._next_client_seq += 1
+        self._pending[seq] = _Pending(payload)
+        self.net.send("coordinator", ("submit", seq, payload))
+        self.stats["submitted"] += 1
+        return seq
+
+    def recover(self, inst: int, nop: bytes = b"\x00") -> None:
+        """paxos_recover(ctx, iid, nop_value, size): phase 1+2 with a no-op."""
+        self.net.send("coordinator", ("recover", inst, nop))
+
+    # -- event loop ----------------------------------------------------------
+    def pump(self, rounds: int = 1) -> None:
+        """Drive the fabric: drain submits through the hardware dataplane,
+        route votes to learners, fire deliver callbacks, retransmit losses."""
+        for _ in range(rounds):
+            self._pump_coordinator()
+            self._pump_learners()
+            self._retransmit()
+
+    def run_until_quiescent(self, max_rounds: int = 64) -> None:
+        for _ in range(max_rounds):
+            if not self._pending and self.net.pending() == 0:
+                return
+            self.pump()
+
+    # -- internals -----------------------------------------------------------
+    def _pump_coordinator(self) -> None:
+        inbox = self.net.recv_all("coordinator")
+        submits = [(m[1], m[2]) for m in inbox if m[0] == "submit"]
+        recovers = [(m[1], m[2]) for m in inbox if m[0] == "recover"]
+
+        for inst, nop in recovers:
+            self._run_recover(inst, nop)
+
+        b = self.cfg.batch
+        for i in range(0, len(submits), b):
+            chunk = submits[i : i + b]
+            if self.fused:
+                # right-size the burst (next pow2): a half-empty wire batch
+                # costs real dataplane time; the jnp path has no alignment
+                # requirement (the Pallas kernel path keeps 128-alignment)
+                be = 8
+                while be < len(chunk):
+                    be *= 2
+                be = min(be, b)
+            else:
+                be = b
+            vals = np.full((be, self.cfg.value_words), 0, np.int32)
+            active = np.zeros((be,), bool)
+            for j, (seq, payload) in enumerate(chunk):
+                vals[j] = self._encode(seq, payload)
+                active[j] = True
+            vals[len(chunk) :, 0] = NOP_SENTINEL
+            if self.fused and self._softco is None:
+                # the CAANS wire path: the whole Phase-2 round below the host
+                # boundary, one dispatch — votes never surface as messages
+                deliver, inst, value = self.hw.pipeline(vals, active)
+                for j in range(len(deliver)):
+                    if not deliver[j]:
+                        continue
+                    raw = value[j].tobytes()
+                    for lid in range(self.n_learners):
+                        if int(inst[j]) not in self.learned[lid]:
+                            self.learned[lid][int(inst[j])] = raw
+                    self._deliver(int(inst[j]), raw)
+                continue
+            if self._softco is not None:
+                p2a = self._soft_sequence(vals, active)
+            else:
+                p2a = self.hw.sequence(vals, active)
+            votes = self.hw.vote(p2a)
+            for aid, v in enumerate(votes):
+                if v is None:
+                    continue
+                for lid in range(self.n_learners):
+                    self.net.send(("learner", lid), ("votes", aid, _to_host(v)))
+
+    def _pump_learners(self) -> None:
+        for lid in range(self.n_learners):
+            for m in self.net.recv_all(("learner", lid)):
+                _, aid, votes = m
+                self._learn(lid, aid, votes)
+
+    def _learn(self, lid: int, aid: int, votes: dict) -> None:
+        quorum = self.cfg.quorum
+        learned = self.learned[lid]
+        partial = self._partial[lid]
+        n = len(votes["msgtype"])
+        for i in range(n):
+            if votes["msgtype"][i] != MSG_P2B:
+                continue
+            inst = int(votes["inst"][i])
+            if inst in learned:
+                continue  # duplicate suppression
+            slot = partial.setdefault(inst, {})
+            slot[aid] = (int(votes["vrnd"][i]), votes["value"][i].tobytes())
+            by_rnd: Dict[int, int] = {}
+            for vr, _ in slot.values():
+                by_rnd[vr] = by_rnd.get(vr, 0) + 1
+            for vr, cnt in by_rnd.items():
+                if cnt >= quorum:
+                    raw = next(v for r, v in slot.values() if r == vr)
+                    learned[inst] = raw
+                    partial.pop(inst, None)
+                    if lid == 0:
+                        self._deliver(inst, raw)
+                    break
+
+    def _deliver(self, inst: int, raw: bytes) -> None:
+        words = np.frombuffer(raw, "<i4")
+        if words[0] == NOP_SENTINEL:
+            return  # internal filler — discarded by the library
+        seq = int(words[0])
+        if seq in self._delivered_seqs:
+            return  # duplicate (retransmit decided twice) — paper §3.1
+        self._delivered_seqs.add(seq)
+        payload = raw[8 : 8 + int(words[1])]
+        self._pending.pop(seq, None)
+        self.delivered_log.append((inst, payload))
+        self.stats["delivered"] += 1
+        if self.deliver_cb:
+            self.deliver_cb(payload, len(payload), inst)
+
+    def _retransmit(self) -> None:
+        for seq, p in list(self._pending.items()):
+            p.age += 1
+            if p.age >= self.retransmit_after:
+                p.age = 0
+                self.stats["retransmits"] += 1
+                self.net.send("coordinator", ("submit", seq, p.payload))
+
+    def _encode(self, seq: int, payload: bytes) -> np.ndarray:
+        nbytes = self.cfg.value_words * 4
+        if len(payload) > nbytes - 8:
+            raise ValueError(
+                f"value too large: {len(payload)} > {nbytes - 8} "
+                f"(increase PaxosConfig.value_words)"
+            )
+        head = np.array([seq, len(payload)], np.int32).tobytes()
+        return np.frombuffer((head + payload).ljust(nbytes, b"\x00"), "<i4").copy()
+
+    # -- failover ------------------------------------------------------------
+    def fail_coordinator(self, est_next_inst: Optional[int] = None) -> None:
+        """Hardware coordinator dies; a software coordinator takes over.
+
+        Runs the *safe* takeover (core.failover): claims a globally unique
+        higher round, Phase-1-scans the uncertainty window around the
+        (possibly stale) sequencer estimate, re-proposes any voted values it
+        finds, and resumes sequencing past them — the paper's §3.1/§6.4
+        procedure with the catch-up made explicit.
+        """
+        from .failover import takeover
+
+        est = (
+            est_next_inst
+            if est_next_inst is not None
+            else int(jax.device_get(self.hw.cstate.next_inst))
+        )
+        epoch = self._next_epoch
+        self._next_epoch += 1
+        res = takeover(
+            self.hw,
+            coordinator_id=1,
+            epoch=epoch,
+            est_next_inst=est,
+            window=self.cfg.batch * 2,
+            quorum=self.cfg.quorum,
+        )
+        self._softco = SoftCoordinator(
+            cid=1, crnd=res.crnd, next_inst=res.next_inst
+        )
+        return res
+
+    def restore_hardware_coordinator(self) -> None:
+        if self._softco is None:
+            return
+        self.hw.cstate = CoordinatorState(
+            next_inst=jnp.int32(self._softco.next_inst),
+            crnd=jnp.int32(self._softco.crnd),
+        )
+        self._softco = None
+
+    def _soft_sequence(self, vals: np.ndarray, active: np.ndarray) -> MsgBatch:
+        co = self._softco
+        assert co is not None
+        b = vals.shape[0]
+        inst = np.arange(co.next_inst, co.next_inst + b, dtype=np.int32)
+        co.next_inst += b
+        return MsgBatch(
+            msgtype=jnp.where(jnp.asarray(active), MSG_P2A, MSG_NOP).astype(jnp.int32),
+            inst=jnp.asarray(inst),
+            rnd=jnp.full((b,), co.crnd, jnp.int32),
+            vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
+            swid=jnp.full((b,), co.cid, jnp.int32),
+            value=jnp.asarray(vals),
+        )
+
+    def _run_recover(self, inst: int, nop: bytes) -> None:
+        """Phase 1 + Phase 2 for one instance with a no-op value (paper §3.1)."""
+        from .failover import allocate_round
+
+        epoch = self._next_epoch
+        self._next_epoch += 1
+        crnd = allocate_round(epoch, coordinator_id=2)
+        b = self.cfg.batch
+        p1a = MsgBatch.nop(b, self.cfg.value_words)
+        p1a = p1a.replace(
+            msgtype=p1a.msgtype.at[0].set(MSG_P1A),
+            inst=p1a.inst.at[0].set(inst),
+            rnd=p1a.rnd.at[0].set(crnd),
+        )
+        promises = self.hw.prepare(p1a)
+        best: Tuple[int, Optional[bytes]] = (NO_ROUND, None)
+        got = 0
+        for v in promises:
+            if v is None:
+                continue
+            host = _to_host(v)
+            if host["msgtype"][0] != 2:  # MSG_P1B
+                continue
+            got += 1
+            vr = int(host["vrnd"][0])
+            if vr > best[0]:
+                best = (vr, host["value"][0].tobytes())
+        if got < self.cfg.quorum:
+            return  # cannot recover without a quorum
+        if best[1] is not None and best[0] != NO_ROUND:
+            value_words = np.frombuffer(best[1], "<i4").copy()
+        else:
+            value_words = self._encode(-1, nop)
+            value_words[0] = NOP_SENTINEL
+        p2a = MsgBatch.nop(b, self.cfg.value_words)
+        p2a = p2a.replace(
+            msgtype=p2a.msgtype.at[0].set(MSG_P2A),
+            inst=p2a.inst.at[0].set(inst),
+            rnd=p2a.rnd.at[0].set(crnd),
+            value=p2a.value.at[0].set(jnp.asarray(value_words)),
+        )
+        votes = self.hw.vote(p2a)
+        for aid, v in enumerate(votes):
+            if v is None:
+                continue
+            for lid in range(self.n_learners):
+                self.net.send(("learner", lid), ("votes", aid, _to_host(v)))
+
+
+def _to_host(m: MsgBatch) -> dict:
+    return {
+        "msgtype": np.asarray(m.msgtype),
+        "inst": np.asarray(m.inst),
+        "rnd": np.asarray(m.rnd),
+        "vrnd": np.asarray(m.vrnd),
+        "swid": np.asarray(m.swid),
+        "value": np.asarray(m.value),
+    }

@@ -1,0 +1,258 @@
+"""Batched multi-instance Paxos dataplane in JAX.
+
+This is the jnp-level "hardware" implementation of the coordinator / acceptor
+/ learner-quorum logic: every function processes a *batch* of Paxos headers
+(``MsgBatch``) in one shot.  The Pallas kernels in ``repro.kernels`` implement
+the same functions with explicit VMEM tiling; ``kernels/ref.py`` re-exports
+these as the oracles.
+
+Semantics notes
+---------------
+* ``coordinator_sequence`` assigns a contiguous instance window to each batch
+  (monotonic sequencer).  Slots in a batch therefore hit *distinct* acceptor
+  ring slots, which makes the vectorized scatter in ``acceptor_phase2`` exact.
+* For adversarial traffic (recovery, duplicated instances inside one batch)
+  use ``acceptor_sequential`` — a ``lax.scan`` with exact one-message-at-a-time
+  semantics.  Tests check that on distinct-slot batches both paths agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import (
+    MSG_NOP,
+    MSG_P1A,
+    MSG_P1B,
+    MSG_P2A,
+    MSG_P2B,
+    MSG_REJECT,
+    AcceptorState,
+    CoordinatorState,
+    MsgBatch,
+)
+
+NO_ROUND = jnp.int32(-1)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator (sequencer)
+# ---------------------------------------------------------------------------
+def coordinator_sequence(
+    cstate: CoordinatorState, values: jax.Array, active: jax.Array
+) -> Tuple[CoordinatorState, MsgBatch]:
+    """Bind a batch of proposals to a contiguous window of instances.
+
+    Inactive slots still consume an instance and carry a NOP marker — they are
+    decided and discarded by the application layer (the paper's no-op values).
+    This preserves window contiguity, the property the acceptor fast path and
+    the Pallas kernel exploit.
+    """
+    b = values.shape[0]
+    inst = cstate.next_inst + jnp.arange(b, dtype=jnp.int32)
+    msgtype = jnp.where(active, MSG_P2A, MSG_NOP).astype(jnp.int32)
+    out = MsgBatch(
+        msgtype=msgtype,
+        inst=inst,
+        rnd=jnp.full((b,), cstate.crnd, jnp.int32),
+        vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
+        swid=jnp.zeros((b,), jnp.int32),
+        value=values,
+    )
+    new = CoordinatorState(next_inst=cstate.next_inst + b, crnd=cstate.crnd)
+    return new, out
+
+
+# ---------------------------------------------------------------------------
+# Acceptor — vectorized fast path (distinct ring slots per batch)
+# ---------------------------------------------------------------------------
+def acceptor_phase2(
+    astate: AcceptorState, msgs: MsgBatch, aid: int | jax.Array = 0
+) -> Tuple[AcceptorState, MsgBatch]:
+    """Vote on a batch of P2A requests against the instance ring.
+
+    accept iff msgtype==P2A and msg.rnd >= promised rnd of the slot.
+    NOP slots pass through as NOPs (they are *not* votes).
+    """
+    n = astate.n_instances
+    slots = msgs.inst % n
+    cur_rnd = astate.rnd[slots]
+    is_p2a = (msgs.msgtype == MSG_P2A) | (msgs.msgtype == MSG_NOP)
+    # NOP slots are sequenced instances carrying the no-op value: acceptors
+    # still vote so the instance is decided (and later discarded upstream).
+    accept = is_p2a & (msgs.rnd >= cur_rnd)
+
+    new_rnd = jnp.where(accept, msgs.rnd, cur_rnd)
+    new_vrnd = jnp.where(accept, msgs.rnd, astate.vrnd[slots])
+    new_val = jnp.where(accept[:, None], msgs.value, astate.value[slots])
+
+    astate = AcceptorState(
+        rnd=astate.rnd.at[slots].set(new_rnd, mode="drop"),
+        vrnd=astate.vrnd.at[slots].set(new_vrnd, mode="drop"),
+        value=astate.value.at[slots].set(new_val, mode="drop"),
+    )
+    votes = MsgBatch(
+        msgtype=jnp.where(accept, MSG_P2B, MSG_REJECT).astype(jnp.int32),
+        inst=msgs.inst,
+        rnd=jnp.where(accept, msgs.rnd, cur_rnd),
+        vrnd=jnp.where(accept, msgs.rnd, astate.vrnd[slots]),
+        swid=jnp.full_like(msgs.swid, aid),
+        value=jnp.where(accept[:, None], msgs.value, 0),
+    )
+    return astate, votes
+
+
+def acceptor_phase1(
+    astate: AcceptorState, msgs: MsgBatch, aid: int | jax.Array = 0
+) -> Tuple[AcceptorState, MsgBatch]:
+    """Promise on a batch of P1A prepares (recovery / takeover path)."""
+    n = astate.n_instances
+    slots = msgs.inst % n
+    cur_rnd = astate.rnd[slots]
+    cur_vrnd = astate.vrnd[slots]
+    cur_val = astate.value[slots]
+    is_p1a = msgs.msgtype == MSG_P1A
+    promise = is_p1a & (msgs.rnd > cur_rnd)
+
+    astate = AcceptorState(
+        rnd=astate.rnd.at[slots].set(jnp.where(promise, msgs.rnd, cur_rnd), mode="drop"),
+        vrnd=astate.vrnd,
+        value=astate.value,
+    )
+    out = MsgBatch(
+        msgtype=jnp.where(promise, MSG_P1B, MSG_REJECT).astype(jnp.int32),
+        inst=msgs.inst,
+        rnd=jnp.where(promise, msgs.rnd, cur_rnd),
+        vrnd=cur_vrnd,
+        swid=jnp.full_like(msgs.swid, aid),
+        value=cur_val,
+    )
+    return astate, out
+
+
+# ---------------------------------------------------------------------------
+# Acceptor — exact sequential semantics (any batch, incl. duplicate slots)
+# ---------------------------------------------------------------------------
+def acceptor_sequential(
+    astate: AcceptorState, msgs: MsgBatch, aid: int | jax.Array = 0
+) -> Tuple[AcceptorState, MsgBatch]:
+    """One-message-at-a-time semantics via lax.scan (recovery / adversarial)."""
+
+    def step(state: AcceptorState, m):
+        msgtype, inst, rnd, vrnd, swid, value = m
+        n = state.n_instances
+        slot = inst % n
+        cur_rnd = state.rnd[slot]
+        cur_vrnd = state.vrnd[slot]
+        cur_val = state.value[slot]
+
+        is_p2 = (msgtype == MSG_P2A) | (msgtype == MSG_NOP)
+        is_p1 = msgtype == MSG_P1A
+        accept = is_p2 & (rnd >= cur_rnd)
+        promise = is_p1 & (rnd > cur_rnd)
+
+        upd_rnd = jnp.where(accept | promise, rnd, cur_rnd)
+        upd_vrnd = jnp.where(accept, rnd, cur_vrnd)
+        upd_val = jnp.where(accept, value, cur_val)
+        state = AcceptorState(
+            rnd=state.rnd.at[slot].set(upd_rnd),
+            vrnd=state.vrnd.at[slot].set(upd_vrnd),
+            value=state.value.at[slot].set(upd_val),
+        )
+        out_type = jnp.where(
+            accept, MSG_P2B, jnp.where(promise, MSG_P1B, MSG_REJECT)
+        ).astype(jnp.int32)
+        out = (
+            out_type,
+            inst,
+            jnp.where(accept | promise, rnd, cur_rnd),
+            jnp.where(accept, rnd, cur_vrnd),
+            jnp.full_like(swid, aid),
+            jnp.where(is_p1, cur_val, jnp.where(accept, value, jnp.zeros_like(value))),
+        )
+        return state, out
+
+    ms = (msgs.msgtype, msgs.inst, msgs.rnd, msgs.vrnd, msgs.swid, msgs.value)
+    astate, outs = jax.lax.scan(step, astate, ms)
+    return astate, MsgBatch(*outs)
+
+
+# ---------------------------------------------------------------------------
+# Learner — quorum over stacked votes
+# ---------------------------------------------------------------------------
+def learner_quorum(
+    vote_msgtype: jax.Array,   # int32[A, B]
+    vote_inst: jax.Array,      # int32[A, B]
+    vote_vrnd: jax.Array,      # int32[A, B]
+    vote_value: jax.Array,     # int32[A, B, V]
+    quorum: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Position-aligned quorum count over the acceptor axis.
+
+    Votes arriving from the A acceptors for the same P2A batch are aligned by
+    batch position.  deliver[b] iff >= quorum acceptors voted (P2B) with the
+    same vrnd.  Value is taken from any acceptor voting the winning vrnd
+    (Paxos guarantees value uniqueness per (inst, rnd)).
+    """
+    is_vote = vote_msgtype == MSG_P2B                       # [A, B]
+    # winning round = max vrnd among votes (NO_ROUND where none)
+    vrnd_masked = jnp.where(is_vote, vote_vrnd, NO_ROUND)
+    win_vrnd = jnp.max(vrnd_masked, axis=0)                 # [B]
+    agree = is_vote & (vote_vrnd == win_vrnd[None, :])      # [A, B]
+    count = jnp.sum(agree.astype(jnp.int32), axis=0)        # [B]
+    deliver = count >= quorum                               # [B]
+
+    # first acceptor index voting the winning round
+    first = jnp.argmax(agree, axis=0)                       # [B]
+    b = vote_inst.shape[1]
+    cols = jnp.arange(b)
+    inst = vote_inst[first, cols]
+    value = vote_value[first, cols]
+    return deliver, inst, win_vrnd, value
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LearnerState:
+    """Dedup memory: delivered bitmap + decided values over the instance ring."""
+
+    delivered: jax.Array  # bool[N]
+    value: jax.Array      # int32[N, V]
+
+    def tree_flatten(self):
+        return ((self.delivered, self.value), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def init(cls, n_instances: int, value_words: int) -> "LearnerState":
+        return cls(
+            delivered=jnp.zeros((n_instances,), jnp.bool_),
+            value=jnp.zeros((n_instances, value_words), jnp.int32),
+        )
+
+
+def learner_update(
+    lstate: LearnerState,
+    deliver: jax.Array,
+    inst: jax.Array,
+    value: jax.Array,
+) -> Tuple[LearnerState, jax.Array]:
+    """Record deliveries; returns mask of *fresh* (not duplicate) deliveries."""
+    n = lstate.delivered.shape[0]
+    slots = inst % n
+    fresh = deliver & ~lstate.delivered[slots]
+    lstate = LearnerState(
+        delivered=lstate.delivered.at[slots].set(
+            lstate.delivered[slots] | deliver, mode="drop"
+        ),
+        value=lstate.value.at[slots].set(
+            jnp.where(fresh[:, None], value, lstate.value[slots]), mode="drop"
+        ),
+    )
+    return lstate, fresh

@@ -1,0 +1,168 @@
+"""In-fabric consensus: the whole Paxos Phase-2 round inside one shard_map.
+
+This is the TPU analogue of the paper's central move — consensus logic
+executing *on the interconnect* rather than in host software.  Acceptors are
+shards of a device-mesh axis; a consensus round is one compiled collective
+program:
+
+    1. proposers (one per shard) contribute their local proposal batch,
+    2. all_gather over the acceptor axis  == proposer->coordinator traffic,
+    3. deterministic replicated sequencer == the coordinator,
+    4. local acceptor vote (Pallas kernel / jnp fast path),
+    5. psum of agree-bits over the axis  == acceptor->learner vote traffic,
+    6. local quorum decision — every shard deterministically learns the
+       decided values (every device is a learner).
+
+No host round-trip happens anywhere in the round: "consensus messages travel
+fewer hops", at ICI speed.  Acceptor failure is modelled by an ``alive`` mask
+(a dead acceptor's votes never count); the round still decides while a quorum
+(f+1 of 2f+1) lives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import batched
+from .types import MSG_P2B, AcceptorState, CoordinatorState, MsgBatch
+
+NO_ROUND = jnp.int32(-1)
+
+
+def consensus_round(
+    astate: AcceptorState,
+    cstate: CoordinatorState,
+    values: jax.Array,        # int32[b_local, V]   local proposals (sharded)
+    active: jax.Array,        # bool [b_local]
+    alive: jax.Array,         # bool []             this acceptor is alive
+    *,
+    axis: str,
+    quorum: int,
+) -> Tuple[AcceptorState, CoordinatorState, jax.Array, jax.Array, jax.Array]:
+    """One in-fabric consensus round (runs *inside* shard_map).
+
+    Returns (astate', cstate', decided_mask[B], inst[B], value[B, V]) with
+    B = b_local * n_acceptors (the gathered global batch), identical on every
+    shard.
+    """
+    my_idx = jax.lax.axis_index(axis)
+
+    # (2) proposers -> coordinator: gather proposals from every shard.
+    all_values = jax.lax.all_gather(values, axis, tiled=True)    # [B, V]
+    all_active = jax.lax.all_gather(active, axis, tiled=True)    # [B]
+
+    # (3) replicated deterministic sequencer (the coordinator).
+    cstate, p2a = batched.coordinator_sequence(cstate, all_values, all_active)
+
+    # (4) local acceptor vote.
+    astate, votes = batched.acceptor_phase2(astate, p2a, aid=my_idx)
+
+    # (5)+(6) quorum by psum of agree bits.  A dead acceptor contributes 0
+    # and must also not mutate its durable state (it is "off the fabric").
+    voted = (votes.msgtype == MSG_P2B) & alive                    # [B]
+    count = jax.lax.psum(voted.astype(jnp.int32), axis)           # [B]
+    decided = count >= quorum
+
+    # Decided value: under a single live coordinator every accept in this
+    # round carries the P2A value itself.
+    return astate, cstate, decided, p2a.inst, p2a.value
+
+
+def make_fabric_consensus(
+    mesh: jax.sharding.Mesh,
+    *,
+    axis: str = "data",
+    quorum: Optional[int] = None,
+    n_instances: int = 4096,
+    value_words: int = 16,
+):
+    """Build a jitted in-fabric consensus step over ``mesh[axis]``.
+
+    Returns ``(init_fn, step_fn)``:
+      * ``init_fn()`` -> (astate_sharded, cstate)
+      * ``step_fn(astate, cstate, values, active, alive)`` ->
+        (astate', cstate', decided[B], inst[B], value[B,V])
+    Acceptor state carries a leading per-acceptor shard dim; proposals are
+    sharded over the same axis.
+    """
+    n_acc = mesh.shape[axis]
+    q = quorum if quorum is not None else n_acc // 2 + 1
+
+    shard = jax.sharding.NamedSharding(mesh, P(axis))
+    replicated = jax.sharding.NamedSharding(mesh, P())
+
+    def init_fn():
+        astate = AcceptorState(
+            rnd=jnp.zeros((n_acc, n_instances), jnp.int32),
+            vrnd=jnp.full((n_acc, n_instances), NO_ROUND, jnp.int32),
+            value=jnp.zeros((n_acc, n_instances, value_words), jnp.int32),
+        )
+        astate = jax.device_put(astate, shard)
+        cstate = jax.device_put(CoordinatorState.init(), replicated)
+        return astate, cstate
+
+    def local_round(astate, cstate, values, active, alive):
+        # strip the per-shard leading dim inside shard_map
+        a = AcceptorState(astate.rnd[0], astate.vrnd[0], astate.value[0])
+        a, cstate, decided, inst, value = consensus_round(
+            a, cstate, values, active, alive[0], axis=axis, quorum=q
+        )
+        a = AcceptorState(a.rnd[None], a.vrnd[None], a.value[None])
+        return a, cstate, decided, inst, value
+
+    from jax import shard_map
+
+    fn = shard_map(
+        local_round,
+        mesh=mesh,
+        in_specs=(
+            AcceptorState(P(axis), P(axis), P(axis)),
+            CoordinatorState(P(), P()),
+            P(axis, None),
+            P(axis),
+            P(axis),
+        ),
+        out_specs=(
+            AcceptorState(P(axis), P(axis), P(axis)),
+            CoordinatorState(P(), P()),
+            P(),   # decided: replicated (every shard learns identically)
+            P(),
+            P(),
+        ),
+        check_vma=False,
+    )
+    return init_fn, jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Quorum step-commit for distributed training (straggler mitigation)
+# ---------------------------------------------------------------------------
+def quorum_commit_digest(
+    digest: jax.Array,       # int32[] or int32[k]  this replica-group's digest
+    healthy: jax.Array,      # bool []              this group voted in time
+    *,
+    axis: str,
+    quorum: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Decide a training step commit by digest agreement (inside shard_map).
+
+    Each data-parallel replica group votes with the digest of its gradient
+    contribution; the step commits iff >= quorum healthy groups hold the
+    identical digest.  A straggling / dead group (healthy=False) cannot block
+    the step — the paper's f-of-2f+1 resilience doubles as straggler
+    mitigation.
+
+    Returns (commit: bool[], winning_count: int32[]).
+    """
+    d = jnp.atleast_1d(digest)
+    all_d = jax.lax.all_gather(d, axis)                      # [G, k]
+    all_h = jax.lax.all_gather(healthy, axis)                # [G]
+    eq = jnp.all(all_d[:, None, :] == all_d[None, :, :], -1)  # [G, G]
+    eq = eq & all_h[None, :] & all_h[:, None]
+    counts = jnp.sum(eq.astype(jnp.int32), axis=1)           # votes per digest
+    win = jnp.max(counts)
+    return win >= quorum, win

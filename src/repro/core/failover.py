@@ -1,0 +1,117 @@
+"""Coordinator failover (paper §3.1 + §6.4).
+
+When the hardware coordinator fails, a software coordinator takes over.  The
+paper's procedure: the replacement needs only an *estimate* of the last
+instance; if the estimate is low, acceptors reject until it catches up; if it
+is high, learners see gaps and fill them via ``recover``.
+
+We implement the *safe* variant of that procedure: the takeover coordinator
+claims a fresh, strictly higher round (rounds are partitioned by coordinator
+id so concurrent coordinators can never share one) and runs batched Phase 1
+over the uncertainty window.  Any instance found voted is re-proposed with
+its discovered value (Paxos's value-choice rule); untouched instances become
+available for fresh proposals.  This both "catches up" the sequencer and
+preserves agreement for already-decided instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import MSG_P1A, MSG_P1B, MSG_P2A, MsgBatch
+
+NO_ROUND = -1
+
+
+def allocate_round(epoch: int, coordinator_id: int, n_coordinators: int = 16) -> int:
+    """Globally unique, monotonically increasing round for a coordinator.
+
+    rounds ≡ coordinator_id (mod n_coordinators): two coordinators can never
+    issue the same round, the invariant that makes >= acceptance safe.
+    """
+    return epoch * n_coordinators + coordinator_id
+
+
+@dataclasses.dataclass
+class TakeoverResult:
+    crnd: int
+    next_inst: int
+    reproposed: List[Tuple[int, bytes]]   # (inst, value) re-proposed values
+    scanned: int
+
+
+def takeover(
+    hw,                      # HardwareDataplane
+    *,
+    coordinator_id: int,
+    epoch: int,
+    est_next_inst: int,
+    window: int,
+    quorum: int,
+) -> TakeoverResult:
+    """Run the safe takeover procedure against the (hardware) acceptors.
+
+    Scans ``[max(0, est_next_inst - window), est_next_inst + window)`` with
+    batched Phase 1, collects promises, and re-proposes discovered values
+    with the new round.  Returns the state the new coordinator starts from.
+    """
+    crnd = allocate_round(epoch, coordinator_id)
+    lo = max(0, est_next_inst - window)
+    hi = est_next_inst + window
+    b = hw.cfg.batch
+    vwords = hw.cfg.value_words
+
+    reproposed: List[Tuple[int, bytes]] = []
+    highest_voted = -1
+
+    for base in range(lo, hi, b):
+        insts = np.arange(base, base + b, dtype=np.int32)
+        p1a = MsgBatch(
+            msgtype=jnp.full((b,), MSG_P1A, jnp.int32),
+            inst=jnp.asarray(insts),
+            rnd=jnp.full((b,), crnd, jnp.int32),
+            vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
+            swid=jnp.full((b,), coordinator_id, jnp.int32),
+            value=jnp.zeros((b, vwords), jnp.int32),
+        )
+        promises = hw.prepare(p1a)
+        # aggregate promises: per position, need quorum of P1B; track best vrnd
+        got = np.zeros((b,), np.int32)
+        best_vrnd = np.full((b,), NO_ROUND, np.int32)
+        best_val = np.zeros((b, vwords), np.int32)
+        for v in promises:
+            if v is None:
+                continue
+            host_t = np.asarray(v.msgtype)
+            host_vr = np.asarray(v.vrnd)
+            host_val = np.asarray(v.value)
+            is_p1b = host_t == 2  # MSG_P1B
+            got += is_p1b.astype(np.int32)
+            better = is_p1b & (host_vr > best_vrnd)
+            best_vrnd = np.where(better, host_vr, best_vrnd)
+            best_val = np.where(better[:, None], host_val, best_val)
+        quorate = got >= quorum
+        voted = quorate & (best_vrnd != NO_ROUND)
+        if voted.any():
+            # re-propose discovered values at the new round (value-choice rule)
+            p2a = MsgBatch(
+                msgtype=jnp.where(jnp.asarray(voted), MSG_P2A, 0).astype(jnp.int32),
+                inst=jnp.asarray(insts),
+                rnd=jnp.full((b,), crnd, jnp.int32),
+                vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
+                swid=jnp.full((b,), coordinator_id, jnp.int32),
+                value=jnp.asarray(best_val),
+            )
+            hw.vote(p2a)
+            for i in np.nonzero(voted)[0]:
+                reproposed.append((int(insts[i]), best_val[i].tobytes()))
+                highest_voted = max(highest_voted, int(insts[i]))
+
+    next_inst = max(est_next_inst, highest_voted + 1)
+    return TakeoverResult(
+        crnd=crnd, next_inst=next_inst, reproposed=reproposed, scanned=hi - lo
+    )

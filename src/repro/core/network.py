@@ -1,0 +1,69 @@
+"""Deterministic simulated message fabric with UDP-like fault injection.
+
+The paper's deployment carries Paxos headers in UDP datagrams: messages can
+be dropped, duplicated, and reordered.  ICI collectives are reliable, so in
+the TPU adaptation loss lives at the host/DCN boundary — which is exactly
+where this simulator sits (between host-side role steps).  Faults are driven
+by a seeded RNG so every adversarial schedule is reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections import defaultdict, deque
+from typing import Any, Deque, Dict, Hashable, List, Tuple
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    drop: float = 0.0       # probability a message is dropped
+    dup: float = 0.0        # probability a message is duplicated
+    reorder: float = 0.0    # probability a message is queued out of order
+
+
+class SimNet:
+    """Point-to-point queues between named endpoints with fault injection."""
+
+    def __init__(self, faults: FaultSpec | None = None, seed: int = 0):
+        self.faults = faults or FaultSpec()
+        self.rng = random.Random(seed)
+        self.queues: Dict[Hashable, Deque[Any]] = defaultdict(deque)
+        self.sent = 0
+        self.dropped = 0
+        self.partitioned: set = set()   # endpoints cut off from the fabric
+
+    def partition(self, endpoint: Hashable, cut: bool = True) -> None:
+        if cut:
+            self.partitioned.add(endpoint)
+        else:
+            self.partitioned.discard(endpoint)
+
+    def send(self, dst: Hashable, msg: Any) -> None:
+        self.sent += 1
+        if dst in self.partitioned:
+            self.dropped += 1
+            return
+        if self.rng.random() < self.faults.drop:
+            self.dropped += 1
+            return
+        copies = 2 if self.rng.random() < self.faults.dup else 1
+        q = self.queues[dst]
+        for _ in range(copies):
+            if q and self.rng.random() < self.faults.reorder:
+                pos = self.rng.randrange(len(q) + 1)
+                q.insert(pos, msg)
+            else:
+                q.append(msg)
+
+    def recv(self, dst: Hashable) -> Any | None:
+        q = self.queues[dst]
+        return q.popleft() if q else None
+
+    def recv_all(self, dst: Hashable) -> List[Any]:
+        q = self.queues[dst]
+        out = list(q)
+        q.clear()
+        return out
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())

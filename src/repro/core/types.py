@@ -1,0 +1,179 @@
+"""Paxos message / state types, as structure-of-arrays for dataplane batching.
+
+The paper's Paxos header (Fig. 5)::
+
+    struct paxos_t {
+      uint8_t msgtype;
+      uint8_t inst[INST_SIZE];
+      uint8_t rnd;
+      uint8_t vrnd;
+      uint8_t swid[8];
+      uint8_t value[VALUE_SIZE];
+    };
+
+On TPU the unit of traffic is a *batch* of headers, stored SoA so each field
+is a vector register-friendly array.  ``value`` is a fixed number of 32-bit
+words (the paper uses fixed 64B values; we default to 16 words = 64B).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Message types (paper: phase 1A/1B/2A/2B + housekeeping)
+# ---------------------------------------------------------------------------
+MSG_NOP = 0         # no-op filler slot in a batch
+MSG_P1A = 1         # prepare            (coordinator -> acceptor)
+MSG_P1B = 2         # promise            (acceptor -> coordinator)
+MSG_P2A = 3         # accept request     (coordinator -> acceptor)
+MSG_P2B = 4         # vote               (acceptor -> learner/coordinator)
+MSG_SUBMIT = 5      # proposer -> coordinator
+MSG_DELIVER = 6     # learner decision (synthesized at quorum)
+MSG_REJECT = 7      # acceptor NACK (promised higher round)
+
+# Default sizing (paper: 65,535 instances in BRAM, 64B values).
+DEFAULT_INSTANCES = 1 << 16
+DEFAULT_VALUE_WORDS = 16  # 16 x int32 = 64 bytes
+
+NO_ROUND = jnp.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PaxosConfig:
+    """Static protocol configuration."""
+
+    n_acceptors: int = 3              # 2f+1
+    n_instances: int = DEFAULT_INSTANCES
+    value_words: int = DEFAULT_VALUE_WORDS
+    batch: int = 128                  # dataplane batch ("packets per burst")
+
+    @property
+    def f(self) -> int:
+        return (self.n_acceptors - 1) // 2
+
+    @property
+    def quorum(self) -> int:
+        return self.f + 1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MsgBatch:
+    """A batch of Paxos headers, structure-of-arrays.
+
+    Shapes: all fields ``[B]`` except ``value`` which is ``[B, V]``.
+    """
+
+    msgtype: jax.Array   # int32[B]
+    inst: jax.Array      # int32[B]
+    rnd: jax.Array       # int32[B]
+    vrnd: jax.Array      # int32[B]
+    swid: jax.Array      # int32[B]  sender id
+    value: jax.Array     # int32[B, V]
+
+    def tree_flatten(self):
+        return (
+            (self.msgtype, self.inst, self.rnd, self.vrnd, self.swid, self.value),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def batch(self) -> int:
+        return self.msgtype.shape[0]
+
+    @classmethod
+    def nop(cls, batch: int, value_words: int = DEFAULT_VALUE_WORDS) -> "MsgBatch":
+        z = jnp.zeros((batch,), jnp.int32)
+        return cls(
+            msgtype=z,
+            inst=z,
+            rnd=jnp.full((batch,), NO_ROUND, jnp.int32),
+            vrnd=jnp.full((batch,), NO_ROUND, jnp.int32),
+            swid=z,
+            value=jnp.zeros((batch, value_words), jnp.int32),
+        )
+
+    def replace(self, **kw: Any) -> "MsgBatch":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AcceptorState:
+    """The acceptor's bounded instance history — the paper's BRAM register file.
+
+    ``inst`` maps onto slot ``inst % n_instances`` (a ring).  ``rnd`` is the
+    promised round, ``vrnd`` the round of the vote cast (-1 = none), ``value``
+    the voted value.  Under the single-coordinator (multi-Paxos) optimization
+    the state is pre-initialized to round 0 promises, eliding Phase 1.
+    """
+
+    rnd: jax.Array    # int32[N]
+    vrnd: jax.Array   # int32[N]
+    value: jax.Array  # int32[N, V]
+
+    def tree_flatten(self):
+        return ((self.rnd, self.vrnd, self.value), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_instances(self) -> int:
+        return self.rnd.shape[0]
+
+    @classmethod
+    def init(
+        cls,
+        n_instances: int = DEFAULT_INSTANCES,
+        value_words: int = DEFAULT_VALUE_WORDS,
+    ) -> "AcceptorState":
+        return cls(
+            rnd=jnp.zeros((n_instances,), jnp.int32),
+            vrnd=jnp.full((n_instances,), NO_ROUND, jnp.int32),
+            value=jnp.zeros((n_instances, value_words), jnp.int32),
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CoordinatorState:
+    """Coordinator sequencer state: next instance + current round."""
+
+    next_inst: jax.Array  # int32[]    monotonically increasing sequence number
+    crnd: jax.Array       # int32[]    the coordinator's round
+
+    def tree_flatten(self):
+        return ((self.next_inst, self.crnd), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def init(cls, crnd: int = 0, next_inst: int = 0) -> "CoordinatorState":
+        return cls(next_inst=jnp.int32(next_inst), crnd=jnp.int32(crnd))
+
+
+def encode_value(payload: bytes, value_words: int = DEFAULT_VALUE_WORDS) -> np.ndarray:
+    """Pack an application byte buffer into int32 value words (host side)."""
+    nbytes = value_words * 4
+    if len(payload) > nbytes:
+        raise ValueError(f"value too large: {len(payload)} > {nbytes}")
+    buf = payload.ljust(nbytes, b"\x00")
+    return np.frombuffer(buf, dtype="<i4").copy()
+
+
+def decode_value(words: np.ndarray) -> bytes:
+    """Unpack int32 value words back to a byte buffer (host side)."""
+    return np.asarray(words, dtype="<i4").tobytes()

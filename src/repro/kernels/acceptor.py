@@ -1,0 +1,177 @@
+"""Pallas TPU kernel: the CAANS acceptor dataplane (Phase 2A vote).
+
+The paper's acceptor is a P4 match-action stage holding the instance history
+in switch BRAM and rewriting Paxos headers at line rate.  The TPU-native
+reformulation (DESIGN.md §2): the monotonic sequencer guarantees that a batch
+of B messages addresses a *contiguous window* ``[base, base+B)`` of the
+instance ring, so the per-packet random BRAM access becomes a contiguous
+block load → VREG compare/select → block store:
+
+    HBM (instance ring, the "BRAM")  --BlockSpec-->  VMEM tile
+    msg batch fields (SoA)           --BlockSpec-->  VMEM tiles
+    vote batch fields (SoA)          <--             VMEM tiles
+
+Grid iterates over batch blocks; the ring block index is derived from the
+scalar-prefetched window base (``(base//BB + i) % (N//BB)``), which also
+handles ring wraparound for free as long as ``BB | N`` and ``BB | base`` —
+invariants the sequencer maintains (batches are BB-aligned).
+
+State update is in-place via ``input_output_aliases`` — the history never
+round-trips through host memory, mirroring the stateful register semantics of
+the P4 targets.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.types import MSG_NOP, MSG_P2A, MSG_P2B, MSG_REJECT
+
+NO_ROUND = -1
+
+# Batch block (messages per grid step).  8x128 is the float32/int32 VREG tile;
+# value words ride along the lane dimension.
+DEFAULT_BLOCK_B = 128
+
+
+def _acceptor_kernel(
+    # scalar prefetch
+    base_ref,          # int32[1]  window base slot (BB-aligned)
+    aid_ref,           # int32[1]  acceptor id
+    # inputs (VMEM tiles)
+    msgtype_ref,       # int32[BB]
+    msg_rnd_ref,       # int32[BB]
+    msg_val_ref,       # int32[BB, V]
+    st_rnd_ref,        # int32[BB]      ring block (aliased out)
+    st_vrnd_ref,       # int32[BB]      ring block (aliased out)
+    st_val_ref,        # int32[BB, V]   ring block (aliased out)
+    # outputs
+    out_st_rnd_ref,    # int32[BB]
+    out_st_vrnd_ref,   # int32[BB]
+    out_st_val_ref,    # int32[BB, V]
+    vote_type_ref,     # int32[BB]
+    vote_rnd_ref,      # int32[BB]
+    vote_vrnd_ref,     # int32[BB]
+    vote_swid_ref,     # int32[BB]
+    vote_val_ref,      # int32[BB, V]
+):
+    msgtype = msgtype_ref[...]
+    mrnd = msg_rnd_ref[...]
+    mval = msg_val_ref[...]
+    cur_rnd = st_rnd_ref[...]
+    cur_vrnd = st_vrnd_ref[...]
+    cur_val = st_val_ref[...]
+
+    # vote rule: P2A (or sequenced NOP filler) with rnd >= promised
+    is_p2 = (msgtype == MSG_P2A) | (msgtype == MSG_NOP)
+    accept = is_p2 & (mrnd >= cur_rnd)
+
+    new_rnd = jnp.where(accept, mrnd, cur_rnd)
+    new_vrnd = jnp.where(accept, mrnd, cur_vrnd)
+    new_val = jnp.where(accept[:, None], mval, cur_val)
+
+    out_st_rnd_ref[...] = new_rnd
+    out_st_vrnd_ref[...] = new_vrnd
+    out_st_val_ref[...] = new_val
+
+    vote_type_ref[...] = jnp.where(accept, MSG_P2B, MSG_REJECT).astype(jnp.int32)
+    vote_rnd_ref[...] = new_rnd
+    vote_vrnd_ref[...] = new_vrnd
+    vote_swid_ref[...] = jnp.full_like(msgtype, aid_ref[0])
+    vote_val_ref[...] = jnp.where(accept[:, None], mval, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "interpret"),
+)
+def acceptor_phase2_window(
+    st_rnd: jax.Array,     # int32[N]
+    st_vrnd: jax.Array,    # int32[N]
+    st_val: jax.Array,     # int32[N, V]
+    base: jax.Array,       # int32[]  window base slot, BB-aligned, BB | N
+    aid: jax.Array,        # int32[]
+    msgtype: jax.Array,    # int32[B]
+    msg_rnd: jax.Array,    # int32[B]
+    msg_val: jax.Array,    # int32[B, V]
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Vote on a contiguous window batch.  Returns
+    (st_rnd', st_vrnd', st_val', vote_type, vote_rnd, vote_vrnd, vote_swid,
+    vote_val)."""
+    n = st_rnd.shape[0]
+    b, v = msg_val.shape
+    bb = min(block_b, b)
+    assert b % bb == 0, (b, bb)
+    assert n % bb == 0, (n, bb)
+    grid = (b // bb,)
+    n_blocks = n // bb
+
+    def ring_map(i, base_ref, aid_ref):
+        # block index into the ring, wrapping modulo N/BB
+        return ((base_ref[0] // bb + i) % n_blocks,)
+
+    def ring_map2(i, base_ref, aid_ref):
+        return ((base_ref[0] // bb + i) % n_blocks, 0)
+
+    def batch_map(i, base_ref, aid_ref):
+        return (i,)
+
+    def batch_map2(i, base_ref, aid_ref):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), batch_map),        # msgtype
+            pl.BlockSpec((bb,), batch_map),        # msg_rnd
+            pl.BlockSpec((bb, v), batch_map2),     # msg_val
+            pl.BlockSpec((bb,), ring_map),         # st_rnd
+            pl.BlockSpec((bb,), ring_map),         # st_vrnd
+            pl.BlockSpec((bb, v), ring_map2),      # st_val
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), ring_map),         # st_rnd'
+            pl.BlockSpec((bb,), ring_map),         # st_vrnd'
+            pl.BlockSpec((bb, v), ring_map2),      # st_val'
+            pl.BlockSpec((bb,), batch_map),        # vote_type
+            pl.BlockSpec((bb,), batch_map),        # vote_rnd
+            pl.BlockSpec((bb,), batch_map),        # vote_vrnd
+            pl.BlockSpec((bb,), batch_map),        # vote_swid
+            pl.BlockSpec((bb, v), batch_map2),     # vote_val
+        ],
+    )
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n, v), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b, v), jnp.int32),
+    ]
+
+    fn = pl.pallas_call(
+        _acceptor_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        # ring state updated in place: inputs 5,6,7 (after the 2 scalar
+        # prefetch args) alias outputs 0,1,2
+        input_output_aliases={5: 0, 6: 1, 7: 2},
+        interpret=interpret,
+    )
+    base = jnp.asarray(base, jnp.int32).reshape((1,))
+    aid = jnp.asarray(aid, jnp.int32).reshape((1,))
+    return tuple(
+        fn(base, aid, msgtype, msg_rnd, msg_val, st_rnd, st_vrnd, st_val)
+    )

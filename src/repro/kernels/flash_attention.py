@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: flash attention (online-softmax, causal / sliding-window).
+
+Beyond-paper hot-spot: every LM train/prefill cell spends its compute term in
+attention + matmuls; the pure-JAX chunked implementation
+(``models/layers.flash_attention``) bounds memory but leaves the score tile
+materialization to XLA fusion.  This kernel makes the tiling explicit for the
+TPU memory hierarchy:
+
+  * grid = (batch x kv_head x group, Sq/bq, Sk/bk), innermost k-dim sequential
+  * q/k/v tiles staged HBM->VMEM by BlockSpec; scores live in VREGs
+  * the online-softmax state (acc, m, l) persists across the k-grid in VMEM
+    scratch, written back once per q tile — one HBM pass over K/V per q tile
+  * MXU-aligned tiles (bq, bk multiples of 128; head_dim 64..256)
+
+Masking supports causal and sliding-window (the gemma3 5:1 pattern) via
+absolute positions derived from the grid indices.  Validated in interpret
+mode against ``kernels/ref.flash_attention`` over shape/dtype/window sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    # scalar prefetch
+    scale_ref,      # f32[1]
+    window_ref,     # i32[1]  0 = unbounded
+    causal_ref,     # i32[1]
+    # inputs
+    q_ref,          # (bq, d)
+    k_ref,          # (bk, d)
+    v_ref,          # (bk, d)
+    # output
+    o_ref,          # (bq, d)
+    # scratch
+    acc_ref,        # f32 (bq, d)
+    m_ref,          # f32 (bq, 1)
+    l_ref,          # f32 (bq, 1)
+):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+    iq = pl.program_id(1)
+    bq, d = q_ref.shape
+    bk = k_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale_ref[0]                                             # (bq, bk)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    mask &= jnp.where(causal_ref[0] > 0, kpos <= qpos, True)
+    mask &= jnp.where(window_ref[0] > 0, kpos > qpos - window_ref[0], True)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                           # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                                        # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                               # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                             # (bq, d)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, KVH, Sk, D)   H = KVH * G
+    v: jax.Array,            # (B, KVH, Sk, D)
+    *,
+    window: jax.Array | int = 0,
+    causal: bool = True,
+    softmax_scale: Optional[float] = None,
+    block_q: int = DEFAULT_BQ,
+    block_k: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns attention output (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    grid = (b * h, sq // bq, sk // bk)
+
+    def q_map(bh, i, j, *_):
+        return (bh, i, 0)
+
+    def kv_map(bh, i, j, *_):
+        # collapse the group: head bh -> kv head (bh % h) // g
+        return ((bh % h) // g + (bh // h) * kvh, j, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j, *_: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, i, j, *_: (((bh % (kvh * g)) // g) + (bh // (kvh * g)) * kvh, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, i, j, *_: (((bh % (kvh * g)) // g) + (bh // (kvh * g)) * kvh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j, *_: (bh, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+
+    def kernel(scale_r, win_r, caus_r, q_r, k_r, v_r, o_r, acc, m, l):
+        _flash_kernel(
+            scale_r, win_r, caus_r,
+            q_r.at[0], k_r.at[0], v_r.at[0], o_r.at[0], acc, m, l,
+        )
+
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * kvh, sk, d)
+    vf = v.reshape(b * kvh, sk, d)
+    out = fn(
+        jnp.full((1,), scale, jnp.float32),
+        jnp.asarray(window, jnp.int32).reshape((1,)),
+        jnp.full((1,), 1 if causal else 0, jnp.int32),
+        qf, kf, vf,
+    )
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: learner quorum count + decided-value select.
+
+The learner receives the A (=2f+1) position-aligned vote batches produced by
+the acceptor array for one P2A burst and must decide, per position, whether a
+quorum voted the same round — and if so, which value was decided.  On the
+switch targets this is the software half of CAANS; on TPU the vote batches
+are already device-resident after the vote all-gather (core/fabric.py), so
+the quorum count is a small reduction over the acceptor axis, fused in VMEM.
+
+Value select without gather: one-hot of the *first* acceptor agreeing with
+the winning round, contracted against the vote values.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.types import MSG_P2B
+
+NO_ROUND = -1
+DEFAULT_BLOCK_B = 128
+
+
+def _learner_kernel(
+    quorum_ref,      # int32[1] scalar prefetch
+    vote_type_ref,   # int32[A, BB]
+    vote_vrnd_ref,   # int32[A, BB]
+    vote_val_ref,    # int32[A, BB, V]
+    deliver_ref,     # int32[BB] out (0/1)
+    win_vrnd_ref,    # int32[BB] out
+    value_ref,       # int32[BB, V] out
+):
+    vtype = vote_type_ref[...]
+    vrnd = vote_vrnd_ref[...]
+    vval = vote_val_ref[...]
+
+    is_vote = vtype == MSG_P2B                                  # [A, BB]
+    masked = jnp.where(is_vote, vrnd, NO_ROUND)
+    win = jnp.max(masked, axis=0)                               # [BB]
+    agree = is_vote & (vrnd == win[None, :])                    # [A, BB]
+    count = jnp.sum(agree.astype(jnp.int32), axis=0)            # [BB]
+    deliver_ref[...] = (count >= quorum_ref[0]).astype(jnp.int32)
+    win_vrnd_ref[...] = win
+    # first agreeing acceptor as one-hot (cumsum trick), then contract
+    first = agree & (jnp.cumsum(agree.astype(jnp.int32), axis=0) == 1)  # [A, BB]
+    value_ref[...] = jnp.sum(
+        first.astype(jnp.int32)[:, :, None] * vval, axis=0
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def learner_quorum_window(
+    quorum: jax.Array,       # int32[]
+    vote_type: jax.Array,    # int32[A, B]
+    vote_vrnd: jax.Array,    # int32[A, B]
+    vote_val: jax.Array,     # int32[A, B, V]
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (deliver[B] int32 0/1, win_vrnd[B], value[B, V])."""
+    a, b = vote_type.shape
+    v = vote_val.shape[-1]
+    bb = min(block_b, b)
+    assert b % bb == 0
+    grid = (b // bb,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a, bb), lambda i, *_: (0, i)),
+            pl.BlockSpec((a, bb), lambda i, *_: (0, i)),
+            pl.BlockSpec((a, bb, v), lambda i, *_: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i, *_: (i,)),
+            pl.BlockSpec((bb,), lambda i, *_: (i,)),
+            pl.BlockSpec((bb, v), lambda i, *_: (i, 0)),
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b, v), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        _learner_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+    q = jnp.asarray(quorum, jnp.int32).reshape((1,))
+    return tuple(fn(q, vote_type, vote_vrnd, vote_val))

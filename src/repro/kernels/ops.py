@@ -1,0 +1,100 @@
+"""Jit'd wrappers exposing the Pallas kernels with the ``core.batched``
+signatures, so the hardware dataplane (``core.api.HardwareDataplane``) can be
+switched between the jnp engine and the kernels with one flag.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs in Python for correctness validation; on a real TPU
+backend they compile to Mosaic.  ``INTERPRET`` auto-detects.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import AcceptorState, CoordinatorState, MsgBatch
+
+from . import acceptor as _acceptor
+from . import coordinator as _coordinator
+from . import digest as _digest
+from . import learner as _learner
+
+NO_ROUND = -1
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def coordinator_sequence(
+    cstate: CoordinatorState, values: jax.Array, active: jax.Array
+) -> Tuple[CoordinatorState, MsgBatch]:
+    """Kernel-backed drop-in for ``batched.coordinator_sequence``."""
+    b = values.shape[0]
+    msgtype, inst, rnd, vrnd, new_next = _coordinator.coordinator_sequence_window(
+        cstate.next_inst, cstate.crnd, jnp.asarray(active), interpret=INTERPRET
+    )
+    out = MsgBatch(
+        msgtype=msgtype,
+        inst=inst,
+        rnd=rnd,
+        vrnd=vrnd,
+        swid=jnp.zeros((b,), jnp.int32),
+        value=values,
+    )
+    return CoordinatorState(next_inst=new_next, crnd=cstate.crnd), out
+
+
+def acceptor_phase2(
+    astate: AcceptorState, msgs: MsgBatch, aid: int | jax.Array = 0
+) -> Tuple[AcceptorState, MsgBatch]:
+    """Kernel-backed drop-in for ``batched.acceptor_phase2``.
+
+    Requires the contiguous-window invariant maintained by the sequencer:
+    ``msgs.inst == base + iota(B)`` with ``base`` a multiple of the kernel
+    batch block.  (The API layer always produces such batches.)
+    """
+    base = msgs.inst[0]
+    (st_rnd, st_vrnd, st_val, vt, vr, vv, vs, vval) = (
+        _acceptor.acceptor_phase2_window(
+            astate.rnd,
+            astate.vrnd,
+            astate.value,
+            base,
+            jnp.asarray(aid, jnp.int32),
+            msgs.msgtype,
+            msgs.rnd,
+            msgs.value,
+            interpret=INTERPRET,
+        )
+    )
+    votes = MsgBatch(
+        msgtype=vt, inst=msgs.inst, rnd=vr, vrnd=vv, swid=vs, value=vval
+    )
+    return AcceptorState(st_rnd, st_vrnd, st_val), votes
+
+
+def learner_quorum(
+    vote_msgtype: jax.Array,
+    vote_inst: jax.Array,
+    vote_vrnd: jax.Array,
+    vote_value: jax.Array,
+    quorum: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Kernel-backed drop-in for ``batched.learner_quorum``."""
+    deliver, win, value = _learner.learner_quorum_window(
+        jnp.int32(quorum),
+        vote_msgtype,
+        vote_vrnd,
+        vote_value,
+        interpret=INTERPRET,
+    )
+    b = vote_inst.shape[1]
+    inst = vote_inst[0]  # position-aligned batches: inst identical across A
+    return deliver.astype(bool), inst, win, value
+
+
+def digest(x: jax.Array) -> jax.Array:
+    return _digest.digest(x, interpret=INTERPRET)
+
+
+def tree_digest(tree) -> jax.Array:
+    return _digest.tree_digest(tree, interpret=INTERPRET)

@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors a kernel's *exact* contract (same inputs/outputs); the
+kernel test suite sweeps shapes and dtypes asserting allclose/array_equal
+against these.  Implementations delegate to ``repro.core.batched`` — the jnp
+dataplane engine — so the oracle and the system share one source of protocol
+truth.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batched
+from repro.core.types import (
+    MSG_NOP,
+    MSG_P2A,
+    MSG_P2B,
+    MSG_REJECT,
+    AcceptorState,
+    MsgBatch,
+)
+
+NO_ROUND = -1
+
+
+def acceptor_phase2_window(
+    st_rnd, st_vrnd, st_val, base, aid, msgtype, msg_rnd, msg_val
+) -> Tuple[jax.Array, ...]:
+    """Oracle for kernels.acceptor.acceptor_phase2_window."""
+    n = st_rnd.shape[0]
+    b = msgtype.shape[0]
+    inst = (jnp.asarray(base, jnp.int32) + jnp.arange(b, dtype=jnp.int32)) % n
+    msgs = MsgBatch(
+        msgtype=msgtype,
+        inst=inst,
+        rnd=msg_rnd,
+        vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
+        swid=jnp.zeros((b,), jnp.int32),
+        value=msg_val,
+    )
+    astate = AcceptorState(st_rnd, st_vrnd, st_val)
+    astate, votes = batched.acceptor_phase2(astate, msgs, aid=aid)
+    return (
+        astate.rnd,
+        astate.vrnd,
+        astate.value,
+        votes.msgtype,
+        votes.rnd,
+        votes.vrnd,
+        votes.swid,
+        votes.value,
+    )
+
+
+def coordinator_sequence_window(
+    next_inst, crnd, active
+) -> Tuple[jax.Array, ...]:
+    """Oracle for kernels.coordinator.coordinator_sequence_window."""
+    b = active.shape[0]
+    inst = jnp.asarray(next_inst, jnp.int32) + jnp.arange(b, dtype=jnp.int32)
+    msgtype = jnp.where(active.astype(bool), MSG_P2A, MSG_NOP).astype(jnp.int32)
+    rnd = jnp.full((b,), jnp.asarray(crnd, jnp.int32), jnp.int32)
+    vrnd = jnp.full((b,), NO_ROUND, jnp.int32)
+    return msgtype, inst, rnd, vrnd, (jnp.asarray(next_inst, jnp.int32) + b)
+
+
+def learner_quorum_window(
+    quorum, vote_type, vote_vrnd, vote_val
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for kernels.learner.learner_quorum_window."""
+    is_vote = vote_type == MSG_P2B
+    masked = jnp.where(is_vote, vote_vrnd, NO_ROUND)
+    win = jnp.max(masked, axis=0)
+    agree = is_vote & (vote_vrnd == win[None, :])
+    count = jnp.sum(agree.astype(jnp.int32), axis=0)
+    deliver = (count >= jnp.asarray(quorum, jnp.int32)).astype(jnp.int32)
+    first = agree & (jnp.cumsum(agree.astype(jnp.int32), axis=0) == 1)
+    value = jnp.sum(first.astype(jnp.int32)[:, :, None] * vote_val, axis=0)
+    return deliver, win, value
+
+
+def digest(x: jax.Array) -> jax.Array:
+    """Oracle for kernels.digest.digest (including padding semantics)."""
+    flat = x.reshape(-1)
+    bits = flat.view(jnp.int32) if flat.dtype != jnp.int32 else flat
+    idx = jnp.arange(bits.shape[0], dtype=jnp.int32)
+    return jnp.sum(bits * (idx * 2 + 1))
+
+
+def flash_attention(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, KVH, Sk, D)
+    v: jax.Array,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    softmax_scale=None,
+) -> jax.Array:
+    """Oracle for kernels.flash_attention (direct softmax, no tiling)."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    qg = q.reshape(b, kvh, g, sq, d)
+    s = jnp.einsum(
+        "bkgqd,bksd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bksd->bkgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, h, sq, d).astype(q.dtype)

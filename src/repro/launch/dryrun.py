@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax-importing import: jax locks the
+device count at first backend init, and the production meshes need 512
+placeholder host devices.
+
+Per cell this produces a JSON artifact with:
+  * memory analysis (bytes per device: arguments / outputs / temps / peak)
+  * cost analysis (HLO FLOPs, bytes accessed) of the partitioned module
+  * collective schedule (bytes + op counts by collective type)
+  * the roofline terms derived from the above (analysis/roofline.py)
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/artifacts/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import analytic as analytic_mod
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import roofline as roofline_mod
+from repro.configs import SHAPES, cell_is_applicable, get_config, list_archs
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.train import train_loop
+
+
+def _mem_analysis(compiled) -> Dict[str, float]:
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {}
+        return {
+            "argument_bytes": float(getattr(m, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(m, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(m, "temp_size_in_bytes", 0)),
+            "peak_bytes": float(
+                getattr(m, "temp_size_in_bytes", 0)
+                + getattr(m, "argument_size_in_bytes", 0)
+                + getattr(m, "output_size_in_bytes", 0)
+            ),
+        }
+    except Exception:
+        return {}
+
+
+def _arg_bytes_per_device(shardings_tree, shapes_tree, mesh) -> float:
+    """Fallback per-device argument bytes computed from shapes x shardings."""
+    import numpy as np
+
+    total = 0.0
+    shards = jax.tree_util.tree_leaves(
+        shardings_tree, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+    )
+    shapes = jax.tree_util.tree_leaves(shapes_tree)
+    for sds, s in zip(shapes, shards):
+        if not hasattr(sds, "shape"):
+            continue
+        n = float(np.prod(sds.shape)) if sds.shape else 1.0
+        n /= s.num_devices / _replication(s, sds.shape, mesh)
+        total += n * jnp.dtype(sds.dtype).itemsize
+    return total
+
+
+def _replication(sharding, shape, mesh) -> float:
+    try:
+        spec = sharding.spec
+        sharded = 1
+        for i, part in enumerate(spec):
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else part
+            import numpy as np
+
+            sharded *= int(np.prod([mesh.shape[a] for a in axes]))
+        return sharding.num_devices / sharded
+    except Exception:
+        return 1.0
+
+
+# §Perf variants: named config transforms stacked on the baseline.
+import dataclasses as _dc
+
+VARIANTS = {
+    "base": lambda cfg, mp: cfg,
+    "dots_remat": lambda cfg, mp: _dc.replace(cfg, remat_policy="dots"),
+    "ring_cache": lambda cfg, mp: _dc.replace(cfg, ring_local_cache=True),
+    "moe_local": lambda cfg, mp: _dc.replace(
+        cfg, dispatch_groups=32 if mp else 16
+    ),
+    "moe_local_dots": lambda cfg, mp: _dc.replace(
+        cfg, dispatch_groups=32 if mp else 16, remat_policy="dots"
+    ),
+}
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    rules_name: str = "base",
+    variant: str = "base",
+    compile_it: bool = True,
+    chunk_q: Optional[int] = None,
+) -> Dict[str, Any]:
+    cfg = VARIANTS[variant](get_config(arch), multi_pod)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "rules": rules_name,
+        "variant": variant,
+        "chips": 512 if multi_pod else 256,
+    }
+    if not cell_is_applicable(cfg, shape):
+        rec["skipped"] = (
+            "long_500k requires sub-quadratic sequence mixing; "
+            f"family '{cfg.family}' is full-attention (see DESIGN.md §5)"
+        )
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = {
+        "base": sh.BASE_RULES,
+        "opt": sh.OPT_RULES,
+        "serve": sh.SERVE_RULES,
+        "notp": sh.NOTP_RULES,
+    }[rules_name]
+    t0 = time.time()
+    try:
+        with sh.use_rules(mesh, rules):
+            specs = registry.input_specs(cfg, shape)
+            in_batch_sh = sh.batch_shardings(specs, cfg, rules, mesh)
+
+            if shape.kind == "train":
+                state_shapes = train_loop.state_shapes(cfg)
+                state_axes = train_loop.state_axes(cfg)
+                state_sh = sh.tree_shardings(state_shapes, state_axes, rules, mesh)
+                step = train_loop.make_train_step(cfg)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(state_sh, in_batch_sh),
+                    donate_argnums=(0,),
+                )
+                lowered = jitted.lower(state_shapes, specs)
+                rec["arg_bytes_per_dev_est"] = _arg_bytes_per_device(
+                    (state_sh, in_batch_sh), (state_shapes, specs), mesh
+                )
+            else:
+                pshapes = registry.param_shapes(cfg)
+                paxes = registry.param_axes(cfg)
+                psh = sh.tree_shardings(pshapes, paxes, rules, mesh)
+                if shape.kind == "prefill":
+                    step = make_prefill_step(cfg)
+                    jitted = jax.jit(step, in_shardings=(psh, in_batch_sh))
+                    lowered = jitted.lower(
+                        pshapes, {k: v for k, v in specs.items()}
+                    )
+                else:  # decode
+                    step = make_serve_step(cfg)
+                    jitted = jax.jit(
+                        step,
+                        in_shardings=(
+                            psh,
+                            in_batch_sh["tokens"],
+                            in_batch_sh["cache"],
+                            in_batch_sh["pos"],
+                        ),
+                        donate_argnums=(2,),
+                    )
+                    lowered = jitted.lower(
+                        pshapes, specs["tokens"], specs["cache"], specs["pos"]
+                    )
+                rec["arg_bytes_per_dev_est"] = _arg_bytes_per_device(
+                    psh, pshapes, mesh
+                )
+            rec["lower_s"] = time.time() - t0
+
+            if compile_it:
+                t1 = time.time()
+                compiled = lowered.compile()
+                rec["compile_s"] = time.time() - t1
+                rec.update(_mem_analysis(compiled))
+                try:
+                    cost = compiled.cost_analysis()
+                    if isinstance(cost, list):
+                        cost = cost[0]
+                    rec["flops"] = float(cost.get("flops", 0.0))
+                    rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+                except Exception as e:  # pragma: no cover
+                    rec["cost_error"] = str(e)
+                text = compiled.as_text()
+                # trip hint: the layer scan (hybrid scans superblocks)
+                if cfg.family == "hybrid":
+                    trip = cfg.n_layers // len(cfg.block_pattern)
+                else:
+                    trip = cfg.n_layers
+                total, by_op, counts = hlo_mod.collective_bytes(
+                    text, loop_trip_hint=trip
+                )
+                rec["collective_bytes"] = float(total)
+                rec["collective_by_op"] = by_op
+                rec["collective_counts"] = counts
+                raw_total, _, _ = hlo_mod.collective_bytes(text, loop_trip_hint=1)
+                rec["collective_bytes_raw"] = float(raw_total)
+            # analytic compute/memory terms (HLO cost_analysis undercounts
+            # while-loop bodies — kept above as the cross-check columns)
+            minfo = analytic_mod.MeshInfo.for_mesh(
+                multi_pod, shape.global_batch, rules_name
+            )
+            at = analytic_mod.analytic_terms(cfg, shape, minfo)
+            rec["flops_hlo_raw"] = rec.pop("flops", 0.0)
+            rec["bytes_accessed_hlo_raw"] = rec.pop("bytes_accessed", 0.0)
+            rec["flops"] = at["flops"]
+            rec["bytes_accessed"] = at["hbm_bytes"]
+            rec["model_flops"] = at["model_flops"]
+            rl = roofline_mod.from_record(rec)
+            rec["roofline"] = rl.row()
+            rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument(
+        "--rules", choices=["base", "opt", "serve", "notp"], default="base"
+    )
+    ap.add_argument("--variant", choices=sorted(VARIANTS), default="base")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape in (None, "all")) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}__{args.rules}"
+                if args.variant != "base":
+                    tag += f"__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        old = json.load(f)
+                    if old.get("ok") or old.get("skipped"):
+                        print(f"[cached] {tag}")
+                        n_ok += 1 if old.get("ok") else 0
+                        n_skip += 1 if old.get("skipped") else 0
+                        continue
+                rec = lower_cell(
+                    arch, shape, multi_pod=mp, rules_name=args.rules,
+                    variant=args.variant,
+                )
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec.get("skipped"):
+                    n_skip += 1
+                    print(f"[skip] {tag}: {rec['skipped'][:60]}")
+                elif rec.get("ok"):
+                    n_ok += 1
+                    rl = rec.get("roofline", {})
+                    print(
+                        f"[ok]   {tag}: compile={rec.get('compile_s', 0):.1f}s "
+                        f"flops/dev={rec.get('flops', 0):.3g} "
+                        f"coll={rec.get('collective_bytes', 0):.3g}B "
+                        f"dominant={rl.get('dominant')}"
+                    )
+                else:
+                    n_fail += 1
+                    print(f"[FAIL] {tag}: {rec.get('error')}")
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / SP / EP + pod).
+
+Every parameter / activation / cache dim carries a *logical* axis name; this
+module maps names onto mesh axes with t5x-style rules, subject to:
+
+  * divisibility — a dim is only sharded if the mesh-axis product divides it
+    (otherwise the rule falls through to the next candidate, ending at
+    replication).  This is what lets one rule set serve kv_heads=16 (sharded
+    16-way) and kv_heads=4 (replicated) without per-arch special cases.
+  * no axis reuse — a mesh axis is consumed by the first dim that takes it.
+
+Rules are ordered candidate lists, so e.g. ``cache_seq`` can pick up the
+``model`` axis exactly when ``kv_heads`` could not (sequence-sharded KV cache
+for low-kv GQA architectures).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as L
+
+AxisCandidate = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Ordered candidates per logical axis name."""
+
+    rules: Dict[str, Tuple[AxisCandidate, ...]]
+
+    def candidates(self, name: Optional[str]) -> Tuple[AxisCandidate, ...]:
+        if name is None:
+            return (None,)
+        return self.rules.get(name, (None,))
+
+
+# Paper-faithful baseline: DP+FSDP+TP+EP, no sequence parallelism.
+BASE_RULES = ShardingRules(
+    {
+        # data / batch
+        "batch": (("pod", "data"), "data", None),
+        # FSDP: parameter embed dim over the data axis
+        "embed": ("data", None),
+        "embed_out": (None,),
+        # tensor parallel
+        "heads": ("model", None),
+        "kv_heads": ("model", None),
+        "heads_flat": ("model", None),
+        "mlp": ("model", None),
+        "expert_mlp": (None,),
+        "vocab": ("model", None),
+        "rnn": ("model", None),
+        "rnn_out": (None,),
+        # expert parallel
+        "expert": ("model", None),
+        # activations
+        "act_seq": (None,),
+        "mlp_act": ("model", None),
+        "embed_act": (None,),
+        # caches: kv_heads first, else shard the cache sequence dim
+        "cache_seq": (None,),
+        # never sharded
+        "layers": (None,),
+        "head_dim": (None,),
+    }
+)
+
+# Optimized rules (§Perf): + sequence parallelism on the residual stream and
+# sequence-sharded KV caches when kv_heads cannot take the model axis.
+OPT_RULES = ShardingRules(
+    {
+        **BASE_RULES.rules,
+        "act_seq": ("model", None),
+        "cache_seq": ("model", None),
+    }
+)
+
+# Small-model training rules (§Perf): TP=16 charges a per-layer activation
+# all-reduce that dwarfs a <3B model's compute; run pure DP+FSDP instead
+# (the model axis still shards the vocab/logits, which is where a 256k
+# embedding actually needs it).
+NOTP_RULES = ShardingRules(
+    {
+        **BASE_RULES.rules,
+        "heads": (None,),
+        "kv_heads": (None,),
+        "heads_flat": (None,),
+        "mlp": (None,),
+        "mlp_act": (None,),
+        "rnn": (None,),
+        "expert": ("model", None),
+    }
+)
+
+# Serving rules (§Perf): weight-stationary inference.  FSDP is a training
+# optimization — during decode a parameter gathered per step costs ~16x its
+# one-time residency.  Params shard over `model` only (replicated across
+# `data`); TP-sized models fit per-device without gathers.
+SERVE_RULES = ShardingRules(
+    {
+        **BASE_RULES.rules,
+        "embed": (None,),          # no FSDP: weights resident
+        "cache_seq": (None,),
+    }
+)
+
+
+def resolve_spec(
+    shape: Sequence[int], axes: Sequence[Optional[str]], rules: ShardingRules, mesh: Mesh
+) -> P:
+    """Resolve one array's logical axes to a PartitionSpec."""
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    parts: List[AxisCandidate] = []
+    for dim, name in zip(shape, axes):
+        chosen: AxisCandidate = None
+        for cand in rules.candidates(name):
+            if cand is None:
+                chosen = None
+                break
+            cand_t = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a in used for a in cand_t):
+                continue
+            if any(a not in mesh.shape for a in cand_t):
+                continue
+            size = int(np.prod([mesh.shape[a] for a in cand_t]))
+            if dim % size != 0:
+                continue
+            chosen = cand if isinstance(cand, str) else tuple(cand)
+            used.update(cand_t)
+            break
+        parts.append(chosen)
+    # trim trailing Nones for a tidy spec
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(shapes_tree, axes_tree, rules: ShardingRules, mesh: Mesh):
+    """NamedSharding pytree for a (shapes, axes) pytree pair."""
+
+    def leaf(shape_like, axes):
+        shape = getattr(shape_like, "shape", None)
+        if shape is None or axes is None or axes == ():
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, resolve_spec(shape, axes, rules, mesh))
+
+    return jax.tree_util.tree_map(
+        leaf, shapes_tree, axes_tree,
+        is_leaf=lambda x: hasattr(x, "shape") or x is None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation sharder installation
+# ---------------------------------------------------------------------------
+def install(mesh: Mesh, rules: ShardingRules = BASE_RULES) -> None:
+    """Install the activation-constraint hook used by model code."""
+
+    def sharder(x: jax.Array, axes: Tuple) -> jax.Array:
+        spec = resolve_spec(x.shape, axes, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    L.set_activation_sharder(sharder)
+
+
+def uninstall() -> None:
+    L.set_activation_sharder(None)
+
+
+class use_rules:
+    """Context manager: install/uninstall activation sharding."""
+
+    def __init__(self, mesh: Mesh, rules: ShardingRules = BASE_RULES):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        install(self.mesh, self.rules)
+        return self
+
+    def __exit__(self, *exc):
+        uninstall()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Batch (input) shardings
+# ---------------------------------------------------------------------------
+BATCH_AXES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "patches": ("batch", None, None),
+    "frames": ("batch", None, None),
+    "pos": (),
+}
+
+
+def batch_shardings(input_specs: Dict[str, Any], cfg, rules, mesh):
+    """Shardings for a train/prefill/decode input-spec dict."""
+    from repro.models import registry
+
+    out = {}
+    for k, v in input_specs.items():
+        if k == "cache":
+            cache_axes = registry.family_module(cfg).CACHE_AXES
+            out[k] = {
+                name: NamedSharding(
+                    mesh, resolve_spec(sds.shape, cache_axes[name], rules, mesh)
+                )
+                for name, sds in v.items()
+            }
+        else:
+            out[k] = NamedSharding(
+                mesh, resolve_spec(v.shape, BATCH_AXES[k], rules, mesh)
+            )
+    return out

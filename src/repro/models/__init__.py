@@ -1,0 +1,12 @@
+"""Model zoo: dense GQA / MoE / VLM transformer, RWKV6, Griffin, Whisper."""
+from . import registry  # noqa: F401
+from .registry import (  # noqa: F401
+    count_params,
+    family_module,
+    init_params,
+    input_specs,
+    make_inputs,
+    model_specs,
+    param_axes,
+    param_shapes,
+)

@@ -1,0 +1,364 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern (rec, rec, attn).  The recurrent mixer:
+
+    gate = gelu(x W_gate)
+    u    = causal_conv1d(x W_x, width 4)
+    r_t  = sigmoid(u W_a + b_a);  i_t = sigmoid(u W_i + b_i)
+    a_t  = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t  = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+    out  = (gate * h) W_o
+
+Training evaluates the linear recurrence with ``jax.lax.associative_scan``
+(parallel in T — the reason this family runs the ``long_500k`` cell is the
+O(1)-state decode step plus the bounded attention window).
+
+Layers are grouped into *superblocks* of the pattern length and scanned;
+remainder layers (26 mod 3 = 2) run as a trailing mini-scan of rec blocks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import PSpec
+
+RG_C = 8.0
+
+
+def _stack(spec: PSpec, n: int) -> PSpec:
+    return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
+
+
+def _rec_block_specs(cfg) -> Dict[str, Any]:
+    d, dr = cfg.d_model, cfg.d_rnn or cfg.d_model
+    return {
+        "ln1": PSpec((d,), ("embed",), init="zeros"),
+        "ln2": PSpec((d,), ("embed",), init="zeros"),
+        "w_gate": PSpec((d, dr), ("embed", "rnn")),
+        "w_x": PSpec((d, dr), ("embed", "rnn")),
+        "conv": PSpec((cfg.conv_width, dr), (None, "rnn"), init="zeros"),
+        "w_a": PSpec((dr, dr), ("rnn", "rnn_out")),
+        "w_i": PSpec((dr, dr), ("rnn", "rnn_out")),
+        "lam": PSpec((dr,), ("rnn",), init="ones"),
+        "w_o": PSpec((dr, d), ("rnn", "embed")),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def _attn_block_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": PSpec((d,), ("embed",), init="zeros"),
+        "ln2": PSpec((d,), ("embed",), init="zeros"),
+        "attn": L.attention_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def _layout(cfg) -> Tuple[int, int]:
+    """(n_super, n_rem): superblocks of len(pattern) + remainder rec layers."""
+    p = len(cfg.block_pattern)
+    return cfg.n_layers // p, cfg.n_layers % p
+
+
+def specs(cfg) -> Dict[str, Any]:
+    n_super, n_rem = _layout(cfg)
+    n_rec_per = cfg.block_pattern.count("rec")
+    rec = jax.tree_util.tree_map(
+        lambda s: _stack(_stack(s, n_rec_per), n_super),
+        _rec_block_specs(cfg),
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+    attn = jax.tree_util.tree_map(
+        lambda s: _stack(s, n_super),
+        _attn_block_specs(cfg),
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+    sp: Dict[str, Any] = {
+        "embed": PSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "super": {"rec": rec, "attn": attn},
+        "ln_f": PSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    if n_rem:
+        sp["rem_rec"] = jax.tree_util.tree_map(
+            lambda s: _stack(s, n_rem),
+            _rec_block_specs(cfg),
+            is_leaf=lambda x: isinstance(x, PSpec),
+        )
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU mixer
+# ---------------------------------------------------------------------------
+def _causal_conv(u: jax.Array, kernel: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. u: (B,T,C); kernel: (W,C); state: (B,W-1,C)."""
+    w = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], w - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)              # (B, T+W-1, C)
+    out = sum(
+        ext[:, i : i + u.shape[1]] * kernel[i][None, None, :] for i in range(w)
+    )
+    new_state = ext[:, -(w - 1):] if w > 1 else None
+    return out, new_state
+
+
+def _rg_lru(u: jax.Array, p, h0: Optional[jax.Array] = None):
+    """u: (B,T,C) conv output.  Returns (h: (B,T,C), h_T)."""
+    r = jax.nn.sigmoid(jnp.einsum("btc,ce->bte", u, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("btc,ce->bte", u, p["w_i"]).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    if h0 is not None:
+        # fold the initial state in as a virtual step at t=0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(u.dtype), h[:, -1]
+
+
+def _rec_mixer(p, x, cfg, conv_state=None, h0=None):
+    """x: (B, T, D) normalized input.  Returns (out, (conv_state', h_T))."""
+    gate = jax.nn.gelu(jnp.einsum("btd,dr->btr", x, p["w_gate"]))
+    u = jnp.einsum("btd,dr->btr", x, p["w_x"])
+    u = L.shard(u, ("batch", "act_seq", "rnn"))
+    u, conv_state = _causal_conv(u, p["conv"] + _conv_id(p["conv"]), conv_state)
+    h, h_last = _rg_lru(u, p, h0)
+    out = jnp.einsum("btr,rd->btd", gate * h, p["w_o"])
+    return out, (conv_state, h_last)
+
+
+def _conv_id(kernel: jax.Array) -> jax.Array:
+    """Identity-init helper: zero-initialized kernel + delta at the last tap."""
+    ident = jnp.zeros_like(kernel)
+    return ident.at[-1].set(1.0)
+
+
+def _rec_block(blk, x, cfg, state=None):
+    conv_state = state["conv"] if state is not None else None
+    h0 = state["h"] if state is not None else None
+    mix, (conv_state, h_last) = _rec_mixer(
+        blk, L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg, conv_state, h0
+    )
+    x = x + mix
+    x = x + L.mlp_fwd(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps))
+    return x, {"conv": conv_state, "h": h_last}
+
+
+def _attn_block(blk, x, cfg, positions=None):
+    a, (kk, vv) = L.attention_fwd(
+        blk["attn"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg,
+        window=cfg.local_window, positions=positions,
+    )
+    x = x + a
+    x = x + L.mlp_fwd(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps))
+    return x, (kk, vv)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def forward(cfg, params, batch, *, collect_cache: bool = False):
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    n_super, n_rem = _layout(cfg)
+    n_rec_per = cfg.block_pattern.count("rec")
+    h = params["embed"][tokens].astype(params["embed"].dtype)
+    h = L.shard(h, ("batch", "act_seq", None))
+
+    def super_body(carry, blk):
+        x = carry
+        rec_states = []
+        for r in range(n_rec_per):
+            rp = jax.tree_util.tree_map(lambda a: a[r], blk["rec"])
+            x, st = _rec_block(rp, x, cfg)
+            rec_states.append(st)
+        x, (kk, vv) = _attn_block(blk["attn"], x, cfg)
+        x = L.shard(x, ("batch", "act_seq", None))
+        ys = None
+        if collect_cache:
+            ys = (
+                jnp.stack([s["conv"] for s in rec_states]),
+                jnp.stack([s["h"] for s in rec_states]),
+                kk,
+                vv,
+            )
+        return x, ys
+
+    body_fn = L.checkpoint_fn(super_body, cfg)
+    h, sc = jax.lax.scan(body_fn, h, params["super"])
+
+    rem_states = []
+    if n_rem:
+        def rem_body(carry, blk):
+            x, st = _rec_block(blk, carry, cfg)
+            ys = (st["conv"], st["h"]) if collect_cache else None
+            return x, ys
+
+        rem_fn = jax.checkpoint(rem_body) if cfg.remat else rem_body
+        h, rem_sc = jax.lax.scan(rem_fn, h, params["rem_rec"])
+
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["embed"].T.astype(h.dtype))
+    logits = L.shard(logits, ("batch", "act_seq", "vocab"))
+
+    cache = None
+    if collect_cache:
+        conv, hs, kk, vv = sc
+        s = kk.shape[2]
+        kpos = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None, :], (n_super, b, s)
+        )
+        cache = {
+            "rec_conv": conv, "rec_h": hs,
+            "k": kk, "v": vv, "kpos": kpos,
+        }
+        if n_rem:
+            cache["rem_conv"], cache["rem_h"] = rem_sc
+    return logits, cache
+
+
+def prefill(cfg, params, batch):
+    return forward(cfg, params, batch, collect_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# Cache / decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype)
+        if s.dtype != jnp.int32
+        else jnp.full(s.shape, -1, jnp.int32),
+        cache_specs(cfg, batch, max_len, dtype),
+    )
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_super, n_rem = _layout(cfg)
+    n_rec_per = cfg.block_pattern.count("rec")
+    dr = cfg.d_rnn or cfg.d_model
+    w = cfg.conv_width
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    c = min(max_len, cfg.local_window) if cfg.local_window else max_len
+    sp = {
+        "rec_conv": jax.ShapeDtypeStruct((n_super, n_rec_per, batch, w - 1, dr), dtype),
+        "rec_h": jax.ShapeDtypeStruct((n_super, n_rec_per, batch, dr), jnp.float32),
+        "k": jax.ShapeDtypeStruct((n_super, batch, c, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((n_super, batch, c, kv, hd), dtype),
+        "kpos": jax.ShapeDtypeStruct((n_super, batch, c), jnp.int32),
+    }
+    if n_rem:
+        sp["rem_conv"] = jax.ShapeDtypeStruct((n_rem, batch, w - 1, dr), dtype)
+        sp["rem_h"] = jax.ShapeDtypeStruct((n_rem, batch, dr), jnp.float32)
+    return sp
+
+
+CACHE_AXES = {
+    "rec_conv": ("layers", None, "batch", None, "rnn"),
+    "rec_h": ("layers", None, "batch", "rnn"),
+    "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "kpos": ("layers", "batch", "cache_seq"),
+    "rem_conv": ("layers", "batch", None, "rnn"),
+    "rem_h": ("layers", "batch", "rnn"),
+}
+
+
+def decode_step(cfg, params, tokens, cache, pos):
+    b = tokens.shape[0]
+    n_super, n_rem = _layout(cfg)
+    n_rec_per = cfg.block_pattern.count("rec")
+    kvh, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    h = params["embed"][tokens].astype(params["embed"].dtype)   # (B, 1, D)
+    c = cache["k"].shape[2]
+    slot = pos % c
+
+    def rec_step(blk, x, conv_state, h0):
+        xn = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        mix, (conv_state, h_last) = _rec_mixer(
+            blk, xn, cfg, conv_state, h0
+        )
+        x = x + mix
+        x = x + L.mlp_fwd(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps))
+        return x, conv_state, h_last
+
+    def super_body(carry, xs):
+        x = carry
+        blk, conv, hs, kc, vc, kp = xs
+        new_conv, new_h = [], []
+        for r in range(n_rec_per):
+            rp = jax.tree_util.tree_map(lambda a: a[r], blk["rec"])
+            x, cs, hl = rec_step(rp, x, conv[r], hs[r])
+            new_conv.append(cs)
+            new_h.append(hl)
+        # local attention with ring cache
+        ab = blk["attn"]
+        xn = L.rms_norm(x, ab["ln1"], cfg.norm_eps)
+        p = ab["attn"]
+        q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"])
+        kk = jnp.einsum("bsd,dhk->bshk", xn, p["wk"])
+        vv = jnp.einsum("bsd,dhk->bshk", xn, p["wv"])
+        posv = jnp.full((1,), pos, jnp.int32)
+        q = L.rope(q, posv, cfg.rope_theta)
+        kk = L.rope(kk, posv, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kk.astype(kc.dtype), slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vv.astype(vc.dtype), slot, 1)
+        kp = jax.lax.dynamic_update_slice_in_dim(
+            kp, jnp.full((b, 1), pos, jnp.int32), slot, 1
+        )
+        out = L.decode_attention(
+            q.reshape(b, 1, kvh, g, hd), kc, vc, kp, pos, window=cfg.local_window
+        )
+        out = jnp.einsum("bshk,hkd->bsd", out.reshape(b, 1, cfg.n_heads, hd), p["wo"])
+        x = x + out
+        x = x + L.mlp_fwd(ab["mlp"], L.rms_norm(x, ab["ln2"], cfg.norm_eps))
+        return x, (jnp.stack(new_conv), jnp.stack(new_h), kc, vc, kp)
+
+    h, (conv, hs, kc, vc, kp) = jax.lax.scan(
+        super_body,
+        h,
+        (
+            params["super"],
+            cache["rec_conv"],
+            cache["rec_h"],
+            cache["k"],
+            cache["v"],
+            cache["kpos"],
+        ),
+    )
+    new_cache = dict(cache)
+    new_cache.update({"rec_conv": conv, "rec_h": hs, "k": kc, "v": vc, "kpos": kp})
+
+    if n_rem:
+        def rem_body(carry, xs):
+            blk, cs, h0 = xs
+            x, cs2, hl = rec_step(blk, carry, cs, h0)
+            return x, (cs2, hl)
+
+        h, (rconv, rh) = jax.lax.scan(
+            rem_body, h, (params["rem_rec"], cache["rem_conv"], cache["rem_h"])
+        )
+        new_cache["rem_conv"], new_cache["rem_h"] = rconv, rh
+
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["embed"].T.astype(h.dtype))
+    return logits, new_cache

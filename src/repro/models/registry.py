@@ -1,0 +1,126 @@
+"""Model registry: one uniform interface per architecture family.
+
+Every family module exports:
+  specs(cfg)                       -> PSpec tree
+  forward(cfg, params, batch)      -> (logits, cache|None)
+  prefill(cfg, params, batch)      -> (logits, cache)
+  decode_step(cfg, params, tok, cache, pos) -> (logits, cache)
+  init_cache / cache_specs / CACHE_AXES
+
+``input_specs`` builds the ShapeDtypeStruct stand-ins for every model input
+of an (arch x shape) cell — the dry-run lowers against these without any
+device allocation.  Modality frontends ([audio]/[vlm]) are stubs: the specs
+include precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from . import griffin, rwkv6, transformer, whisper
+from . import layers as L
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": rwkv6,
+    "hybrid": griffin,
+    "encdec": whisper,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def model_specs(cfg: ModelConfig):
+    return family_module(cfg).specs(cfg)
+
+
+def param_axes(cfg: ModelConfig):
+    return L.axes_tree(model_specs(cfg))
+
+
+def param_shapes(cfg: ModelConfig, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return L.spec_shapes(model_specs(cfg), dt)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return L.materialize(model_specs(cfg), key, dt)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import numpy as np
+
+    shapes = jax.tree_util.tree_leaves(param_shapes(cfg))
+    return int(sum(np.prod(s.shape) for s in shapes))
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch x shape) cell
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every input of the cell's step function.
+
+    train:   {tokens, labels [, patches|frames]}
+    prefill: {tokens [, patches|frames]}
+    decode:  {tokens (B,1), cache, pos}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    def frontend() -> Dict[str, Any]:
+        if cfg.family == "vlm":
+            return {
+                "patches": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dt)
+            }
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, cfg.src_len, cfg.d_model), dt)
+            }
+        return {}
+
+    if shape.kind == "train":
+        return {
+            "tokens": tok,
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            **frontend(),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": tok, **frontend()}
+    if shape.kind == "decode":
+        mod = family_module(cfg)
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "cache": mod.cache_specs(cfg, b, s, dt),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array) -> Dict[str, Any]:
+    """Concrete (small-scale) inputs matching ``input_specs`` — for smoke tests."""
+    specs = input_specs(cfg, shape)
+    out: Dict[str, Any] = {}
+    for name, sp in specs.items():
+        if name == "cache":
+            out[name] = family_module(cfg).init_cache(
+                cfg, shape.global_batch, shape.seq_len, jnp.dtype(cfg.dtype)
+            )
+        elif name == "pos":
+            out[name] = jnp.int32(0)
+        elif sp.dtype == jnp.int32:
+            key, k = jax.random.split(key)
+            out[name] = jax.random.randint(k, sp.shape, 0, cfg.vocab, jnp.int32)
+        else:
+            key, k = jax.random.split(key)
+            out[name] = jax.random.normal(k, sp.shape, jnp.float32).astype(sp.dtype)
+    return out

@@ -1,0 +1,238 @@
+"""RWKV6 "Finch" (attention-free SSM with data-dependent decay).
+
+Time-mix: token-shift interpolated projections r/k/v/g plus the RWKV6
+signature feature — a *data-dependent* per-channel decay ``w_t`` produced by
+a low-rank (LoRA) head; the WKV recurrence per head is
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Training runs the recurrence with ``lax.scan`` over time (O(T) sequential,
+O(1) state); decode is a single recurrence step — which is what makes the
+``long_500k`` cell runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import PSpec
+
+LORA_R = 64
+
+
+def _stack(spec: PSpec, n: int) -> PSpec:
+    return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
+
+
+def block_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = cfg.rwkv_head_dim
+    dh = h * hd
+    return {
+        "ln1": PSpec((d,), ("embed",), init="zeros"),
+        "ln2": PSpec((d,), ("embed",), init="zeros"),
+        "tm": {
+            # token-shift interpolation factors
+            "mu_r": PSpec((d,), ("embed",), init="zeros"),
+            "mu_k": PSpec((d,), ("embed",), init="zeros"),
+            "mu_v": PSpec((d,), ("embed",), init="zeros"),
+            "mu_g": PSpec((d,), ("embed",), init="zeros"),
+            "mu_w": PSpec((d,), ("embed",), init="zeros"),
+            "wr": PSpec((d, dh), ("embed", "heads_flat")),
+            "wk": PSpec((d, dh), ("embed", "heads_flat")),
+            "wv": PSpec((d, dh), ("embed", "heads_flat")),
+            "wg": PSpec((d, dh), ("embed", "heads_flat")),
+            # data-dependent decay (LoRA)
+            "w0": PSpec((dh,), ("heads_flat",), init="zeros"),
+            "wa": PSpec((d, LORA_R), ("embed", None)),
+            "wb": PSpec((LORA_R, dh), (None, "heads_flat")),
+            "u": PSpec((dh,), ("heads_flat",), init="zeros"),
+            "ln_x": PSpec((dh,), ("heads_flat",), init="zeros"),
+            "wo": PSpec((dh, d), ("heads_flat", "embed")),
+        },
+        "cm": {
+            "mu_k": PSpec((d,), ("embed",), init="zeros"),
+            "mu_r": PSpec((d,), ("embed",), init="zeros"),
+            "wk": PSpec((d, cfg.d_ff), ("embed", "mlp")),
+            "wv": PSpec((cfg.d_ff, d), ("mlp", "embed")),
+            "wr": PSpec((d, d), ("embed", "embed_out")),
+        },
+    }
+
+
+def specs(cfg) -> Dict[str, Any]:
+    blocks = jax.tree_util.tree_map(
+        lambda s: _stack(s, cfg.n_layers),
+        block_specs(cfg),
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+    return {
+        "embed": PSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "blocks": blocks,
+        "ln_f": PSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "head": PSpec((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence
+# ---------------------------------------------------------------------------
+def _wkv_scan(r, k, v, w, u, s0):
+    """r/k/v/w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd).
+
+    Returns (y: (B, T, H, hd), s_T)."""
+
+    def step(s, x):
+        rt, kt, vt, wt = x                            # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]       # (B, H, hd, hd)
+        y = jnp.einsum("bhj,bhji->bhi", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = jax.tree_util.tree_map(lambda a: a.transpose(1, 0, 2, 3), (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s
+
+
+def _time_mix(p, x, xprev, cfg, s0):
+    """x: (B, T, D); xprev: token-shifted x; s0: (B,H,hd,hd)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.rwkv_head_dim
+
+    def mix(mu):
+        return x + (xprev - x) * mu
+
+    r = jnp.einsum("btd,de->bte", mix(p["mu_r"]), p["wr"])
+    k = jnp.einsum("btd,de->bte", mix(p["mu_k"]), p["wk"])
+    v = jnp.einsum("btd,de->bte", mix(p["mu_v"]), p["wv"])
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", mix(p["mu_g"]), p["wg"]))
+    # data-dependent decay in (0, 1): exp(-exp(.))
+    wlog = p["w0"] + jnp.einsum(
+        "btd,dr,re->bte", jnp.tanh(mix(p["mu_w"])), p["wa"], p["wb"]
+    )
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32)))
+
+    shp = (b, t, h, hd)
+    y, s = _wkv_scan(
+        r.reshape(shp).astype(jnp.float32),
+        k.reshape(shp).astype(jnp.float32),
+        v.reshape(shp).astype(jnp.float32),
+        w.reshape(shp),
+        (1.0 + p["u"].astype(jnp.float32)).reshape(h, hd),
+        s0,
+    )
+    y = y.reshape(b, t, h * hd)
+    y = L.rms_norm(y.astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    return jnp.einsum("bte,ed->btd", y * g, p["wo"]), s
+
+
+def _channel_mix(p, x, xprev):
+    xk = x + (xprev - x) * p["mu_k"]
+    xr = x + (xprev - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk"])))
+    kv = jnp.einsum("btf,fd->btd", k, p["wv"])
+    return jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"])) * kv
+
+
+# ---------------------------------------------------------------------------
+# Forward / decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int = 0, dtype=jnp.bfloat16):
+    l, h, hd, d = cfg.n_layers, cfg.n_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "s": jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((l, batch, d), dtype),
+        "x_cm": jnp.zeros((l, batch, d), dtype),
+    }
+
+
+def cache_specs(cfg, batch: int, max_len: int = 0, dtype=jnp.bfloat16):
+    l, h, hd, d = cfg.n_layers, cfg.n_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "s": jax.ShapeDtypeStruct((l, batch, h, hd, hd), jnp.float32),
+        "x_tm": jax.ShapeDtypeStruct((l, batch, d), dtype),
+        "x_cm": jax.ShapeDtypeStruct((l, batch, d), dtype),
+    }
+
+
+CACHE_AXES = {
+    "s": ("layers", "batch", "heads", None, None),
+    "x_tm": ("layers", "batch", None),
+    "x_cm": ("layers", "batch", None),
+}
+
+
+def forward(cfg, params, batch, *, collect_cache: bool = False):
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h = params["embed"][tokens].astype(params["embed"].dtype)
+    h = L.shard(h, ("batch", "act_seq", None))
+    hheads, hd = cfg.n_heads, cfg.rwkv_head_dim
+
+    def body(carry, blk):
+        x = carry
+        x_in_last = x[:, -1]                     # raw input to time-mix (cache)
+        xprev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+        s0 = jnp.zeros((b, hheads, hd, hd), jnp.float32)
+        y, s = _time_mix(blk["tm"], L.rms_norm(x, blk["ln1"], cfg.norm_eps),
+                         L.rms_norm(xprev, blk["ln1"], cfg.norm_eps), cfg, s0)
+        x = x + y
+        x_mid_last = x[:, -1]                    # raw input to channel-mix
+        xn = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        xnprev = jnp.pad(xn[:, :-1], ((0, 0), (1, 0), (0, 0)))
+        x = x + _channel_mix(blk["cm"], xn, xnprev)
+        x = L.shard(x, ("batch", "act_seq", None))
+        ys = (s, x_in_last, x_mid_last) if collect_cache else None
+        return x, ys
+
+    body_fn = L.checkpoint_fn(body, cfg)
+    h, caches = jax.lax.scan(body_fn, h, params["blocks"])
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["head"].astype(h.dtype))
+    logits = L.shard(logits, ("batch", "act_seq", "vocab"))
+
+    cache = None
+    if collect_cache:
+        s, x_tm, x_cm = caches
+        cache = {"s": s, "x_tm": x_tm.astype(h.dtype), "x_cm": x_cm.astype(h.dtype)}
+    return logits, cache
+
+
+def prefill(cfg, params, batch):
+    return forward(cfg, params, batch, collect_cache=True)
+
+
+def decode_step(cfg, params, tokens, cache, pos):
+    """One-token step: O(1) state update per layer (no KV cache)."""
+    b = tokens.shape[0]
+    h = params["embed"][tokens[:, 0]].astype(params["embed"].dtype)  # (B, D)
+    hheads, hd = cfg.n_heads, cfg.rwkv_head_dim
+
+    def body(carry, xs):
+        x = carry                                      # (B, D)
+        blk, s, x_tm, x_cm = xs
+        xn = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        xp = L.rms_norm(x_tm, blk["ln1"], cfg.norm_eps)
+        y, s_new = _time_mix(
+            blk["tm"], xn[:, None], xp[:, None], cfg, s
+        )
+        x_tm_new = x
+        x = x + y[:, 0]
+        xn2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        xp2 = L.rms_norm(x_cm, blk["ln2"], cfg.norm_eps)
+        cmix = _channel_mix(blk["cm"], xn2[:, None], xp2[:, None])
+        x_cm_new = x
+        x = x + cmix[:, 0]
+        return x, (s_new, x_tm_new, x_cm_new)
+
+    h, (s, x_tm, x_cm) = jax.lax.scan(
+        body, h, (params["blocks"], cache["s"], cache["x_tm"], cache["x_cm"])
+    )
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h, params["head"].astype(h.dtype))
+    return logits[:, None], {"s": s, "x_tm": x_tm, "x_cm": x_cm}

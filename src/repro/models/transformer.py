@@ -1,0 +1,346 @@
+"""Decoder-only transformer LM (dense GQA / MoE / VLM-backbone).
+
+One implementation covers gemma3 (5:1 local:global sliding window), yi /
+mistral-nemo / qwen3 (dense GQA, optional qk_norm), llama4-scout & dbrx
+(MoE, EP-sharded experts), and internvl2 (stub patch embeddings prefixed to
+the token stream).
+
+Layers are *stacked* (leading ``layers`` dim) and executed with
+``jax.lax.scan`` + ``jax.checkpoint`` so the lowered HLO stays compact at any
+depth and remat policy is explicit — both essential for the 512-device
+dry-run compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import PSpec
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+def _stack(spec: PSpec, n: int) -> PSpec:
+    return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
+
+
+def block_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    sp: Dict[str, Any] = {
+        "ln1": PSpec((d,), ("embed",), init="zeros"),
+        "ln2": PSpec((d,), ("embed",), init="zeros"),
+        "attn": L.attention_specs(cfg),
+    }
+    if cfg.n_experts:
+        sp["moe"] = L.moe_specs(cfg)
+    else:
+        sp["mlp"] = L.mlp_specs(cfg)
+    return sp
+
+
+def specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    blocks = jax.tree_util.tree_map(
+        lambda s: _stack(s, cfg.n_layers),
+        block_specs(cfg),
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+    sp = {
+        "embed": PSpec((cfg.vocab, d), ("vocab", "embed"), scale=1.0),
+        "blocks": blocks,
+        "ln_f": PSpec((d,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        sp["head"] = PSpec((d, cfg.vocab), ("embed", "vocab"))
+    return sp
+
+
+def window_schedule(cfg) -> jnp.ndarray:
+    """Per-layer sliding window (0 = global/full attention)."""
+    ls = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    if cfg.local_window == 0:
+        return jnp.zeros_like(ls)
+    if cfg.global_every == 0:
+        return jnp.full_like(ls, cfg.local_window)
+    is_global = (ls + 1) % cfg.global_every == 0
+    return jnp.where(is_global, 0, cfg.local_window)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _ffn(blk, x, cfg):
+    if cfg.n_experts:
+        return L.moe_fwd(blk["moe"], x, cfg)
+    return L.mlp_fwd(blk["mlp"], x)
+
+
+def _embed_inputs(cfg, params, batch) -> Tuple[jax.Array, int]:
+    """Token (+ modality-prefix) embedding.  Returns (h, n_prefix)."""
+    tokens = batch["tokens"]
+    h = params["embed"][tokens].astype(params["embed"].dtype)
+    n_prefix = 0
+    if cfg.n_patches and "patches" in batch:
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+        n_prefix = batch["patches"].shape[1]
+    return h, n_prefix
+
+
+def forward(
+    cfg,
+    params,
+    batch: Dict[str, jax.Array],
+    *,
+    collect_cache: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full-sequence forward.  batch = {tokens: (B,S) [, patches: (B,P,D)]}.
+
+    Returns (logits (B, S_total, V), cache or None).
+    """
+    h, n_prefix = _embed_inputs(cfg, params, batch)
+    h = L.shard(h, ("batch", "act_seq", None))
+    windows = window_schedule(cfg)
+
+    def body(carry, xs):
+        h = carry
+        blk, win = xs
+        a, (kk, vv) = L.attention_fwd(
+            blk["attn"], L.rms_norm(h, blk["ln1"], cfg.norm_eps), cfg, window=win
+        )
+        h = h + a
+        h = h + _ffn(blk, L.rms_norm(h, blk["ln2"], cfg.norm_eps), cfg)
+        h = L.shard(h, ("batch", "act_seq", None))
+        ys = (kk, vv) if collect_cache else None
+        return h, ys
+
+    body_fn = L.checkpoint_fn(body, cfg)
+    h, caches = jax.lax.scan(body_fn, h, (params["blocks"], windows))
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    logits = L.shard(logits, ("batch", "act_seq", "vocab"))
+
+    cache = None
+    if collect_cache:
+        kk, vv = caches
+        b, s = kk.shape[1], kk.shape[2]
+        kpos = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None, :], (cfg.n_layers, b, s)
+        )
+        cache = {"k": kk, "v": vv, "kpos": kpos}
+    return logits[:, n_prefix:], cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache / decode
+# ---------------------------------------------------------------------------
+def _grouped(cfg) -> bool:
+    return bool(cfg.ring_local_cache and cfg.local_window and cfg.global_every)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    if _grouped(cfg):
+        return grouped_init_cache(cfg, batch, max_len, dtype)
+    l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((l, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((l, batch, max_len, kv, hd), dtype),
+        "kpos": jnp.full((l, batch, max_len), -1, jnp.int32),
+    }
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the cache (dry-run, no allocation)."""
+    if _grouped(cfg):
+        return grouped_cache_specs(cfg, batch, max_len, dtype)
+    l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jax.ShapeDtypeStruct((l, batch, max_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((l, batch, max_len, kv, hd), dtype),
+        "kpos": jax.ShapeDtypeStruct((l, batch, max_len), jnp.int32),
+    }
+
+
+CACHE_AXES = {
+    "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "kpos": ("layers", "batch", "cache_seq"),
+    # grouped ring-cache layout (ring_local_cache)
+    "lk": ("layers", None, "batch", "cache_seq", "kv_heads", None),
+    "lv": ("layers", None, "batch", "cache_seq", "kv_heads", None),
+    "lkp": ("layers", None, "batch", "cache_seq"),
+    "gk": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "gv": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "gkp": ("layers", "batch", "cache_seq"),
+    "rk": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "rv": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "rkp": ("layers", "batch", "cache_seq"),
+}
+
+
+def _decode_layer(cfg, blk, h, kc, vc, kp, pos, win):
+    """One layer of single-token decode against (possibly ring) cache slices."""
+    b = h.shape[0]
+    kvh, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    c = kc.shape[1]
+    slot = pos % c
+    x = L.rms_norm(h, blk["ln1"], cfg.norm_eps)
+    p = blk["attn"]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    kk = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    vv = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        kk = L.rms_norm(kk, p["k_norm"], cfg.norm_eps)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = L.rope(q, posv, cfg.rope_theta)
+    kk = L.rope(kk, posv, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, kk.astype(kc.dtype), slot, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, vv.astype(vc.dtype), slot, 1)
+    kp = jax.lax.dynamic_update_slice_in_dim(
+        kp, jnp.full((b, 1), pos, jnp.int32), slot, 1
+    )
+    out = L.decode_attention(
+        q.reshape(b, 1, kvh, g, hd), kc, vc, kp, pos, window=win
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out.reshape(b, 1, cfg.n_heads, hd), p["wo"])
+    h = h + out
+    h = h + _ffn(blk, L.rms_norm(h, blk["ln2"], cfg.norm_eps), cfg)
+    return h, kc, vc, kp
+
+
+def decode_step(
+    cfg,
+    params,
+    tokens: jax.Array,          # (B, 1)
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,             # int32[] absolute position of this token
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode with ring KV cache write at ``pos % C``."""
+    if cfg.ring_local_cache and cfg.local_window and cfg.global_every:
+        return _decode_step_grouped(cfg, params, tokens, cache, pos)
+    h = params["embed"][tokens].astype(params["embed"].dtype)
+    h = L.shard(h, ("batch", None, None))
+    windows = window_schedule(cfg)
+
+    def body(h, xs):
+        blk, win, kc, vc, kp = xs
+        h, kc, vc, kp = _decode_layer(cfg, blk, h, kc, vc, kp, pos, win)
+        return h, (kc, vc, kp)
+
+    h, (kc, vc, kp) = jax.lax.scan(
+        body, h, (params["blocks"], windows, cache["k"], cache["v"], cache["kpos"])
+    )
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    return logits, {"k": kc, "v": vc, "kpos": kp}
+
+
+def prefill(cfg, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, cache = forward(cfg, params, batch, collect_cache=True)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Grouped ring caches (§Perf lever: ring_local_cache)
+#
+# Local (sliding-window) layers only ever attend to the last ``window``
+# positions, so their cache needs window slots, not seq_len.  Layers are
+# grouped into superblocks of ``global_every`` (gemma3: 5 local + 1 global);
+# the remainder layers are local.  For gemma3-27b @ 32k this shrinks the KV
+# cache 62*S -> 52*W + 10*S  (~5.3x) and, since decode attention reads the
+# whole cache every token, shrinks decode HBM traffic by the same factor.
+# ---------------------------------------------------------------------------
+def _grouped_layout(cfg) -> Tuple[int, int, int]:
+    ge = cfg.global_every
+    return cfg.n_layers // ge, ge, cfg.n_layers % ge
+
+
+def grouped_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_super, ge, rem = _grouped_layout(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    w = min(cfg.local_window, max_len)
+    sp = {
+        "lk": jax.ShapeDtypeStruct((n_super, ge - 1, batch, w, kv, hd), dtype),
+        "lv": jax.ShapeDtypeStruct((n_super, ge - 1, batch, w, kv, hd), dtype),
+        "lkp": jax.ShapeDtypeStruct((n_super, ge - 1, batch, w), jnp.int32),
+        "gk": jax.ShapeDtypeStruct((n_super, batch, max_len, kv, hd), dtype),
+        "gv": jax.ShapeDtypeStruct((n_super, batch, max_len, kv, hd), dtype),
+        "gkp": jax.ShapeDtypeStruct((n_super, batch, max_len), jnp.int32),
+    }
+    if rem:
+        sp["rk"] = jax.ShapeDtypeStruct((rem, batch, w, kv, hd), dtype)
+        sp["rv"] = jax.ShapeDtypeStruct((rem, batch, w, kv, hd), dtype)
+        sp["rkp"] = jax.ShapeDtypeStruct((rem, batch, w), jnp.int32)
+    return sp
+
+
+def grouped_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.full(s.shape, -1, jnp.int32)
+        if s.dtype == jnp.int32
+        else jnp.zeros(s.shape, s.dtype),
+        grouped_cache_specs(cfg, batch, max_len, dtype),
+    )
+
+
+def _regroup_blocks(cfg, blocks):
+    """Split the (L, ...)-stacked block params into (super-local, super-global,
+    remainder-local) views — pure reshapes/slices, free at trace time."""
+    n_super, ge, rem = _grouped_layout(cfg)
+
+    def main(x):
+        return x[: n_super * ge].reshape((n_super, ge) + x.shape[1:])
+
+    locals_ = jax.tree_util.tree_map(lambda x: main(x)[:, : ge - 1], blocks)
+    globals_ = jax.tree_util.tree_map(lambda x: main(x)[:, ge - 1], blocks)
+    rems = (
+        jax.tree_util.tree_map(lambda x: x[n_super * ge :], blocks) if rem else None
+    )
+    return locals_, globals_, rems
+
+
+def _decode_step_grouped(cfg, params, tokens, cache, pos):
+    n_super, ge, rem = _grouped_layout(cfg)
+    w = cfg.local_window
+    h = params["embed"][tokens].astype(params["embed"].dtype)
+    h = L.shard(h, ("batch", None, None))
+    loc, glob, rems = _regroup_blocks(cfg, params["blocks"])
+
+    def local_body(h, xs):
+        blk, kc, vc, kp = xs
+        h, kc, vc, kp = _decode_layer(cfg, blk, h, kc, vc, kp, pos, w)
+        return h, (kc, vc, kp)
+
+    def super_body(h, xs):
+        lblk, gblk, lk, lv, lkp, gk, gv, gkp = xs
+        h, (lk, lv, lkp) = jax.lax.scan(local_body, h, (lblk, lk, lv, lkp))
+        h, gk, gv, gkp = _decode_layer(cfg, gblk, h, gk, gv, gkp, pos, 0)
+        return h, (lk, lv, lkp, gk, gv, gkp)
+
+    h, (lk, lv, lkp, gk, gv, gkp) = jax.lax.scan(
+        super_body,
+        h,
+        (loc, glob, cache["lk"], cache["lv"], cache["lkp"],
+         cache["gk"], cache["gv"], cache["gkp"]),
+    )
+    new_cache = dict(cache)
+    new_cache.update({"lk": lk, "lv": lv, "lkp": lkp,
+                      "gk": gk, "gv": gv, "gkp": gkp})
+    if rem:
+        h, (rk, rv, rkp) = jax.lax.scan(
+            local_body, h, (rems, cache["rk"], cache["rv"], cache["rkp"])
+        )
+        new_cache.update({"rk": rk, "rv": rv, "rkp": rkp})
+
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    return logits, new_cache

@@ -1,0 +1,248 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+``input_specs()`` supplies precomputed frame embeddings (B, F, D) — the conv
+frontend is a stub per the assignment.  Encoder: non-causal self-attention
+with sinusoidal positions.  Decoder: causal self-attention + cross-attention
+over the encoder output, GELU MLPs, tied embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import PSpec
+
+
+def _stack(spec: PSpec, n: int) -> PSpec:
+    return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
+
+
+def _gelu_mlp_specs(cfg) -> Dict[str, PSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi": PSpec((d, f), ("embed", "mlp")),
+        "wo": PSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def _gelu_mlp(p, x):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"]))
+    h = L.shard(h, ("batch", None, "mlp_act"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def _enc_block_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": PSpec((d,), ("embed",), init="zeros"),
+        "ln2": PSpec((d,), ("embed",), init="zeros"),
+        "attn": L.attention_specs(cfg),
+        "mlp": _gelu_mlp_specs(cfg),
+    }
+
+
+def _dec_block_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": PSpec((d,), ("embed",), init="zeros"),
+        "lnx": PSpec((d,), ("embed",), init="zeros"),
+        "ln2": PSpec((d,), ("embed",), init="zeros"),
+        "attn": L.attention_specs(cfg),
+        "cross": L.attention_specs(cfg),
+        "mlp": _gelu_mlp_specs(cfg),
+    }
+
+
+def specs(cfg) -> Dict[str, Any]:
+    enc = jax.tree_util.tree_map(
+        lambda s: _stack(s, cfg.n_enc_layers),
+        _enc_block_specs(cfg),
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+    dec = jax.tree_util.tree_map(
+        lambda s: _stack(s, cfg.n_layers),
+        _dec_block_specs(cfg),
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+    return {
+        "embed": PSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "enc": enc,
+        "dec": dec,
+        "ln_enc": PSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "ln_f": PSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def encode(cfg, params, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, D) stub embeddings -> encoder output (B, F, D)."""
+    b, f, d = frames.shape
+    h = frames.astype(params["ln_enc"].dtype) + L.sinusoidal_pos(f, d).astype(
+        frames.dtype
+    )
+    h = L.shard(h, ("batch", None, None))
+
+    def body(carry, blk):
+        x = carry
+        a, _ = L.attention_fwd(
+            blk["attn"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg,
+            causal=False, use_rope=False,
+        )
+        x = x + a
+        x = x + _gelu_mlp(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps))
+        return x, None
+
+    body_fn = L.checkpoint_fn(body, cfg)
+    h, _ = jax.lax.scan(body_fn, h, params["enc"])
+    return L.rms_norm(h, params["ln_enc"], cfg.norm_eps)
+
+
+def forward(cfg, params, batch, *, collect_cache: bool = False):
+    """batch = {frames: (B,F,D), tokens: (B,S)}."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    d = cfg.d_model
+    h = params["embed"][tokens].astype(params["embed"].dtype)
+    h = h + L.sinusoidal_pos(s, d).astype(h.dtype)
+    h = L.shard(h, ("batch", "act_seq", None))
+
+    def body(carry, blk):
+        x = carry
+        a, (kk, vv) = L.attention_fwd(
+            blk["attn"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg,
+            causal=True, use_rope=False,
+        )
+        x = x + a
+        # cross-attention: kv from encoder output
+        xq = L.rms_norm(x, blk["lnx"], cfg.norm_eps)
+        ck = jnp.einsum("bfd,dhk->bfhk", enc_out, blk["cross"]["wk"])
+        cv = jnp.einsum("bfd,dhk->bfhk", enc_out, blk["cross"]["wv"])
+        c, _ = L.attention_fwd(
+            blk["cross"], xq, cfg, causal=False, use_rope=False,
+            kv_override=(ck, cv),
+        )
+        x = x + c
+        x = x + _gelu_mlp(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps))
+        ys = (kk, vv, ck, cv) if collect_cache else None
+        return x, ys
+
+    body_fn = L.checkpoint_fn(body, cfg)
+    h, sc = jax.lax.scan(body_fn, h, params["dec"])
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["embed"].T.astype(h.dtype))
+    logits = L.shard(logits, ("batch", "act_seq", "vocab"))
+
+    cache = None
+    if collect_cache:
+        kk, vv, ck, cv = sc
+        kpos = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None, :], (cfg.n_layers, b, s)
+        )
+        cache = {"k": kk, "v": vv, "kpos": kpos, "cross_k": ck, "cross_v": cv}
+    return logits, cache
+
+
+def prefill(cfg, params, batch):
+    return forward(cfg, params, batch, collect_cache=True)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.full(s.shape, -1, jnp.int32)
+        if s.dtype == jnp.int32
+        else jnp.zeros(s.shape, s.dtype),
+        cache_specs(cfg, batch, max_len, dtype),
+    )
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    f = cfg.src_len
+    return {
+        "k": jax.ShapeDtypeStruct((l, batch, max_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((l, batch, max_len, kv, hd), dtype),
+        "kpos": jax.ShapeDtypeStruct((l, batch, max_len), jnp.int32),
+        "cross_k": jax.ShapeDtypeStruct((l, batch, f, kv, hd), dtype),
+        "cross_v": jax.ShapeDtypeStruct((l, batch, f, kv, hd), dtype),
+    }
+
+
+CACHE_AXES = {
+    "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "kpos": ("layers", "batch", "cache_seq"),
+    "cross_k": ("layers", "batch", None, "kv_heads", None),
+    "cross_v": ("layers", "batch", None, "kv_heads", None),
+}
+
+
+def decode_step(cfg, params, tokens, cache, pos):
+    b = tokens.shape[0]
+    kvh, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    d = cfg.d_model
+    h = params["embed"][tokens].astype(params["embed"].dtype)
+    h = h + _pos_embed_at(pos, d).astype(h.dtype)
+    c = cache["k"].shape[2]
+    slot = pos % c
+
+    def body(carry, xs):
+        blk, kc, vc, kp, ck, cv = xs
+        x = carry
+        xn = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        p = blk["attn"]
+        q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"])
+        kk = jnp.einsum("bsd,dhk->bshk", xn, p["wk"])
+        vv = jnp.einsum("bsd,dhk->bshk", xn, p["wv"])
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kk.astype(kc.dtype), slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vv.astype(vc.dtype), slot, 1)
+        kp = jax.lax.dynamic_update_slice_in_dim(
+            kp, jnp.full((b, 1), pos, jnp.int32), slot, 1
+        )
+        out = L.decode_attention(q.reshape(b, 1, kvh, g, hd), kc, vc, kp, pos)
+        x = x + jnp.einsum(
+            "bshk,hkd->bsd", out.reshape(b, 1, cfg.n_heads, hd), p["wo"]
+        )
+        # cross-attention over the fixed encoder cache
+        xq = L.rms_norm(x, blk["lnx"], cfg.norm_eps)
+        pc = blk["cross"]
+        qx = jnp.einsum("bsd,dhk->bshk", xq, pc["wq"])
+        f = ck.shape[1]
+        fpos = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+        outx = L.decode_attention(
+            qx.reshape(b, 1, kvh, g, hd), ck, cv, fpos, jnp.int32(f),
+        )
+        x = x + jnp.einsum(
+            "bshk,hkd->bsd", outx.reshape(b, 1, cfg.n_heads, hd), pc["wo"]
+        )
+        x = x + _gelu_mlp(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps))
+        return x, (kc, vc, kp)
+
+    h, (kc, vc, kp) = jax.lax.scan(
+        body,
+        h,
+        (
+            params["dec"],
+            cache["k"],
+            cache["v"],
+            cache["kpos"],
+            cache["cross_k"],
+            cache["cross_v"],
+        ),
+    )
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["embed"].T.astype(h.dtype))
+    new_cache = dict(cache)
+    new_cache.update({"k": kc, "v": vc, "kpos": kp})
+    return logits, new_cache
+
+
+def _pos_embed_at(pos: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal position embedding for one (traced) position."""
+    import math
+
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d][None]

@@ -1,0 +1,1 @@
+from .engine import Request, ServeLoop, make_prefill_step, make_serve_step  # noqa: F401

@@ -1,0 +1,95 @@
+"""Serving engine: batched prefill + decode over any registry architecture.
+
+``prefill_step`` and ``serve_step`` are the two lowered entry points of the
+inference shapes (``prefill_32k`` lowers prefill; ``decode_32k`` /
+``long_500k`` lower one ``serve_step`` against a seq_len-deep cache).  The
+host-side ``ServeLoop`` runs continuous batching over them for the examples
+and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+
+
+def make_prefill_step(cfg) -> Callable:
+    mod = registry.family_module(cfg)
+
+    def prefill_step(params, batch: Dict[str, jax.Array]):
+        logits, cache = mod.prefill(cfg, params, batch)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg) -> Callable:
+    mod = registry.family_module(cfg)
+
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = mod.decode_step(cfg, params, tokens, cache, pos)
+        return logits.reshape(tokens.shape[0], -1), cache
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray         # (S,) int32
+    max_new: int = 16
+    generated: Optional[List[int]] = None
+
+
+class ServeLoop:
+    """Greedy continuous-batching loop (host side, CPU-scale)."""
+
+    def __init__(self, cfg, params, batch_size: int, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.mod = registry.family_module(cfg)
+        self._decode = jax.jit(make_serve_step(cfg))
+        self.cache = self.mod.init_cache(cfg, batch_size, max_len, jnp.dtype(cfg.dtype))
+        self.steps = 0
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Teacher-forced prefill via decode steps, then greedy generation."""
+        out: Dict[int, List[int]] = {}
+        for chunk_start in range(0, len(requests), self.batch):
+            chunk = requests[chunk_start : chunk_start + self.batch]
+            b = len(chunk)
+            plen = max(len(r.prompt) for r in chunk)
+            toks = np.zeros((self.batch, plen), np.int32)
+            for i, r in enumerate(chunk):
+                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            cache = self.mod.init_cache(
+                self.cfg, self.batch, self.max_len, jnp.dtype(self.cfg.dtype)
+            )
+            last = None
+            for t in range(plen):
+                last, cache = self._decode(
+                    self.params, jnp.asarray(toks[:, t : t + 1]), cache, jnp.int32(t)
+                )
+                self.steps += 1
+            gen = [[] for _ in range(b)]
+            cur = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            max_new = max(r.max_new for r in chunk)
+            for s in range(max_new):
+                for i in range(b):
+                    if s < chunk[i].max_new:
+                        gen[i].append(int(cur[i, 0]))
+                last, cache = self._decode(
+                    self.params, cur, cache, jnp.int32(plen + s)
+                )
+                self.steps += 1
+                cur = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            for i, r in enumerate(chunk):
+                out[r.rid] = gen[i]
+        return out

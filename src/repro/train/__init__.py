@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, data, checkpointing, elastic, train loop."""
+from . import checkpoint, data, elastic, optimizer, train_loop  # noqa: F401

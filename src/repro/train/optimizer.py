@@ -1,0 +1,95 @@
+"""AdamW with warmup-cosine schedule, implemented as pure-pytree transforms.
+
+Optimizer moments inherit the parameter logical axes, so FSDP sharding of
+``mu``/``nu`` follows from the same rules as the parameters (ZeRO-style).
+Moments are kept in float32 regardless of the parameter dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def init(params) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        mu=jax.tree_util.tree_map(f32, params),
+        nu=jax.tree_util.tree_map(f32, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_shapes(param_shapes) -> OptState:
+    """ShapeDtypeStruct version (dry-run)."""
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(
+        mu=jax.tree_util.tree_map(f32, param_shapes),
+        nu=jax.tree_util.tree_map(f32, param_shapes),
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def update(
+    grads, state: OptState, params, cfg: OptConfig
+) -> Tuple[Any, OptState, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, count)
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(leaf, grads, state.mu, state.nu, params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(new_mu, new_nu, count), gnorm

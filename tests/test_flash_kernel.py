@@ -1,0 +1,70 @@
+"""Pallas flash-attention kernel vs direct-softmax oracle (interpret mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(b, h, kvh, s, d, dtype):
+    q = jnp.asarray(RNG.standard_normal((b, h, s, d)), jnp.float32).astype(dtype)
+    k = jnp.asarray(RNG.standard_normal((b, kvh, s, d)), jnp.float32).astype(dtype)
+    v = jnp.asarray(RNG.standard_normal((b, kvh, s, d)), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "b,h,kvh,s,d",
+    [(1, 4, 2, 256, 64), (2, 4, 4, 128, 128), (1, 8, 1, 256, 64), (1, 2, 2, 384, 128)],
+)
+def test_flash_causal_sweep(b, h, kvh, s, d):
+    q, k, v = _mk(b, h, kvh, s, d, jnp.float32)
+    got = flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [64, 128, 1024])
+def test_flash_sliding_window(window):
+    q, k, v = _mk(1, 4, 2, 256, 64, jnp.float32)
+    got = flash_attention(q, k, v, window=window, interpret=True)
+    want = ref.flash_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_non_causal():
+    q, k, v = _mk(1, 2, 1, 128, 64, jnp.float32)
+    got = flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _mk(1, 4, 2, 128, 128, jnp.bfloat16)
+    got = flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=2e-2
+    )
+
+
+def test_flash_matches_model_layer_attention():
+    """Cross-check against the pure-JAX chunked attention used by the models."""
+    from repro.models.layers import flash_attention as jnp_flash
+
+    b, kvh, g, s, d = 1, 2, 2, 256, 64
+    q, k, v = _mk(b, kvh * g, kvh, s, d, jnp.float32)
+    got = flash_attention(q, k, v, window=64, interpret=True)
+    # models layout: q (B, S, KV, G, D); k/v (B, S, KV, D)
+    qm = q.reshape(b, kvh, g, s, d).transpose(0, 3, 1, 2, 4)
+    km = k.transpose(0, 2, 1, 3)
+    vm = v.transpose(0, 2, 1, 3)
+    want = jnp_flash(qm, km, vm, causal=True, window=64, chunk_q=128, chunk_k=128)
+    want = want.transpose(0, 2, 3, 1, 4).reshape(b, kvh * g, s, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

@@ -1,0 +1,192 @@
+"""Multi-device integration tests, run in subprocesses with
+--xla_force_host_platform_device_count=8 (the main test process must keep the
+default single device for the smoke tests)."""
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env_code = (
+        f"import os\n"
+        f'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"\n'
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", env_code + textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        timeout=540,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+def test_fabric_consensus_round_all_devices_agree():
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.fabric import make_fabric_consensus
+        mesh = jax.make_mesh((8,), ("acc",))
+        init_fn, step = make_fabric_consensus(mesh, axis="acc", n_instances=256,
+                                              value_words=4)
+        astate, cstate = init_fn()
+        values = jnp.arange(8 * 2 * 4, dtype=jnp.int32).reshape(16, 4)
+        active = jnp.ones((16,), bool)
+        alive = jnp.ones((8,), bool)
+        astate, cstate, decided, inst, value = step(astate, cstate, values, active, alive)
+        assert np.asarray(decided).all(), decided
+        np.testing.assert_array_equal(np.asarray(inst), np.arange(16))
+        np.testing.assert_array_equal(np.asarray(value), np.asarray(values))
+        assert int(cstate.next_inst) == 16
+        # second round continues the instance window
+        astate, cstate, decided, inst, _ = step(astate, cstate, values, active, alive)
+        assert np.asarray(inst)[0] == 16
+        print("FABRIC_OK")
+        """
+    )
+    assert "FABRIC_OK" in out
+
+
+def test_fabric_consensus_tolerates_f_failures():
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.fabric import make_fabric_consensus
+        mesh = jax.make_mesh((8,), ("acc",))
+        # quorum 5 of 8 -> tolerate 3 dead acceptors
+        init_fn, step = make_fabric_consensus(mesh, axis="acc", quorum=5,
+                                              n_instances=128, value_words=2)
+        astate, cstate = init_fn()
+        values = jnp.ones((8, 2), jnp.int32)
+        active = jnp.ones((8,), bool)
+        alive = jnp.asarray([True]*5 + [False]*3)
+        astate, cstate, decided, inst, value = step(astate, cstate, values, active, alive)
+        assert np.asarray(decided).all()
+        # 4 alive < quorum 5 -> no decision
+        alive = jnp.asarray([True]*4 + [False]*4)
+        astate, cstate, decided, *_ = step(astate, cstate, values, active, alive)
+        assert not np.asarray(decided).any()
+        print("QUORUM_OK")
+        """
+    )
+    assert "QUORUM_OK" in out
+
+
+def test_quorum_commit_digest_straggler():
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from jax import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core.fabric import quorum_commit_digest
+        mesh = jax.make_mesh((8,), ("data",))
+        fn = shard_map(
+            functools.partial(quorum_commit_digest, axis="data", quorum=5),
+            mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P(), P()),
+            check_vma=False)
+        # all groups agree
+        d = jnp.full((8,), 1234, jnp.int32)
+        h = jnp.ones((8,), bool)
+        commit, win = jax.jit(fn)(d, h)
+        assert bool(commit) and int(win) == 8
+        # 3 stragglers abstain -> still commits
+        h = jnp.asarray([True]*5 + [False]*3)
+        commit, win = jax.jit(fn)(d, h)
+        assert bool(commit) and int(win) == 5
+        # a diverging (corrupt) group never joins the quorum: with 3
+        # stragglers + 1 corrupt, only 4 agree < quorum 5 -> no commit
+        d2 = d.at[0].set(999)
+        commit, win = jax.jit(fn)(d2, h)
+        assert not bool(commit) and int(win) == 4
+        # too many stragglers -> no commit
+        h = jnp.asarray([True]*4 + [False]*4)
+        commit, win = jax.jit(fn)(d, h)
+        assert not bool(commit)
+        print("COMMIT_OK")
+        """
+    )
+    assert "COMMIT_OK" in out
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.launch import sharding as sh
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import registry
+        from repro.train import train_loop
+        from repro.configs.base import ShapeConfig
+
+        cfg = get_config("qwen3-4b").reduced()
+        mesh = make_host_mesh(8, model_parallel=2)     # (4, 2) data x model
+        key = jax.random.PRNGKey(0)
+        tiny = ShapeConfig("t", 16, 4, "train")
+        batch = registry.make_inputs(cfg, tiny, key)
+
+        # single-device reference
+        state0 = train_loop.init_state(cfg, key)
+        step0 = jax.jit(train_loop.make_train_step(cfg))
+        _, m0 = step0(state0, batch)
+
+        # sharded
+        rules = sh.BASE_RULES
+        sh.install(mesh, rules)
+        state_sh = sh.tree_shardings(
+            train_loop.state_shapes(cfg), train_loop.state_axes(cfg), rules, mesh)
+        batch_specs = registry.input_specs(cfg, tiny)
+        batch_sh = sh.batch_shardings(batch_specs, cfg, rules, mesh)
+        state = jax.device_put(train_loop.init_state(cfg, key), state_sh)
+        gbatch = {k: jax.device_put(v, batch_sh[k]) for k, v in batch.items()}
+        step = jax.jit(train_loop.make_train_step(cfg),
+                       in_shardings=(state_sh, batch_sh))
+        _, m1 = step(state, gbatch)
+        sh.uninstall()
+        a, b = float(m0["loss"]), float(m1["loss"])
+        assert abs(a - b) / abs(a) < 1e-3, (a, b)
+        print("SHARDED_OK", a, b)
+        """
+    )
+    assert "SHARDED_OK" in out
+
+
+def test_sharded_moe_expert_parallel():
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.configs import get_config
+        from repro.launch import sharding as sh
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import registry
+        from repro.configs.base import ShapeConfig
+
+        cfg = get_config("dbrx-132b").reduced()   # 4 experts
+        mesh = make_host_mesh(8, model_parallel=4)  # experts 4-way EP
+        key = jax.random.PRNGKey(0)
+        tiny = ShapeConfig("t", 16, 4, "train")
+        batch = registry.make_inputs(cfg, tiny, key)
+        mod = registry.family_module(cfg)
+        params = registry.init_params(cfg, key)
+        ref, _ = mod.forward(cfg, params, {"tokens": batch["tokens"]})
+
+        sh.install(mesh, sh.BASE_RULES)
+        psh = sh.tree_shardings(registry.param_shapes(cfg),
+                                registry.param_axes(cfg), sh.BASE_RULES, mesh)
+        p = jax.device_put(params, psh)
+        f = jax.jit(lambda p, t: mod.forward(cfg, p, {"tokens": t})[0],
+                    in_shardings=(psh, None))
+        got = f(p, batch["tokens"])
+        sh.uninstall()
+        err = np.abs(np.asarray(got) - np.asarray(ref)).max()
+        assert err < 5e-4, err
+        print("EP_OK", err)
+        """
+    )
+    assert "EP_OK" in out

@@ -1,0 +1,81 @@
+"""Sharding-rule resolver unit tests (no devices needed beyond CPU)."""
+from __future__ import annotations
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as sh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # abstract mesh: no devices touched
+    import numpy as np
+
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_param_fsdp_tp(mesh):
+    spec = sh.resolve_spec((4096, 32, 128), ("embed", "heads", "head_dim"),
+                           sh.BASE_RULES, mesh)
+    assert spec == P("data", "model")
+
+
+def test_kv_heads_fall_back_to_replication_when_indivisible(mesh):
+    spec = sh.resolve_spec((4096, 4, 128), ("embed", "kv_heads", "head_dim"),
+                           sh.BASE_RULES, mesh)
+    assert spec == P("data")          # kv=4 not divisible by 16 -> replicated
+
+
+def test_vocab_sharded_when_divisible(mesh):
+    assert sh.resolve_spec((262144, 5376), ("vocab", "embed"),
+                           sh.BASE_RULES, mesh) == P("model", "data")
+    # whisper vocab 51865 is odd -> replicated
+    assert sh.resolve_spec((51865, 512), ("vocab", "embed"),
+                           sh.BASE_RULES, mesh) == P(None, "data")
+
+
+def test_no_axis_reuse(mesh):
+    # embed takes data; a second embed-like dim cannot reuse it
+    spec = sh.resolve_spec((2560, 2560), ("embed", "embed"), sh.BASE_RULES, mesh)
+    assert spec == P("data")
+
+
+def test_batch_axis_prefers_pod_data():
+    mesh3 = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    assert sh.resolve_spec((256, 4096), ("batch", None), sh.BASE_RULES, mesh3) == P(
+        ("pod", "data")
+    )
+    # batch=1 (long_500k): replicated
+    assert sh.resolve_spec((1, 4096), ("batch", None), sh.BASE_RULES, mesh3) == P()
+
+
+def test_opt_rules_enable_sp_and_cache_seq():
+    mesh3 = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    a = sh.resolve_spec((256, 4096, 5376), ("batch", "act_seq", None),
+                        sh.OPT_RULES, mesh3)
+    assert a == P(("pod", "data"), "model")
+    # decode cache with kv_heads=8 (indivisible by 16): seq picks up model
+    c = sh.resolve_spec((40, 128, 32768, 8, 128),
+                        ("layers", "batch", "cache_seq", "kv_heads", None),
+                        sh.OPT_RULES, mesh3)
+    assert c == P(None, ("pod", "data"), "model")
+
+
+def test_expert_parallel(mesh):
+    spec = sh.resolve_spec((16, 6144, 10752), ("expert", "embed", "expert_mlp"),
+                           sh.BASE_RULES, mesh)
+    assert spec == P("model", "data")
+
+
+def test_mesh_construction_contract():
+    """make_production_mesh shapes/axes per the dry-run contract (needs the
+    512-device env only when actually building; use spec check via source)."""
+    import inspect
+
+    from repro.launch import mesh as mesh_mod
+
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src
