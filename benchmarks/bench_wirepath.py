@@ -1,0 +1,242 @@
+"""The repo's Fig. 2 / Table 2 analogue: wire-path amortization curve.
+
+Measures msgs/s and per-round latency of one complete Phase-2 round
+(sequence -> all-A vote -> quorum -> dedup) across burst sizes for the four
+generations of the dataplane:
+
+  baseline       scalar ``core.paxos`` roles, one Python step per message —
+                 the libpaxos-like software deployment
+  per_acceptor   the historical staged path: jit per stage, but a host loop
+                 over acceptors with a full ``.at[aid].set`` stacked-state
+                 rewrite per vote, per-acceptor host transfer of the vote
+                 batch, and the software learner's per-vote Python quorum
+                 count (what ``HardwareDataplane.vote`` + ``PaxosContext
+                 ._learn`` did before the fused wire path)
+  jnp_fused      ``batched.fused_round`` — one jitted program, vmap over the
+                 acceptor array, donated state
+  pallas_fused   ``kernels.wirepath.wirepath_round`` — the single-dispatch
+                 megakernel (interpret mode on CPU: correctness-true; on TPU
+                 it compiles to Mosaic)
+
+The amortization curve (msgs/s vs burst) is the TPU's "clock rate" lever:
+bigger bursts amortize dispatch overhead until the path goes memory-bound.
+Results also land in ``BENCH_wirepath.json`` so later PRs can diff msgs/s.
+
+Ring sizing: the CPU Pallas interpreter materializes a full copy of the
+aliased state arrays per grid step, an emulation artifact that scales with N
+and would swamp the measurement at the paper's 64K ring; the bench therefore
+uses an 8K ring and one grid step per 1024 messages.  On a real TPU the
+aliased blocks stay in VMEM and neither artifact exists.
+
+    PYTHONPATH=src python -m benchmarks.bench_wirepath [--quick]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched
+from repro.core.paxos import Acceptor, Coordinator, Learner, Msg
+from repro.core.types import MSG_P2A, MSG_P2B, AcceptorState, CoordinatorState
+from repro.kernels import wirepath
+
+from .common import block, emit, time_fn, write_json
+
+A = 3
+V = 16
+N = 1 << 13     # see "Ring sizing" in the module docstring
+BLOCK_B = 1024  # messages per wire-path grid step
+QUORUM = A // 2 + 1
+BURSTS = (64, 256, 1024, 4096, 8192)
+SCALAR_CAP = 1024  # scalar baseline measured up to here (Python is O(msgs))
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_wirepath.json")
+
+
+def _mk_state():
+    one = AcceptorState.init(N, V)
+    stack = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (A,) + x.shape).copy(), one
+    )
+    return CoordinatorState.init(), stack, batched.LearnerState.init(N, V)
+
+
+def _values(b: int) -> jnp.ndarray:
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(-99, 99, (b, V)).astype(np.int32))
+
+
+# -- path: scalar software baseline -----------------------------------------
+def bench_baseline(b: int) -> float:
+    co = Coordinator(n_instances=N)
+    accs = [Acceptor(aid=i, n_instances=N) for i in range(A)]
+    learner = Learner(lid=0, n_acceptors=A)
+    payload = b"x" * (V * 4)
+
+    def round_():
+        for _ in range(b):
+            p2a = co.on_submit(Msg(5, value=payload))
+            for aid, acc in enumerate(accs):
+                out = acc.on_p2a(Msg(MSG_P2A, inst=p2a.inst, rnd=p2a.rnd,
+                                     value=payload))
+                if out.msgtype == MSG_P2B:
+                    learner.on_p2b(Msg(MSG_P2B, inst=out.inst, rnd=out.rnd,
+                                       vrnd=out.vrnd, swid=aid,
+                                       value=out.value))
+
+    return time_fn(round_, iters=3)
+
+
+# -- path: per-acceptor host loop (the pre-fusion staged dataplane) ----------
+def bench_per_acceptor(b: int) -> float:
+    cstate, stack, _ = _mk_state()
+    values, active = _values(b), jnp.ones((b,), bool)
+    seq = jax.jit(batched.coordinator_sequence)
+    vote = jax.jit(batched.acceptor_phase2)
+    learned: dict = {}
+    partial: dict = {}
+
+    def round_():
+        nonlocal cstate, stack
+        cstate, p2a = seq(cstate, values, active)
+        votes = []
+        for aid in range(A):
+            st = jax.tree_util.tree_map(lambda x: x[aid], stack)
+            st, v = vote(st, p2a, aid)
+            # the historical full-stack rewrite, one copy per acceptor
+            stack = jax.tree_util.tree_map(
+                lambda x, y: x.at[aid].set(y), stack, st
+            )
+            # ...and the per-acceptor host transfer of the vote batch
+            votes.append({
+                "msgtype": np.asarray(v.msgtype),
+                "inst": np.asarray(v.inst),
+                "vrnd": np.asarray(v.vrnd),
+                "value": np.asarray(v.value),
+            })
+        # the software learner: per-vote Python quorum count (api._learn)
+        for aid, v in enumerate(votes):
+            mt, vi, vr, vv = v["msgtype"], v["inst"], v["vrnd"], v["value"]
+            for i in range(b):
+                if mt[i] != MSG_P2B:
+                    continue
+                inst = int(vi[i])
+                if inst in learned:
+                    continue
+                slot = partial.setdefault(inst, {})
+                slot[aid] = (int(vr[i]), vv[i])
+                by_rnd: dict = {}
+                for rnd, _ in slot.values():
+                    by_rnd[rnd] = by_rnd.get(rnd, 0) + 1
+                for rnd, cnt in by_rnd.items():
+                    if cnt >= QUORUM:
+                        learned[inst] = next(
+                            val for r, val in slot.values() if r == rnd
+                        )
+                        partial.pop(inst, None)
+                        break
+
+    return time_fn(round_)
+
+
+# -- path: jnp fused round ---------------------------------------------------
+def bench_jnp_fused(b: int) -> float:
+    cstate, stack, lstate = _mk_state()
+    values, active = _values(b), jnp.ones((b,), bool)
+    alive = jnp.ones((A,), bool)
+    fused = jax.jit(batched.fused_round, donate_argnums=(1, 2),
+                    static_argnums=(6,))
+
+    def round_():
+        nonlocal cstate, stack, lstate
+        cstate, stack, lstate, fresh, *_ = fused(
+            cstate, stack, lstate, values, active, alive, QUORUM
+        )
+        block(fresh)
+
+    return time_fn(round_)
+
+
+# -- path: Pallas megakernel -------------------------------------------------
+def bench_pallas_fused(b: int) -> float:
+    cstate, stack, lstate = _mk_state()
+    values = _values(b)
+    alive = jnp.ones((A,), jnp.int32)
+    interpret = jax.default_backend() == "cpu"
+
+    def round_():
+        nonlocal cstate, stack, lstate
+        outs = wirepath.wirepath_round(
+            cstate.next_inst, cstate.crnd, jnp.int32(QUORUM), alive,
+            stack.rnd, stack.vrnd, stack.value,
+            lstate.delivered, lstate.inst, lstate.value,
+            values, block_b=BLOCK_B, interpret=interpret,
+        )
+        stack = AcceptorState(*outs[:3])
+        lstate = batched.LearnerState(*outs[3:6])
+        cstate = CoordinatorState(
+            next_inst=cstate.next_inst + b, crnd=cstate.crnd
+        )
+        block(outs[6])
+
+    return time_fn(round_)
+
+
+PATHS = (
+    ("baseline", bench_baseline),
+    ("per_acceptor", bench_per_acceptor),
+    ("jnp_fused", bench_jnp_fused),
+    ("pallas_fused", bench_pallas_fused),
+)
+
+
+def run(bursts=BURSTS) -> None:
+    full_sweep = tuple(bursts) == BURSTS
+    per_path = {}
+    for b in bursts:
+        for path, fn in PATHS:
+            if path == "baseline" and b > SCALAR_CAP:
+                # Python baseline is strictly O(msgs); extrapolating from the
+                # capped burst is exact enough and keeps the suite fast.
+                # (Recorded as skipped, not silently dropped.)
+                emit(f"wirepath/{path}/burst={b}", 0.0, "skipped (scalar cap)",
+                     path=path, burst=b, skipped=True)
+                continue
+            us = fn(b)
+            msgs = b / us * 1e6
+            per_path.setdefault(path, {})[b] = msgs
+            emit(
+                f"wirepath/{path}/burst={b}",
+                us,
+                f"{msgs:.0f} msg/s",
+                path=path,
+                burst=b,
+                msgs_per_s=msgs,
+                us_per_round=us,
+            )
+    # headline: fused speedup over the per-acceptor host loop at large burst
+    for b in bursts:
+        if b >= 1024 and b in per_path.get("pallas_fused", {}):
+            speed = per_path["pallas_fused"][b] / per_path["per_acceptor"][b]
+            emit(f"wirepath/speedup_pallas_vs_per_acceptor/burst={b}", 0.0,
+                 f"{speed:.1f}x", burst=b, speedup=speed)
+    if full_sweep:
+        write_json(
+            JSON_PATH,
+            meta={"backend": jax.default_backend(), "A": A, "V": V, "N": N},
+            prefix="wirepath/",
+        )
+    else:
+        # partial sweeps (--quick / CI smoke) must not clobber the committed
+        # perf-trajectory artifact with truncated data
+        print(f"# partial sweep: not rewriting {os.path.basename(JSON_PATH)}")
+
+
+if __name__ == "__main__":
+    bursts = (64, 256) if "--quick" in sys.argv else BURSTS
+    print("name,us_per_call,derived")
+    run(bursts)

@@ -1,15 +1,47 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, JSON perf trajectory."""
 from __future__ import annotations
 
+import json
+import platform
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
+RECORDS: List[Dict] = []
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
+    """Print one CSV row and append a machine-readable record.
+
+    ``extra`` keys (burst, path, msgs_per_s, ...) land verbatim in the JSON
+    record so later PRs can diff perf trajectories (see ``write_json``).
+    """
     ROWS.append((name, us_per_call, derived))
+    RECORDS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived, **extra})
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def write_json(path: str, meta: Optional[Dict] = None,
+               prefix: Optional[str] = None) -> None:
+    """Dump emitted records (optionally filtered by name prefix) as JSON.
+
+    The file is the perf trajectory artifact (e.g. ``BENCH_wirepath.json``):
+    subsequent PRs diff msgs/s against it, and ``make_report`` renders it.
+    """
+    rows = [r for r in RECORDS if prefix is None or r["name"].startswith(prefix)]
+    doc = {
+        "meta": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            **(meta or {}),
+        },
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(rows)} rows)")
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -11,6 +11,7 @@ import os
 from repro.analysis.roofline import from_record
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+WIREPATH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_wirepath.json")
 
 
 def fmt_bytes(b: float) -> str:
@@ -92,7 +93,39 @@ def variants_table() -> None:
     print()
 
 
+def wirepath_table() -> None:
+    """Render BENCH_wirepath.json (the perf trajectory artifact) as markdown.
+
+    The msgs/s column is what subsequent PRs diff (DESIGN.md §4).
+    """
+    if not os.path.exists(WIREPATH_JSON):
+        return
+    with open(WIREPATH_JSON) as f:
+        doc = json.load(f)
+    meta = doc.get("meta", {})
+    print(f"### Wire-path amortization curve (backend={meta.get('backend')}, "
+          f"A={meta.get('A')}, N={meta.get('N')})\n")
+    print("| path | burst | us/round | msgs/s |")
+    print("|---|---|---|---|")
+    for r in doc.get("rows", []):
+        if "speedup" in r:
+            continue
+        if r.get("skipped"):
+            print(f"| {r['path']} | {r['burst']} | — | skipped |")
+            continue
+        if "msgs_per_s" not in r:
+            continue
+        print(f"| {r['path']} | {r['burst']} | {r['us_per_round']:.0f} "
+              f"| {r['msgs_per_s']:,.0f} |")
+    speedups = [r for r in doc.get("rows", []) if "speedup" in r]
+    if speedups:
+        line = ", ".join(f"{r['speedup']:.1f}x @ {r['burst']}" for r in speedups)
+        print(f"\nPallas-fused over per-acceptor host loop: {line}")
+    print()
+
+
 if __name__ == "__main__":
     dryrun_table()
     roofline_table()
     variants_table()
+    wirepath_table()

@@ -11,6 +11,7 @@ import sys
 import time
 
 from . import (
+    bench_wirepath,
     fig2_utilization,
     fig7_end_to_end,
     fig7c_bottleneck_shift,
@@ -29,6 +30,7 @@ SUITES = [
     ("fig7c", fig7c_bottleneck_shift),
     ("fig7d", fig7d_replicated_kv),
     ("fig8", fig8_failure),
+    ("wirepath", bench_wirepath),
     ("roofline", roofline_report),
 ]
 

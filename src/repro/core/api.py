@@ -17,7 +17,6 @@ suppression at learners implement the paper's §3.1 failure-handling contract.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -51,7 +50,25 @@ class _Pending:
 
 
 class HardwareDataplane:
-    """The coordinator + acceptor array, executing as one jitted program."""
+    """The coordinator + acceptor array + learner dedup memory, executing as
+    single-dispatch device programs.
+
+    Two execution paths (DESIGN.md §3):
+
+      * ``pipeline()`` — the fused wire path: the whole Phase-2 round
+        (sequence -> all-A vote -> quorum -> ring dedup) as ONE program; the
+        Pallas megakernel ``kernels.wirepath.wirepath_round`` when
+        ``use_kernels``, else the jnp oracle ``batched.fused_round``.  All
+        protocol state stays resident in device memory across pump rounds.
+      * ``sequence()``/``vote()``/``prepare()`` — the staged path, used when
+        votes must surface as messages (per-learner fan-out, recovery,
+        software-coordinator failover).  Still one dispatch for the whole
+        acceptor array: the historical per-acceptor Python loop (and its
+        per-vote ``.at[aid].set`` full-stack rewrites) is gone.
+
+    Liveness is a device-resident runtime mask (``alive_mask``), so
+    ``kill_acceptor``/``revive_acceptor`` never trigger recompilation.
+    """
 
     def __init__(self, cfg: PaxosConfig, use_kernels: bool = False):
         self.cfg = cfg
@@ -62,96 +79,118 @@ class HardwareDataplane:
         self.stack: AcceptorState = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (cfg.n_acceptors,) + x.shape).copy(), one
         )
-        self.alive = [True] * cfg.n_acceptors
+        self.lstate = batched.LearnerState.init(cfg.n_instances, cfg.value_words)
+        self.alive = [True] * cfg.n_acceptors       # host mirror (introspection)
+        self.alive_mask = jnp.ones((cfg.n_acceptors,), jnp.bool_)
         self.use_kernels = use_kernels
+        # host mirror of the sequencer watermark — lets the kernel path check
+        # its block-alignment invariant without a device sync
+        self._next_inst_host = 0
+        self._seq_base: Optional[int] = None        # provenance hint for vote()
         if use_kernels:
             from repro.kernels import ops as kops
 
             self._seq = kops.coordinator_sequence
-            self._vote = kops.acceptor_phase2
+            self._fused_k = jax.jit(kops.fused_round, donate_argnums=(1, 2))
+            self._vote_all_k = jax.jit(
+                kops.acceptor_phase2_all, donate_argnums=(0,)
+            )
         else:
             self._seq = jax.jit(batched.coordinator_sequence)
-            self._vote = jax.jit(batched.acceptor_phase2, static_argnames=())
-        self._phase1 = jax.jit(batched.acceptor_phase1)
-        self._fused = None  # built lazily
+        self._fused = jax.jit(batched.fused_round, donate_argnums=(1, 2))
+        self._vote_all = jax.jit(batched.acceptor_phase2_all, donate_argnums=(0,))
+        self._prep_all = jax.jit(batched.acceptor_phase1_all, donate_argnums=(0,))
 
-    def _get_acceptor(self, aid: int) -> AcceptorState:
-        return jax.tree_util.tree_map(lambda x: x[aid], self.stack)
+    # -- wire-path invariants -------------------------------------------------
+    def _block(self, b: int) -> int:
+        from repro.kernels.wirepath import DEFAULT_BLOCK_B
 
-    def _set_acceptor(self, aid: int, st: AcceptorState) -> None:
-        self.stack = jax.tree_util.tree_map(
-            lambda x, y: x.at[aid].set(y), self.stack, st
+        return min(DEFAULT_BLOCK_B, b)
+
+    def _window_aligned(self, base: int, b: int) -> bool:
+        """True iff a contiguous window [base, base+b) satisfies the Pallas
+        ring-blocking invariants (BB | base, BB | B, BB | N, B <= N)."""
+        bb = self._block(b)
+        return (
+            b % bb == 0
+            and self.cfg.n_instances % bb == 0
+            and b <= self.cfg.n_instances
+            and base % bb == 0
         )
 
-    # -- fused fast path: whole Phase-2 round in ONE compiled program --------
-    def _build_fused(self):
-        a = self.cfg.n_acceptors
-        quorum = self.cfg.quorum
-
-        @functools.partial(jax.jit, donate_argnums=(0, 1))
-        def fused(cstate, stack, values, active, alive):
-            cstate, p2a = batched.coordinator_sequence(cstate, values, active)
-
-            def vote_one(st, aid):
-                return batched.acceptor_phase2(st, p2a, aid=aid)
-
-            stack, votes = jax.vmap(vote_one)(stack, jnp.arange(a))
-            # dead acceptors vote nothing and keep their old state
-            vt = jnp.where(alive[:, None], votes.msgtype, 7)  # MSG_REJECT
-            deliver, inst, win, value = batched.learner_quorum(
-                vt, votes.inst, votes.vrnd, votes.value, quorum
-            )
-            return cstate, stack, deliver, inst, value
-
-        return fused
-
+    # -- fused fast path: whole Phase-2 round in ONE device program ----------
     def pipeline(self, values: np.ndarray, active: np.ndarray):
-        """One dispatch: sequence + all acceptor votes + quorum decision.
+        """One dispatch: sequence + all acceptor votes + quorum + dedup.
 
         This is the CAANS wire path — consensus logic fused end-to-end below
-        the host boundary (DESIGN.md §2).  Returns host (deliver, inst, value).
+        the host boundary (DESIGN.md §3).  Returns host ``(fresh, inst,
+        value)`` where ``fresh`` masks non-duplicate deliveries.
         """
-        if self._fused is None:
-            self._fused = self._build_fused()
-        alive = jnp.asarray(self.alive)
-        self.cstate, self.stack, deliver, inst, value = self._fused(
-            self.cstate, self.stack, jnp.asarray(values), jnp.asarray(active), alive
+        b = values.shape[0]
+        use_k = self.use_kernels and self._window_aligned(self._next_inst_host, b)
+        fn = self._fused_k if use_k else self._fused
+        self.cstate, self.stack, self.lstate, fresh, inst, _win, value = fn(
+            self.cstate,
+            self.stack,
+            self.lstate,
+            jnp.asarray(values),
+            jnp.asarray(active),
+            self.alive_mask,
+            self.cfg.quorum,
         )
-        return np.asarray(deliver), np.asarray(inst), np.asarray(value)
+        self._next_inst_host += b
+        return np.asarray(fresh), np.asarray(inst), np.asarray(value)
 
     def kill_acceptor(self, aid: int) -> None:
         self.alive[aid] = False
+        self.alive_mask = self.alive_mask.at[aid].set(False)
 
     def revive_acceptor(self, aid: int) -> None:
         self.alive[aid] = True
+        self.alive_mask = self.alive_mask.at[aid].set(True)
 
+    # -- staged path (votes surface as messages) -----------------------------
     def sequence(self, values: np.ndarray, active: np.ndarray) -> MsgBatch:
+        self._seq_base = self._next_inst_host
         self.cstate, p2a = self._seq(
             self.cstate, jnp.asarray(values), jnp.asarray(active)
         )
+        self._next_inst_host += values.shape[0]
         return p2a
 
     def vote(self, p2a: MsgBatch) -> List[Optional[MsgBatch]]:
-        votes: List[Optional[MsgBatch]] = []
-        for aid in range(self.cfg.n_acceptors):
-            if not self.alive[aid]:
-                votes.append(None)
-                continue
-            st, v = self._vote(self._get_acceptor(aid), p2a, aid)
-            self._set_acceptor(aid, st)
-            votes.append(v)
-        return votes
+        """Phase-2 vote of the whole acceptor array, one dispatch.
+
+        Batches produced by ``sequence()`` (contiguous, block-aligned window)
+        go through the Pallas wire-path kernel when ``use_kernels``; anything
+        else (recovery singletons, software-coordinator batches at arbitrary
+        watermarks) takes the general jnp scatter path.  Dead acceptors come
+        back as ``None`` — their votes are never sent.
+        """
+        base, self._seq_base = self._seq_base, None
+        b = p2a.batch
+        use_k = (
+            self.use_kernels
+            and base is not None
+            and self._window_aligned(base, b)
+        )
+        fn = self._vote_all_k if use_k else self._vote_all
+        self.stack, votes = fn(self.stack, p2a, self.alive_mask)
+        return self._split(votes)
 
     def prepare(self, p1a: MsgBatch) -> List[Optional[MsgBatch]]:
-        outs: List[Optional[MsgBatch]] = []
-        for aid in range(self.cfg.n_acceptors):
-            if not self.alive[aid]:
-                outs.append(None)
-                continue
-            st, v = self._phase1(self._get_acceptor(aid), p1a, aid)
-            self._set_acceptor(aid, st)
-            outs.append(v)
-        return outs
+        self.stack, outs = self._prep_all(self.stack, p1a, self.alive_mask)
+        return self._split(outs)
+
+    def _split(self, stacked: MsgBatch) -> List[Optional[MsgBatch]]:
+        """Stacked [A, ...] message batches -> per-acceptor list, None when
+        dead (a crashed switch emits nothing)."""
+        return [
+            jax.tree_util.tree_map(lambda x, aid=aid: x[aid], stacked)
+            if self.alive[aid]
+            else None
+            for aid in range(self.cfg.n_acceptors)
+        ]
 
 
 class PaxosContext:
@@ -228,15 +267,17 @@ class PaxosContext:
         b = self.cfg.batch
         for i in range(0, len(submits), b):
             chunk = submits[i : i + b]
-            if self.fused:
+            if self.fused and not self.hw.use_kernels:
                 # right-size the burst (next pow2): a half-empty wire batch
                 # costs real dataplane time; the jnp path has no alignment
-                # requirement (the Pallas kernel path keeps 128-alignment)
+                # requirement
                 be = 8
                 while be < len(chunk):
                     be *= 2
                 be = min(be, b)
             else:
+                # kernel path: fixed wire batch, preserving the block-aligned
+                # window invariant the Pallas ring blocking relies on
                 be = b
             vals = np.full((be, self.cfg.value_words), 0, np.int32)
             active = np.zeros((be,), bool)
@@ -247,9 +288,9 @@ class PaxosContext:
             if self.fused and self._softco is None:
                 # the CAANS wire path: the whole Phase-2 round below the host
                 # boundary, one dispatch — votes never surface as messages
-                deliver, inst, value = self.hw.pipeline(vals, active)
-                for j in range(len(deliver)):
-                    if not deliver[j]:
+                fresh, inst, value = self.hw.pipeline(vals, active)
+                for j in range(len(fresh)):
+                    if not fresh[j]:
                         continue
                     raw = value[j].tobytes()
                     for lid in range(self.n_learners):
@@ -367,10 +408,21 @@ class PaxosContext:
     def restore_hardware_coordinator(self) -> None:
         if self._softco is None:
             return
+        nxt = int(self._softco.next_inst)
+        if self.hw.use_kernels:
+            # An arbitrary takeover watermark can break the kernel path's
+            # block-alignment invariant — and since bursts advance in block
+            # multiples it would never realign on its own, silently pinning
+            # the dataplane to the jnp fallback forever.  Burn forward to the
+            # next block boundary instead: the skipped instances are never
+            # proposed and are recoverable as no-ops (paper §3.1 gap fill).
+            bb = self.hw._block(self.cfg.batch)
+            nxt = -(-nxt // bb) * bb
         self.hw.cstate = CoordinatorState(
-            next_inst=jnp.int32(self._softco.next_inst),
+            next_inst=jnp.int32(nxt),
             crnd=jnp.int32(self._softco.crnd),
         )
+        self.hw._next_inst_host = nxt  # resync the host watermark mirror
         self._softco = None
 
     def _soft_sequence(self, vals: np.ndarray, active: np.ndarray) -> MsgBatch:
@@ -396,10 +448,16 @@ class PaxosContext:
         self._next_epoch += 1
         crnd = allocate_round(epoch, coordinator_id=2)
         b = self.cfg.batch
+        # Filler slots carry a contiguous inst window starting at the target:
+        # the vectorized acceptor scatter requires distinct ring slots per
+        # batch, and all-zero filler insts would collide with the recovered
+        # instance whenever inst % n_instances == 0 (slot-0 clobber).  The
+        # fillers' rnd stays NO_ROUND, so they never accept/promise anything.
+        window = jnp.arange(inst, inst + b, dtype=jnp.int32)
         p1a = MsgBatch.nop(b, self.cfg.value_words)
         p1a = p1a.replace(
             msgtype=p1a.msgtype.at[0].set(MSG_P1A),
-            inst=p1a.inst.at[0].set(inst),
+            inst=window,
             rnd=p1a.rnd.at[0].set(crnd),
         )
         promises = self.hw.prepare(p1a)
@@ -425,7 +483,7 @@ class PaxosContext:
         p2a = MsgBatch.nop(b, self.cfg.value_words)
         p2a = p2a.replace(
             msgtype=p2a.msgtype.at[0].set(MSG_P2A),
-            inst=p2a.inst.at[0].set(inst),
+            inst=window,  # distinct slots; fillers at NO_ROUND never accept
             rnd=p2a.rnd.at[0].set(crnd),
             value=p2a.value.at[0].set(jnp.asarray(value_words)),
         )

@@ -134,6 +134,71 @@ def acceptor_phase1(
 
 
 # ---------------------------------------------------------------------------
+# Acceptor array — all 2f+1 acceptors in one dispatch (SoA stacked state)
+# ---------------------------------------------------------------------------
+def acceptor_phase2_all(
+    stack: AcceptorState, msgs: MsgBatch, alive: jax.Array
+) -> Tuple[AcceptorState, MsgBatch]:
+    """Phase-2 vote of the *whole* acceptor array on one P2A batch.
+
+    ``stack`` holds the A register files stacked on a leading axis; ``alive``
+    is a bool[A] runtime mask.  Dead acceptors neither vote (their rows come
+    back MSG_REJECT) nor mutate their register file — exactly the semantics
+    of a crashed switch: its BRAM is frozen and it emits nothing.
+
+    Inherits ``acceptor_phase2``'s vectorized-scatter precondition: batch
+    positions must hit *distinct* ring slots (``inst % N`` pairwise
+    distinct), or slot updates race.  Use ``acceptor_sequential`` for
+    adversarial duplicate-slot traffic.
+
+    One dispatch replaces the historical per-acceptor Python loop (which
+    rewrote the full stacked state with ``.at[aid].set`` per acceptor).
+    Returns (stack', votes) with every vote field shaped [A, ...].
+    """
+    a = stack.rnd.shape[0]
+
+    def vote_one(st, aid, alv):
+        new_st, votes = acceptor_phase2(st, msgs, aid=aid)
+        # crashed acceptor: register file frozen, and its vote row is exactly
+        # what a pure rejecter would emit (so the kernel path can reproduce
+        # it without special cases)
+        slots = msgs.inst % st.n_instances
+        votes = votes.replace(
+            msgtype=jnp.where(alv, votes.msgtype, MSG_REJECT).astype(jnp.int32),
+            rnd=jnp.where(alv, votes.rnd, st.rnd[slots]),
+            vrnd=jnp.where(alv, votes.vrnd, st.vrnd[slots]),
+            value=jnp.where(alv, votes.value, 0),
+        )
+        st = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(alv, n, o), new_st, st
+        )
+        return st, votes
+
+    return jax.vmap(vote_one)(stack, jnp.arange(a), alive)
+
+
+def acceptor_phase1_all(
+    stack: AcceptorState, msgs: MsgBatch, alive: jax.Array
+) -> Tuple[AcceptorState, MsgBatch]:
+    """Phase-1 promise of the whole acceptor array (recovery/takeover path)."""
+    a = stack.rnd.shape[0]
+
+    def prep_one(st, aid, alv):
+        new_st, out = acceptor_phase1(st, msgs, aid=aid)
+        slots = msgs.inst % st.n_instances
+        out = out.replace(
+            msgtype=jnp.where(alv, out.msgtype, MSG_REJECT).astype(jnp.int32),
+            rnd=jnp.where(alv, out.rnd, st.rnd[slots]),
+        )
+        st = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(alv, n, o), new_st, st
+        )
+        return st, out
+
+    return jax.vmap(prep_one)(stack, jnp.arange(a), alive)
+
+
+# ---------------------------------------------------------------------------
 # Acceptor — exact sequential semantics (any batch, incl. duplicate slots)
 # ---------------------------------------------------------------------------
 def acceptor_sequential(
@@ -217,13 +282,22 @@ def learner_quorum(
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class LearnerState:
-    """Dedup memory: delivered bitmap + decided values over the instance ring."""
+    """Dedup memory over the instance ring: delivered mask (0/1 int32, the
+    kernel-native layout), the absolute instance last decided into each slot,
+    and the decided value.
 
-    delivered: jax.Array  # bool[N]
+    Tracking the absolute ``inst`` per slot makes the dedup *ring-correct*:
+    re-delivery of the same instance is suppressed, but a later instance
+    reusing the slot after wraparound is fresh again (bounded memory, paper
+    Table 3's 65,535-instance BRAM).
+    """
+
+    delivered: jax.Array  # int32[N]  0/1 mask
+    inst: jax.Array       # int32[N]  absolute instance decided into the slot
     value: jax.Array      # int32[N, V]
 
     def tree_flatten(self):
-        return ((self.delivered, self.value), None)
+        return ((self.delivered, self.inst, self.value), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -232,7 +306,8 @@ class LearnerState:
     @classmethod
     def init(cls, n_instances: int, value_words: int) -> "LearnerState":
         return cls(
-            delivered=jnp.zeros((n_instances,), jnp.bool_),
+            delivered=jnp.zeros((n_instances,), jnp.int32),
+            inst=jnp.full((n_instances,), -1, jnp.int32),
             value=jnp.zeros((n_instances, value_words), jnp.int32),
         )
 
@@ -246,13 +321,48 @@ def learner_update(
     """Record deliveries; returns mask of *fresh* (not duplicate) deliveries."""
     n = lstate.delivered.shape[0]
     slots = inst % n
-    fresh = deliver & ~lstate.delivered[slots]
+    dup = (lstate.delivered[slots] != 0) & (lstate.inst[slots] == inst)
+    fresh = deliver & ~dup
     lstate = LearnerState(
         delivered=lstate.delivered.at[slots].set(
-            lstate.delivered[slots] | deliver, mode="drop"
+            lstate.delivered[slots] | deliver.astype(jnp.int32), mode="drop"
+        ),
+        inst=lstate.inst.at[slots].set(
+            jnp.where(fresh, inst, lstate.inst[slots]), mode="drop"
         ),
         value=lstate.value.at[slots].set(
             jnp.where(fresh[:, None], value, lstate.value[slots]), mode="drop"
         ),
     )
     return lstate, fresh
+
+
+# ---------------------------------------------------------------------------
+# Fused wire path — one Phase-2 round, sequencer -> acceptor array -> learner
+# ---------------------------------------------------------------------------
+def fused_round(
+    cstate: CoordinatorState,
+    stack: AcceptorState,
+    lstate: LearnerState,
+    values: jax.Array,    # int32[B, V]
+    active: jax.Array,    # bool[B]
+    alive: jax.Array,     # bool[A]
+    quorum: int | jax.Array,
+) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+           jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The CAANS wire path as one jnp program: coordinator sequencing, the
+    whole acceptor array's Phase-2 vote, learner quorum count, and ring-dedup
+    update — no host round-trips between the stages.
+
+    This is the semantic oracle (and CPU fallback) for the Pallas megakernel
+    ``repro.kernels.wirepath.wirepath_round``; the two must agree bit-for-bit
+    (DESIGN.md §3).  Returns
+    ``(cstate', stack', lstate', fresh[B], inst[B], win_vrnd[B], value[B,V])``.
+    """
+    cstate, p2a = coordinator_sequence(cstate, values, active)
+    stack, votes = acceptor_phase2_all(stack, p2a, alive)
+    deliver, inst, win, value = learner_quorum(
+        votes.msgtype, votes.inst, votes.vrnd, votes.value, quorum
+    )
+    lstate, fresh = learner_update(lstate, deliver, inst, value)
+    return cstate, stack, lstate, fresh, inst, win, value

@@ -176,8 +176,16 @@ class Learner:
         return None
 
     def gaps(self, upto: Optional[int] = None) -> List[int]:
-        """Instances below the watermark that this learner has not delivered."""
-        if not self.delivered:
-            return []
-        hi = max(self.delivered) if upto is None else upto
+        """Instances below the watermark that this learner has not delivered.
+
+        With an explicit ``upto`` watermark the answer is defined even when
+        nothing has been delivered yet: every instance in ``[0, upto]`` is a
+        gap.  Only the implicit watermark (max delivered) needs deliveries.
+        """
+        if upto is None:
+            if not self.delivered:
+                return []
+            hi = max(self.delivered)
+        else:
+            hi = upto
         return [i for i in range(hi + 1) if i not in self.delivered]

@@ -13,12 +13,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.batched import LearnerState
 from repro.core.types import AcceptorState, CoordinatorState, MsgBatch
 
 from . import acceptor as _acceptor
 from . import coordinator as _coordinator
 from . import digest as _digest
 from . import learner as _learner
+from . import wirepath as _wirepath
 
 NO_ROUND = -1
 INTERPRET = jax.default_backend() == "cpu"
@@ -90,6 +92,92 @@ def learner_quorum(
     b = vote_inst.shape[1]
     inst = vote_inst[0]  # position-aligned batches: inst identical across A
     return deliver.astype(bool), inst, win, value
+
+
+def fused_round(
+    cstate: CoordinatorState,
+    stack: AcceptorState,
+    lstate: LearnerState,
+    values: jax.Array,
+    active: jax.Array,
+    alive: jax.Array,
+    quorum: int | jax.Array,
+) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+           jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Kernel-backed drop-in for ``batched.fused_round`` — the whole Phase-2
+    round in one ``pallas_call`` (DESIGN.md §3).
+
+    ``active`` is accepted for signature parity but never reaches the device:
+    sequenced NOP fillers vote identically to P2As, so on the wire path the
+    active mask only matters to the application layer (which discards fillers
+    by value).  Precondition: ``cstate.next_inst`` is block-aligned — the
+    invariant ``HardwareDataplane`` maintains (and checks host-side).
+    """
+    del active  # sequenced fillers vote like P2As; see docstring
+    b = values.shape[0]
+    (st_rnd, st_vrnd, st_val, ldel, linst, lval, fresh, win, value) = (
+        _wirepath.wirepath_round(
+            cstate.next_inst,
+            cstate.crnd,
+            jnp.asarray(quorum, jnp.int32),
+            jnp.asarray(alive, jnp.int32),
+            stack.rnd,
+            stack.vrnd,
+            stack.value,
+            lstate.delivered,
+            lstate.inst,
+            lstate.value,
+            values,
+            interpret=INTERPRET,
+        )
+    )
+    inst = cstate.next_inst + jnp.arange(b, dtype=jnp.int32)
+    new_c = CoordinatorState(
+        next_inst=cstate.next_inst + b, crnd=cstate.crnd
+    )
+    return (
+        new_c,
+        AcceptorState(st_rnd, st_vrnd, st_val),
+        LearnerState(ldel, linst, lval),
+        fresh != 0,
+        inst,
+        win,
+        value,
+    )
+
+
+def acceptor_phase2_all(
+    stack: AcceptorState, msgs: MsgBatch, alive: jax.Array
+) -> Tuple[AcceptorState, MsgBatch]:
+    """Kernel-backed drop-in for ``batched.acceptor_phase2_all``.
+
+    Requires the contiguous-window invariant (``msgs.inst == base + iota(B)``
+    with block-aligned ``base``); the API layer falls back to the jnp scatter
+    path when it cannot guarantee it.
+    """
+    base = msgs.inst[0]
+    (st_rnd, st_vrnd, st_val, vt, vr, vv, vs, vval) = (
+        _wirepath.acceptor_vote_all_window(
+            stack.rnd,
+            stack.vrnd,
+            stack.value,
+            base,
+            jnp.asarray(alive, jnp.int32),
+            msgs.msgtype,
+            msgs.rnd,
+            msgs.value,
+            interpret=INTERPRET,
+        )
+    )
+    votes = MsgBatch(
+        msgtype=vt,
+        inst=jnp.broadcast_to(msgs.inst[None, :], vt.shape),
+        rnd=vr,
+        vrnd=vv,
+        swid=vs,
+        value=vval,
+    )
+    return AcceptorState(st_rnd, st_vrnd, st_val), votes
 
 
 def digest(x: jax.Array) -> jax.Array:

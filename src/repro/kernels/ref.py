@@ -82,6 +82,56 @@ def learner_quorum_window(
     return deliver, win, value
 
 
+def wirepath_round(
+    next_inst, crnd, quorum, alive,
+    st_rnd, st_vrnd, st_val, ldel, linst, lval, values,
+) -> Tuple[jax.Array, ...]:
+    """Oracle for kernels.wirepath.wirepath_round — delegates to the jnp
+    fused round so oracle and system share one source of protocol truth."""
+    b = values.shape[0]
+    cstate = batched.CoordinatorState(
+        next_inst=jnp.asarray(next_inst, jnp.int32),
+        crnd=jnp.asarray(crnd, jnp.int32),
+    )
+    stack = AcceptorState(st_rnd, st_vrnd, st_val)
+    lstate = batched.LearnerState(ldel, linst, lval)
+    active = jnp.ones((b,), bool)
+    _, stack, lstate, fresh, _, win, value = batched.fused_round(
+        cstate, stack, lstate, values, active,
+        jnp.asarray(alive).astype(bool), jnp.asarray(quorum, jnp.int32),
+    )
+    return (
+        stack.rnd, stack.vrnd, stack.value,
+        lstate.delivered, lstate.inst, lstate.value,
+        fresh.astype(jnp.int32), win, value,
+    )
+
+
+def acceptor_vote_all_window(
+    st_rnd, st_vrnd, st_val, base, alive, msgtype, msg_rnd, msg_val
+) -> Tuple[jax.Array, ...]:
+    """Oracle for kernels.wirepath.acceptor_vote_all_window."""
+    n = st_rnd.shape[1]
+    b = msgtype.shape[0]
+    inst = (jnp.asarray(base, jnp.int32) + jnp.arange(b, dtype=jnp.int32)) % n
+    msgs = MsgBatch(
+        msgtype=msgtype,
+        inst=inst,
+        rnd=msg_rnd,
+        vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
+        swid=jnp.zeros((b,), jnp.int32),
+        value=msg_val,
+    )
+    stack = AcceptorState(st_rnd, st_vrnd, st_val)
+    stack, votes = batched.acceptor_phase2_all(
+        stack, msgs, jnp.asarray(alive).astype(bool)
+    )
+    return (
+        stack.rnd, stack.vrnd, stack.value,
+        votes.msgtype, votes.rnd, votes.vrnd, votes.swid, votes.value,
+    )
+
+
 def digest(x: jax.Array) -> jax.Array:
     """Oracle for kernels.digest.digest (including padding semantics)."""
     flat = x.reshape(-1)

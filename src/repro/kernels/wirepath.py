@@ -1,0 +1,370 @@
+"""Pallas TPU megakernel: the fused CAANS wire path.
+
+One ``pallas_call`` executes a *complete* Phase-2 round — coordinator
+sequencing, the Phase-2 vote of all ``A = 2f+1`` acceptors against the
+stacked ``(A, N)`` instance ring, the learner quorum count, and the
+``LearnerState`` ring-dedup update.  This is the TPU analogue of the paper's
+core claim: once consensus logic lives below the host boundary, a Paxos round
+costs barely more than forwarding the packets (PAPER.md; DESIGN.md §3).
+
+Layout (DESIGN.md §3):
+
+    grid = (B // BB,)            # one step per batch block — nothing else
+    stacked rings  (A, N)[, V]   --BlockSpec (A, BB)-->   VMEM, in-place
+    learner ring   (N,)[, V]     --BlockSpec (BB,)  -->   VMEM, in-place
+    burst values   (B, V)        --BlockSpec (BB, V)-->   VMEM
+    fresh/win/value outputs      <--                      VMEM
+
+The acceptor axis rides the *sublane* dimension of one block: a single grid
+step loads every acceptor's ring window, votes all of them in-register, and
+reduces the quorum count straight down axis 0 — the entire round for a batch
+block is one load -> VREG compare/select -> reduce -> store pass, with no
+inner acceptor loop anywhere (host or grid).  All five state arrays are
+passed through ``input_output_aliases``: coordinator/acceptor/learner state
+never round-trips through host memory between pump rounds.
+
+In-kernel sequencing collapses to round-stamping: the window
+``[next_inst, next_inst + B)`` is implied by the grid, and sequenced NOP
+fillers vote exactly like P2As (the application discards them by value), so
+no per-message msgtype materializes on the fast path.
+
+Invariants (maintained by ``core.api.HardwareDataplane``, asserted where
+shapes are static): ``BB | B``, ``BB | N``, ``B <= N``, and the window base
+``next_inst`` is BB-aligned.  Liveness is a *runtime* input — the ``alive``
+mask rides in scalar-prefetch SMEM, so killing/reviving an acceptor never
+recompiles the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.types import MSG_NOP, MSG_P2A, MSG_P2B, MSG_REJECT
+
+NO_ROUND = -1
+
+# Messages per grid step; 128 is the int32 lane width.
+DEFAULT_BLOCK_B = 128
+
+
+def _lane_iota(bb: int) -> jax.Array:
+    # 1-D iota via 2-D broadcasted_iota (TPU requires >= 2D iota)
+    return jax.lax.broadcasted_iota(jnp.int32, (bb, 1), 0)[:, 0]
+
+
+def _alive_col(alive_ref, a: int) -> jax.Array:
+    # scalar-prefetch liveness -> (A, 1) vector mask (A is static)
+    return jnp.stack([alive_ref[i] for i in range(a)])[:, None] != 0
+
+
+# ---------------------------------------------------------------------------
+# The fused round megakernel
+# ---------------------------------------------------------------------------
+def _wirepath_kernel(
+    # scalar prefetch (SMEM)
+    ni_ref,         # int32[1]  next_inst: absolute window base, BB-aligned
+    crnd_ref,       # int32[1]  coordinator round
+    q_ref,          # int32[1]  quorum (f+1)
+    alive_ref,      # int32[A]  runtime liveness mask
+    # inputs (VMEM tiles)
+    values_ref,     # int32[BB, V]     burst values
+    st_rnd_ref,     # int32[A, BB]     acceptor ring blocks (aliased out)
+    st_vrnd_ref,    # int32[A, BB]
+    st_val_ref,     # int32[A, BB, V]
+    ldel_ref,       # int32[BB]        learner ring block (aliased out)
+    linst_ref,      # int32[BB]
+    lval_ref,       # int32[BB, V]
+    # outputs
+    o_rnd_ref,      # int32[A, BB]
+    o_vrnd_ref,     # int32[A, BB]
+    o_val_ref,      # int32[A, BB, V]
+    o_ldel_ref,     # int32[BB]
+    o_linst_ref,    # int32[BB]
+    o_lval_ref,     # int32[BB, V]
+    fresh_ref,      # int32[BB]  out: fresh (non-duplicate) delivery mask
+    win_ref,        # int32[BB]  out: winning vrnd (NO_ROUND if none)
+    value_ref,      # int32[BB, V]  out: decided value
+):
+    i = pl.program_id(0)
+    a, bb = st_rnd_ref.shape
+
+    crnd = crnd_ref[0]
+    mval = values_ref[...]
+    alive = _alive_col(alive_ref, a)                      # (A, 1)
+
+    # -- the acceptor array votes (Phase 2A -> 2B), all A at once ------------
+    cur_rnd = st_rnd_ref[...]                             # (A, BB)
+    cur_vrnd = st_vrnd_ref[...]
+    cur_val = st_val_ref[...]
+    accept = alive & (crnd >= cur_rnd)                    # (A, BB)
+
+    o_rnd_ref[...] = jnp.where(accept, crnd, cur_rnd)
+    o_vrnd_ref[...] = jnp.where(accept, crnd, cur_vrnd)
+    o_val_ref[...] = jnp.where(accept[:, :, None], mval[None], cur_val)
+
+    # -- learner quorum: reduce straight down the acceptor axis --------------
+    vote_vrnd = jnp.where(accept, crnd, NO_ROUND)         # (A, BB)
+    win = jnp.max(vote_vrnd, axis=0)                      # (BB,)
+    agree = accept & (vote_vrnd == win[None, :])          # (A, BB)
+    count = jnp.sum(agree.astype(jnp.int32), axis=0)      # (BB,)
+    deliver = count >= q_ref[0]
+    # decided value: first agreeing acceptor's vote, as a one-hot contraction
+    first = agree & (jnp.cumsum(agree.astype(jnp.int32), axis=0) == 1)
+    vote_val = jnp.where(accept[:, :, None], mval[None], 0)
+    value = jnp.sum(first.astype(jnp.int32)[:, :, None] * vote_val, axis=0)
+
+    # -- ring dedup (LearnerState), in place ---------------------------------
+    inst = ni_ref[0] + i * bb + _lane_iota(bb)
+    dup = (ldel_ref[...] != 0) & (linst_ref[...] == inst)
+    fresh = deliver & ~dup
+    o_ldel_ref[...] = ldel_ref[...] | deliver.astype(jnp.int32)
+    o_linst_ref[...] = jnp.where(fresh, inst, linst_ref[...])
+    o_lval_ref[...] = jnp.where(fresh[:, None], value, lval_ref[...])
+
+    fresh_ref[...] = fresh.astype(jnp.int32)
+    win_ref[...] = win
+    value_ref[...] = value
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def wirepath_round(
+    next_inst: jax.Array,   # int32[]  absolute window base (BB-aligned)
+    crnd: jax.Array,        # int32[]
+    quorum: jax.Array,      # int32[]
+    alive: jax.Array,       # int32[A] (0/1)
+    st_rnd: jax.Array,      # int32[A, N]   stacked acceptor rings
+    st_vrnd: jax.Array,     # int32[A, N]
+    st_val: jax.Array,      # int32[A, N, V]
+    ldel: jax.Array,        # int32[N]      learner ring
+    linst: jax.Array,       # int32[N]
+    lval: jax.Array,        # int32[N, V]
+    values: jax.Array,      # int32[B, V]   burst values
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """One fused Phase-2 round; single dispatch, state resident in place.
+
+    Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
+    fresh[B], win_vrnd[B], value[B, V])``.
+    """
+    a, n = st_rnd.shape
+    b, v = values.shape
+    bb = min(block_b, b)
+    assert b % bb == 0, (b, bb)
+    assert n % bb == 0, (n, bb)
+    assert b <= n, "burst may not lap the instance ring"
+    nb_ring = n // bb
+    grid = (b // bb,)
+
+    def ring1(i, ni_ref, *_):
+        return ((ni_ref[0] // bb + i) % nb_ring,)
+
+    def ring2(i, ni_ref, *_):
+        return ((ni_ref[0] // bb + i) % nb_ring, 0)
+
+    def stack2(i, ni_ref, *_):
+        return (0, (ni_ref[0] // bb + i) % nb_ring)
+
+    def stack3(i, ni_ref, *_):
+        return (0, (ni_ref[0] // bb + i) % nb_ring, 0)
+
+    def batch1(i, *_):
+        return (i,)
+
+    def batch2(i, *_):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, v), batch2),       # values
+            pl.BlockSpec((a, bb), stack2),       # st_rnd
+            pl.BlockSpec((a, bb), stack2),       # st_vrnd
+            pl.BlockSpec((a, bb, v), stack3),    # st_val
+            pl.BlockSpec((bb,), ring1),          # ldel
+            pl.BlockSpec((bb,), ring1),          # linst
+            pl.BlockSpec((bb, v), ring2),        # lval
+        ],
+        out_specs=[
+            pl.BlockSpec((a, bb), stack2),       # st_rnd'
+            pl.BlockSpec((a, bb), stack2),       # st_vrnd'
+            pl.BlockSpec((a, bb, v), stack3),    # st_val'
+            pl.BlockSpec((bb,), ring1),          # ldel'
+            pl.BlockSpec((bb,), ring1),          # linst'
+            pl.BlockSpec((bb, v), ring2),        # lval'
+            pl.BlockSpec((bb,), batch1),         # fresh
+            pl.BlockSpec((bb,), batch1),         # win_vrnd
+            pl.BlockSpec((bb, v), batch2),       # value
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((a, n), jnp.int32),
+        jax.ShapeDtypeStruct((a, n), jnp.int32),
+        jax.ShapeDtypeStruct((a, n, v), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n, v), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b, v), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        _wirepath_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        # all five state arrays update in place: inputs 5..10 (after the 4
+        # scalar-prefetch args) alias outputs 0..5 — device-resident state
+        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5},
+        interpret=interpret,
+    )
+    ni = jnp.asarray(next_inst, jnp.int32).reshape((1,))
+    cr = jnp.asarray(crnd, jnp.int32).reshape((1,))
+    q = jnp.asarray(quorum, jnp.int32).reshape((1,))
+    al = jnp.asarray(alive, jnp.int32)
+    return tuple(
+        fn(ni, cr, q, al, values, st_rnd, st_vrnd, st_val, ldel, linst, lval)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Staged variant: all-acceptor vote with per-acceptor vote output
+# ---------------------------------------------------------------------------
+def _vote_all_kernel(
+    base_ref,       # int32[1]  window base slot (BB-aligned)
+    alive_ref,      # int32[A]
+    msgtype_ref,    # int32[BB]
+    msg_rnd_ref,    # int32[BB]
+    msg_val_ref,    # int32[BB, V]
+    st_rnd_ref,     # int32[A, BB]  (aliased out)
+    st_vrnd_ref,    # int32[A, BB]
+    st_val_ref,     # int32[A, BB, V]
+    o_rnd_ref,      # int32[A, BB]
+    o_vrnd_ref,     # int32[A, BB]
+    o_val_ref,      # int32[A, BB, V]
+    vt_ref,         # int32[A, BB]  vote msgtype
+    vr_ref,         # int32[A, BB]  vote rnd
+    vv_ref,         # int32[A, BB]  vote vrnd
+    vs_ref,         # int32[A, BB]  vote swid
+    vval_ref,       # int32[A, BB, V]
+):
+    a, bb = st_rnd_ref.shape
+    msgtype = msgtype_ref[...]
+    mrnd = msg_rnd_ref[...]
+    mval = msg_val_ref[...]
+    cur_rnd = st_rnd_ref[...]
+    cur_vrnd = st_vrnd_ref[...]
+    cur_val = st_val_ref[...]
+
+    alive = _alive_col(alive_ref, a)                             # (A, 1)
+    is_p2 = (msgtype == MSG_P2A) | (msgtype == MSG_NOP)          # (BB,)
+    accept = alive & is_p2[None, :] & (mrnd[None, :] >= cur_rnd)  # (A, BB)
+
+    o_rnd_ref[...] = jnp.where(accept, mrnd[None, :], cur_rnd)
+    o_vrnd_ref[...] = jnp.where(accept, mrnd[None, :], cur_vrnd)
+    o_val_ref[...] = jnp.where(accept[:, :, None], mval[None], cur_val)
+
+    vt_ref[...] = jnp.where(accept, MSG_P2B, MSG_REJECT).astype(jnp.int32)
+    vr_ref[...] = jnp.where(accept, mrnd[None, :], cur_rnd)
+    vv_ref[...] = jnp.where(accept, mrnd[None, :], cur_vrnd)
+    vs_ref[...] = jax.lax.broadcasted_iota(jnp.int32, (a, bb), 0)
+    vval_ref[...] = jnp.where(accept[:, :, None], mval[None], 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def acceptor_vote_all_window(
+    st_rnd: jax.Array,      # int32[A, N]
+    st_vrnd: jax.Array,     # int32[A, N]
+    st_val: jax.Array,      # int32[A, N, V]
+    base: jax.Array,        # int32[]  window base, BB-aligned
+    alive: jax.Array,       # int32[A]
+    msgtype: jax.Array,     # int32[B]
+    msg_rnd: jax.Array,     # int32[B]
+    msg_val: jax.Array,     # int32[B, V]
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Whole-array Phase-2 vote on a contiguous window, one dispatch.
+
+    The staged sibling of ``wirepath_round`` for when votes must surface as
+    messages (per-learner fan-out over SimNet).  Returns
+    ``(st_rnd', st_vrnd', st_val', vote_type[A,B], vote_rnd[A,B],
+    vote_vrnd[A,B], vote_swid[A,B], vote_val[A,B,V])``.
+    """
+    a, n = st_rnd.shape
+    b, v = msg_val.shape
+    bb = min(block_b, b)
+    assert b % bb == 0, (b, bb)
+    assert n % bb == 0, (n, bb)
+    assert b <= n, "burst may not lap the instance ring"
+    nb_ring = n // bb
+    grid = (b // bb,)
+
+    def stack2(i, base_ref, *_):
+        return (0, (base_ref[0] // bb + i) % nb_ring)
+
+    def stack3(i, base_ref, *_):
+        return (0, (base_ref[0] // bb + i) % nb_ring, 0)
+
+    def vote2(i, *_):
+        return (0, i)
+
+    def vote3(i, *_):
+        return (0, i, 0)
+
+    def batch1(i, *_):
+        return (i,)
+
+    def batch2(i, *_):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), batch1),         # msgtype
+            pl.BlockSpec((bb,), batch1),         # msg_rnd
+            pl.BlockSpec((bb, v), batch2),       # msg_val
+            pl.BlockSpec((a, bb), stack2),       # st_rnd
+            pl.BlockSpec((a, bb), stack2),       # st_vrnd
+            pl.BlockSpec((a, bb, v), stack3),    # st_val
+        ],
+        out_specs=[
+            pl.BlockSpec((a, bb), stack2),       # st_rnd'
+            pl.BlockSpec((a, bb), stack2),       # st_vrnd'
+            pl.BlockSpec((a, bb, v), stack3),    # st_val'
+            pl.BlockSpec((a, bb), vote2),        # vote_type
+            pl.BlockSpec((a, bb), vote2),        # vote_rnd
+            pl.BlockSpec((a, bb), vote2),        # vote_vrnd
+            pl.BlockSpec((a, bb), vote2),        # vote_swid
+            pl.BlockSpec((a, bb, v), vote3),     # vote_val
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((a, n), jnp.int32),
+        jax.ShapeDtypeStruct((a, n), jnp.int32),
+        jax.ShapeDtypeStruct((a, n, v), jnp.int32),
+        jax.ShapeDtypeStruct((a, b), jnp.int32),
+        jax.ShapeDtypeStruct((a, b), jnp.int32),
+        jax.ShapeDtypeStruct((a, b), jnp.int32),
+        jax.ShapeDtypeStruct((a, b), jnp.int32),
+        jax.ShapeDtypeStruct((a, b, v), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        _vote_all_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        # stacked rings in place: inputs 5,6,7 alias outputs 0,1,2
+        input_output_aliases={5: 0, 6: 1, 7: 2},
+        interpret=interpret,
+    )
+    base = jnp.asarray(base, jnp.int32).reshape((1,))
+    al = jnp.asarray(alive, jnp.int32)
+    return tuple(fn(base, al, msgtype, msg_rnd, msg_val, st_rnd, st_vrnd, st_val))

@@ -2,7 +2,8 @@
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import FaultSpec, PaxosConfig, PaxosContext, SimNet
 

@@ -5,7 +5,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import batched
 from repro.core.paxos import Acceptor, Msg

@@ -11,8 +11,10 @@ concurrent coordinators):
 """
 from __future__ import annotations
 
-import hypothesis
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import FaultSpec, PaxosConfig, PaxosContext, SimNet, SoftwarePaxos
 from repro.core.paxos import Acceptor, Coordinator, Learner, Msg

@@ -1,0 +1,274 @@
+"""Adversarial parity: the fused wire path vs the scalar ``paxos.py`` oracle.
+
+Drives randomized multi-round schedules through BOTH fused wire-path
+implementations — the jnp ``batched.fused_round`` and the Pallas megakernel
+``kernels.wirepath.wirepath_round`` (interpret mode) — and checks them
+bit-for-bit against the scalar role state machines of ``core.paxos``:
+``Coordinator.on_submit`` -> ``Acceptor.on_p2a`` per live acceptor ->
+``Learner.on_p2b`` quorum, plus a ring-dedup mirror of ``LearnerState``.
+
+Schedules include dead/revived acceptors mid-stream (frozen register files),
+coordinator round bumps (takeover-style re-proposal over already-voted
+slots, i.e. duplicate instances at the slot level), and enough rounds to
+wrap the instance ring several times at the ``n_instances`` boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched
+from repro.core.paxos import Acceptor, Coordinator, Learner, Msg
+from repro.core.types import MSG_P2A, MSG_P2B, AcceptorState, CoordinatorState
+
+from repro.kernels import wirepath
+
+NO_ROUND = -1
+
+
+class _ScalarWirePath:
+    """The scalar-oracle mirror of one fused Phase-2 round.
+
+    Sequencing, voting and quorum counting are the unmodified ``core.paxos``
+    roles; only the bounded dedup memory (the ring) is modelled here, since
+    the scalar Learner's dict is unbounded by construction.
+    """
+
+    def __init__(self, n_acceptors: int, n_instances: int):
+        self.n = n_instances
+        self.co = Coordinator(cid=0, n_instances=n_instances)
+        self.acceptors = [
+            Acceptor(aid=i, n_instances=n_instances) for i in range(n_acceptors)
+        ]
+        self.learner = Learner(lid=0, n_acceptors=n_acceptors)
+        # LearnerState ring mirror: slot -> (inst, value)
+        self.ring: dict = {}
+
+    def round(self, values: np.ndarray, alive: np.ndarray):
+        b, v = values.shape
+        fresh = np.zeros((b,), bool)
+        win = np.full((b,), NO_ROUND, np.int32)
+        out_val = np.zeros((b, v), np.int32)
+        for j in range(b):
+            p2a = self.co.on_submit(Msg(5, value=values[j]))
+            votes = []
+            for aid, acc in enumerate(self.acceptors):
+                if not alive[aid]:
+                    continue  # crashed switch: BRAM frozen, emits nothing
+                out = acc.on_p2a(
+                    Msg(MSG_P2A, inst=p2a.inst, rnd=p2a.rnd, value=values[j])
+                )
+                if out.msgtype == MSG_P2B:
+                    votes.append((aid, out))
+            decided = None
+            for aid, out in votes:
+                d = self.learner.on_p2b(
+                    Msg(MSG_P2B, inst=out.inst, rnd=out.rnd, vrnd=out.vrnd,
+                        swid=aid, value=out.value)
+                )
+                if d is not None:
+                    decided = d
+            if decided is not None:
+                win[j] = decided.rnd
+                out_val[j] = decided.value
+                slot = decided.inst % self.n
+                prev = self.ring.get(slot)
+                if prev is None or prev[0] != decided.inst:
+                    fresh[j] = True
+                    self.ring[slot] = (decided.inst, decided.value.copy())
+        return fresh, win, out_val
+
+
+def _mk_device_state(a: int, n: int, v: int):
+    one = AcceptorState.init(n, v)
+    stack = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (a,) + x.shape).copy(), one
+    )
+    return (
+        CoordinatorState.init(),
+        stack,
+        batched.LearnerState.init(n, v),
+    )
+
+
+def _schedule(seed: int, rounds: int, a: int):
+    """Random alive masks + round bumps; at least quorum alive most rounds."""
+    rng = np.random.default_rng(seed)
+    sched = []
+    crnd = 0
+    for _ in range(rounds):
+        alive = rng.random(a) > 0.25
+        if rng.random() < 0.2:
+            crnd += int(rng.integers(1, 3))
+        sched.append((alive, crnd))
+    return sched
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("n,b,v,a", [(256, 32, 4, 3), (128, 64, 2, 5)])
+def test_fused_round_matches_scalar_oracle(seed, n, b, v, a):
+    """Multi-round randomized schedule, ring wraps several times."""
+    rng = np.random.default_rng(seed)
+    rounds = 2 * n // b + 3  # guarantees ring wraparound at the N boundary
+    quorum = a // 2 + 1
+
+    cstate, stack, lstate = _mk_device_state(a, n, v)
+    cstate_k, stack_k, lstate_k = _mk_device_state(a, n, v)
+    oracle = _ScalarWirePath(a, n)
+
+    # pre-seed promised rounds above the initial crnd so the schedule
+    # exercises the reject path (recovery-touched slots) until crnd catches up
+    seed_rnd = rng.integers(0, 4, (a, n)).astype(np.int32)
+    stack = AcceptorState(jnp.asarray(seed_rnd), stack.vrnd, stack.value)
+    stack_k = AcceptorState(jnp.asarray(seed_rnd), stack_k.vrnd, stack_k.value)
+    for aid in range(a):
+        for slot in np.nonzero(seed_rnd[aid])[0]:
+            oracle.acceptors[aid].slots[int(slot)] = (
+                int(seed_rnd[aid, slot]), NO_ROUND, np.zeros((v,), np.int32)
+            )
+
+    for alive, crnd in _schedule(seed, rounds, a):
+        values = rng.integers(-99, 99, (b, v)).astype(np.int32)
+        active = jnp.ones((b,), bool)
+        cstate = CoordinatorState(next_inst=cstate.next_inst, crnd=jnp.int32(crnd))
+        cstate_k = CoordinatorState(
+            next_inst=cstate_k.next_inst, crnd=jnp.int32(crnd)
+        )
+        oracle.co.crnd = crnd
+
+        cstate, stack, lstate, fresh, inst, win, value = batched.fused_round(
+            cstate, stack, lstate, jnp.asarray(values), active,
+            jnp.asarray(alive), quorum,
+        )
+        outs = wirepath.wirepath_round(
+            cstate_k.next_inst, cstate_k.crnd, jnp.int32(quorum),
+            jnp.asarray(alive, jnp.int32),
+            stack_k.rnd, stack_k.vrnd, stack_k.value,
+            lstate_k.delivered, lstate_k.inst, lstate_k.value,
+            jnp.asarray(values), interpret=True,
+        )
+        (k_rnd, k_vrnd, k_val, k_ldel, k_linst, k_lval,
+         k_fresh, k_win, k_value) = outs
+        stack_k = AcceptorState(k_rnd, k_vrnd, k_val)
+        lstate_k = batched.LearnerState(k_ldel, k_linst, k_lval)
+        cstate_k = CoordinatorState(
+            next_inst=cstate_k.next_inst + b, crnd=cstate_k.crnd
+        )
+
+        o_fresh, o_win, o_value = oracle.round(values, alive)
+
+        # Pallas megakernel == jnp fused round, bit for bit, ALL positions
+        np.testing.assert_array_equal(np.asarray(fresh), np.asarray(k_fresh) != 0)
+        np.testing.assert_array_equal(np.asarray(win), np.asarray(k_win))
+        np.testing.assert_array_equal(np.asarray(value), np.asarray(k_value))
+        for x, y in zip(jax.tree_util.tree_leaves((stack, lstate)),
+                        jax.tree_util.tree_leaves((stack_k, lstate_k))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+        # fused round == scalar oracle
+        np.testing.assert_array_equal(np.asarray(fresh), o_fresh)
+        np.testing.assert_array_equal(
+            np.asarray(win)[o_fresh], o_win[o_fresh]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(value)[o_fresh], o_value[o_fresh]
+        )
+
+    # final acceptor register files agree with the scalar acceptors
+    h_rnd = np.asarray(stack.rnd)
+    h_vrnd = np.asarray(stack.vrnd)
+    h_val = np.asarray(stack.value)
+    for aid, acc in enumerate(oracle.acceptors):
+        for slot, (rnd, vrnd, val) in acc.slots.items():
+            assert h_rnd[aid, slot] == rnd, (aid, slot)
+            assert h_vrnd[aid, slot] == vrnd, (aid, slot)
+            np.testing.assert_array_equal(h_val[aid, slot], val)
+
+
+def test_fused_round_ring_wraparound_boundary():
+    """A window crossing the N boundary wraps block indices and redelivers
+    fresh instances into previously-used slots."""
+    n, b, v, a = 128, 32, 2, 3
+    rng = np.random.default_rng(9)
+    cstate, stack, lstate = _mk_device_state(a, n, v)
+    alive = jnp.ones((a,), bool)
+    seen_vals = []
+    # 5 rounds of 32 = 160 instances: wraps at round 5 (inst 128..159 reuse
+    # slots 0..31, which already hold delivered instances 0..31)
+    for r in range(5):
+        values = rng.integers(0, 100, (b, v)).astype(np.int32)
+        seen_vals.append(values)
+        cstate, stack, lstate, fresh, inst, win, value = batched.fused_round(
+            cstate, stack, lstate, jnp.asarray(values),
+            jnp.ones((b,), bool), alive, 2,
+        )
+        # wraparound must NOT suppress fresh instances reusing a slot
+        assert np.asarray(fresh).all(), f"round {r}"
+        np.testing.assert_array_equal(np.asarray(value), values)
+    # slots 0..31 now hold the round-4 instances (128..159), not 0..31
+    np.testing.assert_array_equal(
+        np.asarray(lstate.inst)[:b], np.arange(4 * b, 5 * b)
+    )
+    np.testing.assert_array_equal(np.asarray(lstate.value)[:b], seen_vals[4])
+
+
+def test_fused_round_duplicate_instance_suppressed():
+    """Re-running the sequencer over the same window (stale watermark after a
+    failover rollback) re-decides the same instances; dedup must mark them
+    stale, not fresh."""
+    n, b, v, a = 128, 16, 2, 3
+    rng = np.random.default_rng(3)
+    values = rng.integers(0, 50, (b, v)).astype(np.int32)
+    cstate, stack, lstate = _mk_device_state(a, n, v)
+    alive = jnp.ones((a,), bool)
+    _, stack, lstate, fresh, _, _, _ = batched.fused_round(
+        cstate, stack, lstate, jnp.asarray(values), jnp.ones((b,), bool),
+        alive, 2,
+    )
+    assert np.asarray(fresh).all()
+    # replay the SAME window (cstate was not advanced) at a higher round
+    cstate2 = CoordinatorState(next_inst=jnp.int32(0), crnd=jnp.int32(5))
+    _, stack, lstate, fresh2, _, win2, val2 = batched.fused_round(
+        cstate2, stack, lstate, jnp.asarray(values), jnp.ones((b,), bool),
+        alive, 2,
+    )
+    # decided again (Paxos re-decides the same value at the higher round)...
+    assert (np.asarray(win2) == 5).all()
+    np.testing.assert_array_equal(np.asarray(val2), values)
+    # ...but delivery is suppressed as a duplicate
+    assert not np.asarray(fresh2).any()
+
+
+def test_vote_all_window_kernel_matches_jnp():
+    """Staged all-acceptor vote kernel vs the vmapped scatter path."""
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(11)
+    a, n, b, v = 3, 256, 128, 4
+    st_rnd = jnp.asarray(rng.integers(0, 3, (a, n)).astype(np.int32))
+    st_vrnd = jnp.asarray(rng.integers(-1, 2, (a, n)).astype(np.int32))
+    st_val = jnp.asarray(rng.integers(-9, 9, (a, n, v)).astype(np.int32))
+    base = 128  # window [128, 256): block-aligned, wraps on next call
+    alive = jnp.asarray([1, 0, 1], jnp.int32)
+    mt = jnp.asarray(rng.choice([3, 0], size=b).astype(np.int32))
+    mr = jnp.asarray(rng.integers(0, 4, b).astype(np.int32))
+    mv = jnp.asarray(rng.integers(-9, 9, (b, v)).astype(np.int32))
+    k = wirepath.acceptor_vote_all_window(
+        st_rnd, st_vrnd, st_val, base, alive, mt, mr, mv, interpret=True
+    )
+    r = ref.acceptor_vote_all_window(
+        st_rnd, st_vrnd, st_val, base, alive, mt, mr, mv
+    )
+    for x, y in zip(k, r):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # wrapped follow-up window [256, 384) -> slots [0, 128)
+    k2 = wirepath.acceptor_vote_all_window(
+        k[0], k[1], k[2], 256, alive, mt, mr, mv, interpret=True
+    )
+    r2 = ref.acceptor_vote_all_window(
+        r[0], r[1], r[2], 256, alive, mt, mr, mv
+    )
+    for x, y in zip(k2, r2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
