@@ -1,0 +1,113 @@
+"""CI regression gate over the wire-path benchmark (BENCH_wirepath.json).
+
+Compares a fresh (possibly ``--quick``/partial) bench run against the
+committed perf-trajectory artifact and fails on:
+
+  * the pallas-fused vs per-acceptor speedup ratio regressing by more than
+    ``--tolerance`` (default 30%) relative to the committed ratio at the
+    largest burst both runs measured — ratios of two paths timed on the same
+    machine are robust to runner speed, absolute msgs/s are not;
+  * multi-group aggregate scaling (G=8 vs G=1, Pallas interpret path)
+    dropping below ``--min-mg-scaling`` (default 3.0x) in the fresh run —
+    the DESIGN.md §5 service-scaling claim.
+
+    PYTHONPATH=src python -m benchmarks.check_wirepath_regression \
+        BENCH_wirepath.json /tmp/fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Optional, Tuple
+
+
+def _speedups(doc: dict) -> Dict[int, float]:
+    """burst -> pallas_fused/per_acceptor speedup, from explicit speedup rows
+    (preferred) or recomputed from msgs/s rows."""
+    out: Dict[int, float] = {}
+    msgs: Dict[Tuple[str, int], float] = {}
+    for row in doc["rows"]:
+        if "speedup" in row:
+            out[row["burst"]] = row["speedup"]
+        elif "msgs_per_s" in row and "path" in row and "burst" in row:
+            msgs[(row["path"], row["burst"])] = row["msgs_per_s"]
+    for (path, burst), v in msgs.items():
+        if path == "pallas_fused" and burst not in out:
+            per_acc = msgs.get(("per_acceptor", burst))
+            if per_acc:
+                out[burst] = v / per_acc
+    return out
+
+
+def _mg_scaling(doc: dict, path: str = "multigroup_scaling_pallas") -> Optional[float]:
+    for row in doc["rows"]:
+        if row["name"].startswith(f"wirepath/{path}/") and "scaling" in row:
+            return row["scaling"]
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_wirepath.json")
+    ap.add_argument("fresh", help="JSON from the fresh bench run")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional speedup regression (default 0.30)")
+    ap.add_argument("--min-mg-scaling", type=float, default=3.0,
+                    help="required G=8 vs G=1 aggregate scaling (default 3.0)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = []
+
+    base_speed = _speedups(base)
+    fresh_speed = _speedups(fresh)
+    common = sorted(set(base_speed) & set(fresh_speed))
+    if not common:
+        failures.append(
+            f"no common speedup burst between baseline {sorted(base_speed)} "
+            f"and fresh {sorted(fresh_speed)}"
+        )
+    else:
+        burst = common[-1]
+        floor = base_speed[burst] * (1.0 - args.tolerance)
+        status = "OK" if fresh_speed[burst] >= floor else "REGRESSION"
+        print(
+            f"speedup pallas_fused/per_acceptor @burst={burst}: "
+            f"fresh {fresh_speed[burst]:.1f}x vs committed "
+            f"{base_speed[burst]:.1f}x (floor {floor:.1f}x) -> {status}"
+        )
+        if fresh_speed[burst] < floor:
+            failures.append(
+                f"speedup @burst={burst} regressed >"
+                f"{args.tolerance:.0%}: {fresh_speed[burst]:.2f}x < "
+                f"floor {floor:.2f}x"
+            )
+
+    mg = _mg_scaling(fresh)
+    if mg is None:
+        failures.append("fresh run has no multigroup_scaling_pallas row")
+    else:
+        status = "OK" if mg >= args.min_mg_scaling else "REGRESSION"
+        print(
+            f"multigroup aggregate scaling G=8/G=1 (pallas): {mg:.1f}x "
+            f"(required >= {args.min_mg_scaling:.1f}x) -> {status}"
+        )
+        if mg < args.min_mg_scaling:
+            failures.append(
+                f"multigroup scaling {mg:.2f}x < {args.min_mg_scaling:.1f}x"
+            )
+
+    if failures:
+        for f_ in failures:
+            print(f"FAIL: {f_}", file=sys.stderr)
+        return 1
+    print("benchmark gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -108,7 +108,7 @@ def wirepath_table() -> None:
     print("| path | burst | us/round | msgs/s |")
     print("|---|---|---|---|")
     for r in doc.get("rows", []):
-        if "speedup" in r:
+        if "speedup" in r or "burst" not in r:
             continue
         if r.get("skipped"):
             print(f"| {r['path']} | {r['burst']} | — | skipped |")
@@ -122,6 +122,25 @@ def wirepath_table() -> None:
         line = ", ".join(f"{r['speedup']:.1f}x @ {r['burst']}" for r in speedups)
         print(f"\nPallas-fused over per-acceptor host loop: {line}")
     print()
+
+    mg = [r for r in doc.get("rows", []) if "groups" in r and "msgs_per_s" in r]
+    if mg:
+        print(f"### Multi-group aggregate throughput "
+              f"(per-group burst={meta.get('MG_BURST')}, "
+              f"N={meta.get('MG_N')}; DESIGN.md §5)\n")
+        print("| path | G | us/round | aggregate msgs/s |")
+        print("|---|---|---|---|")
+        for r in mg:
+            print(f"| {r['path']} | {r['groups']} | {r['us_per_round']:.0f} "
+                  f"| {r['msgs_per_s']:,.0f} |")
+        scalings = [r for r in doc.get("rows", []) if "scaling" in r]
+        if scalings:
+            line = ", ".join(
+                f"{r['scaling']:.1f}x ({r['name'].split('/')[1]})"
+                for r in scalings
+            )
+            print(f"\nAggregate scaling G=8 vs G=1: {line}")
+        print()
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import batched
-from repro.core.types import MSG_P2A, AcceptorState, CoordinatorState, MsgBatch
+from repro.core.types import MSG_P2A, AcceptorState, MsgBatch
 
 from .common import block, emit, time_fn
 

@@ -20,7 +20,6 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import PaxosConfig, PaxosContext

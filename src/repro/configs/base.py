@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,7 +56,7 @@ class ModelConfig:
     @property
     def n_params(self) -> int:
         """Approximate total parameter count (for roofline MODEL_FLOPS)."""
-        d, l = self.d_model, self.n_layers
+        d, nl = self.d_model, self.n_layers
         emb = self.vocab * d
         attn = d * self.n_heads * self.hd + 2 * d * self.n_kv_heads * self.hd \
             + self.n_heads * self.hd * d
@@ -67,19 +67,18 @@ class ModelConfig:
             mlp = self.n_experts * 3 * d * self.d_ff_expert
             if self.shared_expert:
                 mlp += 3 * d * self.d_ff
-        core = l * (attn + mlp)
+        core = nl * (attn + mlp)
         if self.family == "hybrid" and self.block_pattern:
             # recurrent blocks replace attention with RG-LRU (~4 d*d_rnn)
             rnn = self.d_rnn or d
-            n_rec = sum(1 for b in self.block_pattern for _ in [0] if b == "rec")
             frac_rec = self.block_pattern.count("rec") / len(self.block_pattern)
             rec_blk = 4 * d * rnn + mlp
             attn_blk = attn + mlp
-            core = int(l * (frac_rec * rec_blk + (1 - frac_rec) * attn_blk))
+            core = int(nl * (frac_rec * rec_blk + (1 - frac_rec) * attn_blk))
         if self.family == "encdec":
             # GELU MLPs (2 matrices); decoder = self+cross attn, encoder = self
             mlp_e = 2 * d * self.d_ff
-            core = l * (2 * attn + mlp_e) + self.n_enc_layers * (attn + mlp_e)
+            core = nl * (2 * attn + mlp_e) + self.n_enc_layers * (attn + mlp_e)
         return emb + core
 
     @property
@@ -87,9 +86,9 @@ class ModelConfig:
         """Active params per token (MoE: only top_k experts count)."""
         if not self.n_experts:
             return self.n_params
-        d, l = self.d_model, self.n_layers
-        dense = self.n_params - l * self.n_experts * 3 * d * self.d_ff_expert
-        active_mlp = l * self.top_k * 3 * d * self.d_ff_expert
+        d, nl = self.d_model, self.n_layers
+        dense = self.n_params - nl * self.n_experts * 3 * d * self.d_ff_expert
+        active_mlp = nl * self.top_k * 3 * d * self.d_ff_expert
         return dense + active_mlp
 
     def reduced(self) -> "ModelConfig":

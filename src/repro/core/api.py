@@ -17,7 +17,8 @@ suppression at learners implement the paper's §3.1 failure-handling contract.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,18 +36,37 @@ from .types import (
     CoordinatorState,
     MsgBatch,
     PaxosConfig,
-    decode_value,
-    encode_value,
 )
 
 NO_ROUND = -1
 NOP_SENTINEL = -0x7FFFFFFF  # first value word marking an internal filler slot
 
 
+def _wire_block(b: int) -> int:
+    """Kernel batch-block size for a burst of ``b`` messages."""
+    from repro.kernels.wirepath import DEFAULT_BLOCK_B
+
+    return min(DEFAULT_BLOCK_B, b)
+
+
+def _wire_window_aligned(cfg: PaxosConfig, base: int, b: int) -> bool:
+    """True iff a contiguous window [base, base+b) satisfies the Pallas
+    ring-blocking invariants (BB | base, BB | B, BB | N, B <= N) — the ONE
+    definition both dataplanes consult (DESIGN.md §2)."""
+    bb = _wire_block(b)
+    return (
+        b % bb == 0
+        and cfg.n_instances % bb == 0
+        and b <= cfg.n_instances
+        and base % bb == 0
+    )
+
+
 @dataclasses.dataclass
 class _Pending:
     payload: bytes
     age: int = 0
+    group: int = 0
 
 
 class HardwareDataplane:
@@ -103,20 +123,10 @@ class HardwareDataplane:
 
     # -- wire-path invariants -------------------------------------------------
     def _block(self, b: int) -> int:
-        from repro.kernels.wirepath import DEFAULT_BLOCK_B
-
-        return min(DEFAULT_BLOCK_B, b)
+        return _wire_block(b)
 
     def _window_aligned(self, base: int, b: int) -> bool:
-        """True iff a contiguous window [base, base+b) satisfies the Pallas
-        ring-blocking invariants (BB | base, BB | B, BB | N, B <= N)."""
-        bb = self._block(b)
-        return (
-            b % bb == 0
-            and self.cfg.n_instances % bb == 0
-            and b <= self.cfg.n_instances
-            and base % bb == 0
-        )
+        return _wire_window_aligned(self.cfg, base, b)
 
     # -- fused fast path: whole Phase-2 round in ONE device program ----------
     def pipeline(self, values: np.ndarray, active: np.ndarray):
@@ -193,6 +203,230 @@ class HardwareDataplane:
         ]
 
 
+class _GroupView:
+    """Single-group staged-path adapter over one group's slice of the stack.
+
+    Exposes the ``prepare``/``vote``/``cfg`` surface that ``core.failover``
+    and the recovery path expect from a ``HardwareDataplane``, but reads and
+    writes only group ``gid``'s rows of the multi-group ``(G, A, N)`` state —
+    the other groups' registers are never touched.  Not a fast path: recovery
+    and failover traffic only.
+    """
+
+    def __init__(self, mg: "MultiGroupDataplane", gid: int):
+        self.mg = mg
+        self.gid = gid
+
+    @property
+    def cfg(self) -> PaxosConfig:
+        return self.mg.cfg
+
+    def vote(self, p2a: MsgBatch) -> List[Optional[MsgBatch]]:
+        mg, gid = self.mg, self.gid
+        st = jax.tree_util.tree_map(lambda x: x[gid], mg.stack)
+        st, votes = mg._vote_all(st, p2a, mg.alive_mask[gid])
+        mg.stack = jax.tree_util.tree_map(
+            lambda s, n: s.at[gid].set(n), mg.stack, st
+        )
+        return self._split(votes)
+
+    def prepare(self, p1a: MsgBatch) -> List[Optional[MsgBatch]]:
+        mg, gid = self.mg, self.gid
+        st = jax.tree_util.tree_map(lambda x: x[gid], mg.stack)
+        st, outs = mg._prep_all(st, p1a, mg.alive_mask[gid])
+        mg.stack = jax.tree_util.tree_map(
+            lambda s, n: s.at[gid].set(n), mg.stack, st
+        )
+        return self._split(outs)
+
+    def _split(self, stacked: MsgBatch) -> List[Optional[MsgBatch]]:
+        gid = jnp.int32(self.gid)
+        return [
+            jax.tree_util.tree_map(lambda x, aid=aid: x[aid], stacked).replace(
+                gid=gid
+            )
+            if self.mg.alive[self.gid][aid]
+            else None
+            for aid in range(self.cfg.n_acceptors)
+        ]
+
+
+class MultiGroupDataplane:
+    """G device-resident Paxos groups sharing one fused dispatch per round —
+    consensus as a service, the NetChain-style generalization of
+    ``HardwareDataplane`` (DESIGN.md §5).
+
+    State is the single-group layout grown a leading group axis: ``(G,)``
+    coordinator watermarks/rounds, ``(G, A, N)`` acceptor rings, ``(G, N)``
+    learner rings, a ``(G, A)`` runtime liveness mask.  ``pipeline`` advances
+    *every* group one Phase-2 round in one device program — the Pallas
+    multi-group megakernel when ``use_kernels`` and every group's watermark
+    is block-aligned (folding all groups into each grid step when the host
+    watermark mirrors are in lockstep), else the vmapped jnp oracle.
+
+    Per-group failover support: ``freeze_group`` parks a group's coordinator
+    round at ``NO_ROUND`` so the shared dispatch can keep running — a frozen
+    group's slots are all rejected, deciding (and perturbing) nothing — and
+    ``restore_group`` realigns the group's watermark/round after a software
+    coordinator hands back control.  ``group_view`` exposes one group's
+    staged surface for recovery and takeover.
+    """
+
+    def __init__(self, cfg: PaxosConfig, use_kernels: bool = False):
+        if cfg.n_groups < 1:
+            raise ValueError(f"n_groups must be >= 1, got {cfg.n_groups}")
+        self.cfg = cfg
+        g, a = cfg.n_groups, cfg.n_acceptors
+        self.cstate, self.stack, self.lstate = batched.init_multigroup_state(
+            g, a, cfg.n_instances, cfg.value_words
+        )
+        self.alive = [[True] * a for _ in range(g)]   # host mirror
+        self.alive_mask = jnp.ones((g, a), jnp.bool_)
+        self.use_kernels = use_kernels
+        # per-group host mirrors of the sequencer watermark and round — the
+        # kernel path's alignment/lockstep decisions cost no device sync
+        self.next_inst_host: List[int] = [0] * g
+        self.crnd_host: List[int] = [0] * g
+        if use_kernels:
+            from repro.kernels import ops as kops
+
+            self._fused_k = jax.jit(
+                kops.multigroup_fused_round,
+                donate_argnums=(1, 2),
+                static_argnames=("group_block",),
+            )
+        self._fused = jax.jit(
+            batched.multigroup_fused_round, donate_argnums=(1, 2)
+        )
+        self._vote_all = jax.jit(batched.acceptor_phase2_all)
+        self._prep_all = jax.jit(batched.acceptor_phase1_all)
+
+    # -- wire-path invariants (shared definition: _wire_window_aligned) ------
+    def _block(self, b: int) -> int:
+        return _wire_block(b)
+
+    def _window_aligned(self, base: int, b: int) -> bool:
+        return _wire_window_aligned(self.cfg, base, b)
+
+    # -- fused fast path: ALL groups advance one round in ONE dispatch -------
+    def pipeline(
+        self,
+        values: np.ndarray,
+        active: np.ndarray,
+        enabled: Optional[List[bool]] = None,
+    ):
+        """One dispatch for all G groups: sequence + votes + quorum + dedup.
+
+        ``values`` is ``(G, B, V)``, ``active`` ``(G, B)``.  ``enabled``
+        masks which groups actually advance this round (default: those whose
+        round is not frozen).  A disabled group rides along *inert*: its
+        round is presented to the dispatch as NO_ROUND so its acceptors
+        reject every slot, and its watermark does not move — so an idle
+        group burns no ring instances and its state stays bit-identical to
+        an independent deployment that simply wasn't pumped.  Returns host
+        ``(fresh, inst, value)`` with a leading group axis.
+        """
+        g, b = values.shape[0], values.shape[1]
+        if enabled is None:
+            enabled = [c != NO_ROUND for c in self.crnd_host]
+        else:
+            enabled = [
+                bool(e) and c != NO_ROUND
+                for e, c in zip(enabled, self.crnd_host)
+            ]
+        if not any(enabled):
+            # nothing would decide — skip the dispatch entirely
+            return (
+                np.zeros((g, b), np.int32),
+                np.zeros((g, b), np.int32),
+                np.zeros((g, b, self.cfg.value_words), np.int32),
+            )
+        # alignment must hold for every group — disabled groups' ring windows
+        # are still loaded (and left unchanged) by the kernel
+        use_k = self.use_kernels and all(
+            self._window_aligned(w, b) for w in self.next_inst_host
+        )
+        if use_k:
+            # lockstep watermarks let every grid step carry all G groups
+            gb = g if len(set(self.next_inst_host)) == 1 else 1
+            fn = functools.partial(self._fused_k, group_block=gb)
+        else:
+            fn = self._fused
+        en = jnp.asarray(enabled)
+        cs = self.cstate
+        eff = CoordinatorState(
+            next_inst=cs.next_inst, crnd=jnp.where(en, cs.crnd, NO_ROUND)
+        )
+        new_c, self.stack, self.lstate, fresh, inst, _win, value = fn(
+            eff,
+            self.stack,
+            self.lstate,
+            jnp.asarray(values),
+            jnp.asarray(active),
+            self.alive_mask,
+            self.cfg.quorum,
+        )
+        # disabled groups keep their watermark and their true round
+        self.cstate = CoordinatorState(
+            next_inst=jnp.where(en, new_c.next_inst, cs.next_inst),
+            crnd=cs.crnd,
+        )
+        for gid in range(g):
+            if enabled[gid]:
+                self.next_inst_host[gid] += b
+        return np.asarray(fresh), np.asarray(inst), np.asarray(value)
+
+    # -- per-group liveness and failover -------------------------------------
+    def _check_gid(self, gid: int) -> None:
+        if not 0 <= gid < self.cfg.n_groups:
+            raise ValueError(f"group {gid} out of range [0, {self.cfg.n_groups})")
+
+    def kill_acceptor(self, gid: int, aid: int) -> None:
+        self._check_gid(gid)
+        self.alive[gid][aid] = False
+        self.alive_mask = self.alive_mask.at[gid, aid].set(False)
+
+    def revive_acceptor(self, gid: int, aid: int) -> None:
+        self._check_gid(gid)
+        self.alive[gid][aid] = True
+        self.alive_mask = self.alive_mask.at[gid, aid].set(True)
+
+    def freeze_group(self, gid: int) -> None:
+        """Park a group's hardware round at NO_ROUND while a software
+        coordinator owns it: every slot the shared dispatch sequences for the
+        group is rejected by its acceptors (NO_ROUND < any promised round),
+        so nothing is decided and no state mutates — the group is inert in
+        the pipeline without recompiling or excluding it."""
+        self._check_gid(gid)
+        self.cstate = CoordinatorState(
+            next_inst=self.cstate.next_inst,
+            crnd=self.cstate.crnd.at[gid].set(NO_ROUND),
+        )
+        self.crnd_host[gid] = NO_ROUND
+
+    def restore_group(self, gid: int, next_inst: int, crnd: int) -> None:
+        """Hand a group back to the hardware sequencer at the watermark and
+        round the software coordinator reached (block-realigned on the kernel
+        path — the skipped instances are never proposed and are recoverable
+        as no-ops, exactly as in the single-group restore)."""
+        self._check_gid(gid)
+        if self.use_kernels:
+            bb = self._block(self.cfg.batch)
+            next_inst = -(-next_inst // bb) * bb
+        self.cstate = CoordinatorState(
+            next_inst=self.cstate.next_inst.at[gid].set(next_inst),
+            crnd=self.cstate.crnd.at[gid].set(crnd),
+        )
+        self.next_inst_host[gid] = next_inst
+        self.crnd_host[gid] = crnd
+
+    def group_view(self, gid: int) -> _GroupView:
+        """The staged single-group surface over group ``gid`` (recovery and
+        takeover traffic; the fast path stays in ``pipeline``)."""
+        self._check_gid(gid)
+        return _GroupView(self, gid)
+
+
 class PaxosContext:
     """Drop-in replacement context (the paper's ``paxos_ctx``)."""
 
@@ -209,8 +443,34 @@ class PaxosContext:
         self.cfg = cfg or PaxosConfig()
         self.deliver_cb = deliver
         self.net = net or SimNet()
-        self.hw = HardwareDataplane(self.cfg, use_kernels=use_kernels)
-        self.fused = fused
+        self.n_groups = self.cfg.n_groups
+        if self.n_groups > 1:
+            # the multi-group service is wire-path only: all groups ride one
+            # fused dispatch; staged traffic exists per group for recovery
+            # and failover (group views), not as a peer execution mode
+            if n_learners != 1:
+                raise ValueError(
+                    "multi-group context drives the fused wire path and a "
+                    "single learner role per group (n_learners must be 1)"
+                )
+            self.hw: HardwareDataplane = MultiGroupDataplane(  # type: ignore[assignment]
+                self.cfg, use_kernels=use_kernels
+            )
+            self.fused = True
+            self._softco_g: Dict[int, SoftCoordinator] = {}
+            # the group-keyed learn surface
+            self.learned_g: List[Dict[int, bytes]] = [
+                dict() for _ in range(self.n_groups)
+            ]
+            self._partial_g: List[Dict[int, Dict[int, Tuple[int, bytes]]]] = [
+                dict() for _ in range(self.n_groups)
+            ]
+            self.group_log: List[List[Tuple[int, bytes]]] = [
+                [] for _ in range(self.n_groups)
+            ]
+        else:
+            self.hw = HardwareDataplane(self.cfg, use_kernels=use_kernels)
+            self.fused = fused
         self._delivered_seqs: set = set()
         self.retransmit_after = retransmit_after
         self.n_learners = n_learners
@@ -220,25 +480,39 @@ class PaxosContext:
             dict() for _ in range(n_learners)
         ]
         self.delivered_log: List[Tuple[int, bytes]] = []
-        self._pending: Dict[int, _Pending] = {}   # client-seq -> payload
+        # client-seq -> payload; multi-group contexts key by (group, seq) —
+        # each group is an independent Paxos, with its own sequence space
+        self._pending: Dict[Any, _Pending] = {}
         self._next_client_seq = 0
+        self._next_client_seq_g = [0] * self.n_groups
         self._next_epoch = 1                      # round-allocator epochs
         self._softco: Optional[SoftCoordinator] = None  # failover coordinator
         self.stats = {"submitted": 0, "delivered": 0, "retransmits": 0}
 
     # -- paper API -----------------------------------------------------------
-    def submit(self, payload: bytes) -> int:
-        """paxos_submit(ctx, value, size)"""
-        seq = self._next_client_seq
-        self._next_client_seq += 1
-        self._pending[seq] = _Pending(payload)
-        self.net.send("coordinator", ("submit", seq, payload))
+    def submit(self, payload: bytes, group: int = 0) -> int:
+        """paxos_submit(ctx, value, size) — ``group`` selects which of the
+        device-resident consensus groups sequences the value (0 is the only
+        group of a single-group context)."""
+        if not 0 <= group < self.n_groups:
+            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        if self.n_groups > 1:
+            seq = self._next_client_seq_g[group]
+            self._next_client_seq_g[group] += 1
+            self._pending[(group, seq)] = _Pending(payload, group=group)
+        else:
+            seq = self._next_client_seq
+            self._next_client_seq += 1
+            self._pending[seq] = _Pending(payload)
+        self.net.send("coordinator", ("submit", seq, payload, group))
         self.stats["submitted"] += 1
         return seq
 
-    def recover(self, inst: int, nop: bytes = b"\x00") -> None:
+    def recover(self, inst: int, nop: bytes = b"\x00", group: int = 0) -> None:
         """paxos_recover(ctx, iid, nop_value, size): phase 1+2 with a no-op."""
-        self.net.send("coordinator", ("recover", inst, nop))
+        if not 0 <= group < self.n_groups:
+            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        self.net.send("coordinator", ("recover", inst, nop, group))
 
     # -- event loop ----------------------------------------------------------
     def pump(self, rounds: int = 1) -> None:
@@ -258,33 +532,31 @@ class PaxosContext:
     # -- internals -----------------------------------------------------------
     def _pump_coordinator(self) -> None:
         inbox = self.net.recv_all("coordinator")
-        submits = [(m[1], m[2]) for m in inbox if m[0] == "submit"]
-        recovers = [(m[1], m[2]) for m in inbox if m[0] == "recover"]
+        submits = [
+            (m[1], m[2], m[3] if len(m) > 3 else 0)
+            for m in inbox
+            if m[0] == "submit"
+        ]
+        recovers = [
+            (m[1], m[2], m[3] if len(m) > 3 else 0)
+            for m in inbox
+            if m[0] == "recover"
+        ]
+        if self.n_groups > 1:
+            self._pump_coordinator_groups(submits, recovers)
+            return
 
-        for inst, nop in recovers:
+        for inst, nop, _gid in recovers:
             self._run_recover(inst, nop)
+        submits = [(seq, payload) for seq, payload, _gid in submits]
 
         b = self.cfg.batch
         for i in range(0, len(submits), b):
             chunk = submits[i : i + b]
-            if self.fused and not self.hw.use_kernels:
-                # right-size the burst (next pow2): a half-empty wire batch
-                # costs real dataplane time; the jnp path has no alignment
-                # requirement
-                be = 8
-                while be < len(chunk):
-                    be *= 2
-                be = min(be, b)
-            else:
-                # kernel path: fixed wire batch, preserving the block-aligned
-                # window invariant the Pallas ring blocking relies on
-                be = b
-            vals = np.full((be, self.cfg.value_words), 0, np.int32)
-            active = np.zeros((be,), bool)
-            for j, (seq, payload) in enumerate(chunk):
-                vals[j] = self._encode(seq, payload)
-                active[j] = True
-            vals[len(chunk) :, 0] = NOP_SENTINEL
+            # fused jnp path right-sizes the burst; the staged path keeps the
+            # full batch, and the kernel path its fixed block-aligned one
+            be = self._burst_size(len(chunk)) if self.fused else b
+            vals, active = self._pack_chunk(chunk, be)
             if self.fused and self._softco is None:
                 # the CAANS wire path: the whole Phase-2 round below the host
                 # boundary, one dispatch — votes never surface as messages
@@ -316,11 +588,28 @@ class PaxosContext:
                 self._learn(lid, aid, votes)
 
     def _learn(self, lid: int, aid: int, votes: dict) -> None:
+        self._quorum_learn(
+            self.learned[lid],
+            self._partial[lid],
+            aid,
+            votes,
+            self._deliver if lid == 0 else None,
+        )
+
+    def _quorum_learn(
+        self,
+        learned: Dict[int, bytes],
+        partial: Dict[int, Dict[int, Tuple[int, bytes]]],
+        aid: int,
+        votes: dict,
+        deliver: Optional[Callable[[int, bytes], None]],
+    ) -> None:
+        """The software learner: fold one acceptor's vote batch into the
+        partial-quorum table; at quorum, record the decision and (when this
+        learner delivers) fire ``deliver(inst, raw)``.  Shared by the
+        per-learner and per-group learn surfaces."""
         quorum = self.cfg.quorum
-        learned = self.learned[lid]
-        partial = self._partial[lid]
-        n = len(votes["msgtype"])
-        for i in range(n):
+        for i in range(len(votes["msgtype"])):
             if votes["msgtype"][i] != MSG_P2B:
                 continue
             inst = int(votes["inst"][i])
@@ -336,32 +625,159 @@ class PaxosContext:
                     raw = next(v for r, v in slot.values() if r == vr)
                     learned[inst] = raw
                     partial.pop(inst, None)
-                    if lid == 0:
-                        self._deliver(inst, raw)
+                    if deliver is not None:
+                        deliver(inst, raw)
                     break
 
+    # -- multi-group internals (G device-resident groups, fused dispatch) ----
+    def _pump_coordinator_groups(
+        self,
+        submits: List[Tuple[int, bytes, int]],
+        recovers: List[Tuple[int, bytes, int]],
+    ) -> None:
+        """Group-keyed coordinator pump: recovery first, then groups under a
+        software coordinator (staged, per group), then one fused multi-group
+        dispatch per burst for everything hardware-sequenced."""
+        for inst, nop, gid in recovers:
+            self._run_recover_group(gid, inst, nop)
+        queues: List[List[Tuple[int, bytes]]] = [
+            [] for _ in range(self.n_groups)
+        ]
+        for seq, payload, gid in submits:
+            queues[gid].append((seq, payload))
+        b = self.cfg.batch
+
+        for gid in list(self._softco_g):
+            q, queues[gid] = queues[gid], []
+            for i in range(0, len(q), b):
+                be = self._burst_size(len(q[i : i + b]))
+                vals, active = self._pack_chunk(q[i : i + b], be)
+                p2a = self._soft_sequence_group(gid, vals, active)
+                for aid, v in enumerate(self.hw.group_view(gid).vote(p2a)):
+                    if v is not None:
+                        # learners route on the header's group id, not on
+                        # ambient context — the switch model (paper Fig. 5)
+                        self._learn_group(int(v.gid), aid, _to_host(v))
+
+        # the whole service advances together: every remaining chunk wave is
+        # ONE device dispatch covering all G groups.  Frozen (software-
+        # coordinated) and idle groups ride along inert — round presented as
+        # NO_ROUND, watermark parked — so skewed load neither burns idle
+        # rings nor perturbs idle state (bit-identical to not being pumped).
+        while any(queues):
+            chunks = [q[:b] for q in queues]
+            queues = [q[b:] for q in queues]
+            vals, active = self._group_burst(chunks)
+            enabled = [len(c) > 0 for c in chunks]
+            fresh, inst, value = self.hw.pipeline(vals, active, enabled)
+            for gid in range(self.n_groups):
+                if not enabled[gid] or gid in self._softco_g:
+                    continue
+                for j in range(fresh.shape[1]):
+                    if not fresh[gid, j]:
+                        continue
+                    raw = value[gid, j].tobytes()
+                    if int(inst[gid, j]) not in self.learned_g[gid]:
+                        self.learned_g[gid][int(inst[gid, j])] = raw
+                    self._deliver_group(gid, int(inst[gid, j]), raw)
+
+    def _burst_size(self, longest: int) -> int:
+        """Wire-burst sizing: the kernel path keeps the fixed block-aligned
+        batch; the jnp path right-sizes to the next pow2 (a half-empty wire
+        batch costs real dataplane time, and jnp has no alignment needs)."""
+        if self.hw.use_kernels:
+            return self.cfg.batch
+        be = 8
+        while be < longest:
+            be *= 2
+        return min(be, self.cfg.batch)
+
+    def _pack_chunk(
+        self, chunk: List[Tuple[int, bytes]], be: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pack (seq, payload) pairs into a (BE, V) wire burst; unfilled
+        slots carry the NOP sentinel and are inactive."""
+        vals = np.zeros((be, self.cfg.value_words), np.int32)
+        active = np.zeros((be,), bool)
+        vals[:, 0] = NOP_SENTINEL
+        for j, (seq, payload) in enumerate(chunk):
+            vals[j] = self._encode(seq, payload)
+            active[j] = True
+        return vals, active
+
+    def _group_burst(
+        self, chunks: List[List[Tuple[int, bytes]]]
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """One chunk per group -> a (G, BE, V) wire burst, one shared size."""
+        be = self._burst_size(max((len(c) for c in chunks), default=0))
+        packed = [self._pack_chunk(chunk, be) for chunk in chunks]
+        return (
+            np.stack([v for v, _ in packed]),
+            np.stack([a for _, a in packed]),
+        )
+
+    def _soft_sequence_group(
+        self, gid: int, vals: np.ndarray, active: np.ndarray
+    ) -> MsgBatch:
+        return self._soft_p2a(self._softco_g[gid], vals, active, gid=gid)
+
+    def _learn_group(self, gid: int, aid: int, votes: dict) -> None:
+        """Per-group software learner (staged traffic: failover, recovery)."""
+        self._quorum_learn(
+            self.learned_g[gid],
+            self._partial_g[gid],
+            aid,
+            votes,
+            functools.partial(self._deliver_group, gid),
+        )
+
+    def _deliver_group(self, gid: int, inst: int, raw: bytes) -> None:
+        self._deliver_value(inst, raw, group=gid)
+
+    def _run_recover_group(self, gid: int, inst: int, nop: bytes) -> None:
+        """Per-group recovery: the shared engine against one group's view,
+        learning decided votes directly into the group's learn surface."""
+        votes = self._recover_votes(self.hw.group_view(gid), inst, nop, gid=gid)
+        for aid, v in enumerate(votes or []):
+            if v is not None:
+                self._learn_group(int(v.gid), aid, _to_host(v))
+
     def _deliver(self, inst: int, raw: bytes) -> None:
+        self._deliver_value(inst, raw)
+
+    def _deliver_value(
+        self, inst: int, raw: bytes, group: Optional[int] = None
+    ) -> None:
+        """The delivery contract, shared by the single-group and group-keyed
+        paths: discard internal fillers, suppress duplicates (retransmit
+        decided twice — paper §3.1), settle the pending entry, log, and fire
+        the application callback.  ``group`` selects the per-group sequence
+        space and delivery log."""
         words = np.frombuffer(raw, "<i4")
         if words[0] == NOP_SENTINEL:
             return  # internal filler — discarded by the library
         seq = int(words[0])
-        if seq in self._delivered_seqs:
-            return  # duplicate (retransmit decided twice) — paper §3.1
-        self._delivered_seqs.add(seq)
+        key: Any = seq if group is None else (group, seq)
+        if key in self._delivered_seqs:
+            return
+        self._delivered_seqs.add(key)
         payload = raw[8 : 8 + int(words[1])]
-        self._pending.pop(seq, None)
+        self._pending.pop(key, None)
         self.delivered_log.append((inst, payload))
+        if group is not None:
+            self.group_log[group].append((inst, payload))
         self.stats["delivered"] += 1
         if self.deliver_cb:
             self.deliver_cb(payload, len(payload), inst)
 
     def _retransmit(self) -> None:
-        for seq, p in list(self._pending.items()):
+        for key, p in list(self._pending.items()):
             p.age += 1
             if p.age >= self.retransmit_after:
                 p.age = 0
                 self.stats["retransmits"] += 1
-                self.net.send("coordinator", ("submit", seq, p.payload))
+                seq = key[1] if isinstance(key, tuple) else key
+                self.net.send("coordinator", ("submit", seq, p.payload, p.group))
 
     def _encode(self, seq: int, payload: bytes) -> np.ndarray:
         nbytes = self.cfg.value_words * 4
@@ -374,7 +790,9 @@ class PaxosContext:
         return np.frombuffer((head + payload).ljust(nbytes, b"\x00"), "<i4").copy()
 
     # -- failover ------------------------------------------------------------
-    def fail_coordinator(self, est_next_inst: Optional[int] = None) -> None:
+    def fail_coordinator(
+        self, est_next_inst: Optional[int] = None, group: int = 0
+    ) -> None:
         """Hardware coordinator dies; a software coordinator takes over.
 
         Runs the *safe* takeover (core.failover): claims a globally unique
@@ -382,7 +800,17 @@ class PaxosContext:
         (possibly stale) sequencer estimate, re-proposes any voted values it
         finds, and resumes sequencing past them — the paper's §3.1/§6.4
         procedure with the catch-up made explicit.
+
+        On a multi-group context this is a *per-group* event: only ``group``
+        moves to software coordination (its hardware round parks at NO_ROUND,
+        making it inert in the shared fused dispatch); every other group keeps
+        hardware-sequencing undisturbed.
         """
+        if not 0 <= group < self.n_groups:
+            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        if self.n_groups > 1:
+            return self._fail_coordinator_group(group, est_next_inst)
+
         from .failover import takeover
 
         est = (
@@ -405,7 +833,44 @@ class PaxosContext:
         )
         return res
 
-    def restore_hardware_coordinator(self) -> None:
+    def _fail_coordinator_group(
+        self, gid: int, est_next_inst: Optional[int]
+    ) -> None:
+        from .failover import takeover_group
+
+        est = (
+            est_next_inst
+            if est_next_inst is not None
+            else int(jax.device_get(self.hw.cstate.next_inst[gid]))
+        )
+        epoch = self._next_epoch
+        self._next_epoch += 1
+        res = takeover_group(
+            self.hw,
+            gid,
+            coordinator_id=1,
+            epoch=epoch,
+            est_next_inst=est,
+            window=self.cfg.batch * 2,
+            quorum=self.cfg.quorum,
+        )
+        self._softco_g[gid] = SoftCoordinator(
+            cid=1, crnd=res.crnd, next_inst=res.next_inst
+        )
+        self.hw.freeze_group(gid)
+        return res
+
+    def restore_hardware_coordinator(self, group: int = 0) -> None:
+        if not 0 <= group < self.n_groups:
+            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        if self.n_groups > 1:
+            co = self._softco_g.pop(group, None)
+            if co is not None:
+                # per-group realignment: only this group's watermark/round
+                # move; the kernel path's block realignment happens inside
+                # restore_group (same §3.1 gap-fill rationale as below)
+                self.hw.restore_group(group, int(co.next_inst), int(co.crnd))
+            return
         if self._softco is None:
             return
         nxt = int(self._softco.next_inst)
@@ -426,8 +891,16 @@ class PaxosContext:
         self._softco = None
 
     def _soft_sequence(self, vals: np.ndarray, active: np.ndarray) -> MsgBatch:
-        co = self._softco
-        assert co is not None
+        assert self._softco is not None
+        return self._soft_p2a(self._softco, vals, active)
+
+    def _soft_p2a(
+        self, co: SoftCoordinator, vals: np.ndarray, active: np.ndarray,
+        gid: Optional[int] = None,
+    ) -> MsgBatch:
+        """Software-coordinator sequencing: bind a burst to the coordinator's
+        next window (shared by the single-group and per-group failover
+        paths; ``gid`` tags the batch with its consensus group)."""
         b = vals.shape[0]
         inst = np.arange(co.next_inst, co.next_inst + b, dtype=np.int32)
         co.next_inst += b
@@ -438,16 +911,35 @@ class PaxosContext:
             vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
             swid=jnp.full((b,), co.cid, jnp.int32),
             value=jnp.asarray(vals),
+            gid=None if gid is None else jnp.int32(gid),
         )
 
     def _run_recover(self, inst: int, nop: bytes) -> None:
-        """Phase 1 + Phase 2 for one instance with a no-op value (paper §3.1)."""
+        """Phase 1 + Phase 2 for one instance with a no-op value (paper §3.1);
+        decided votes fan out to the software learners over SimNet."""
+        votes = self._recover_votes(self.hw, inst, nop)
+        for aid, v in enumerate(votes or []):
+            if v is None:
+                continue
+            for lid in range(self.n_learners):
+                self.net.send(("learner", lid), ("votes", aid, _to_host(v)))
+
+    def _recover_votes(
+        self, surface, inst: int, nop: bytes, gid: Optional[int] = None
+    ) -> Optional[List[Optional[MsgBatch]]]:
+        """The shared recovery engine: Phase-1 scan one instance, choose the
+        required value (discovered vote, else the no-op), Phase-2 it, and
+        return the per-acceptor vote batches (None = no quorum of promises).
+        ``surface`` is any staged dataplane surface — the hardware dataplane
+        or one group's view; ``gid`` tags the batches with their group.
+        """
         from .failover import allocate_round
 
         epoch = self._next_epoch
         self._next_epoch += 1
         crnd = allocate_round(epoch, coordinator_id=2)
         b = self.cfg.batch
+        gtag = None if gid is None else jnp.int32(gid)
         # Filler slots carry a contiguous inst window starting at the target:
         # the vectorized acceptor scatter requires distinct ring slots per
         # batch, and all-zero filler insts would collide with the recovered
@@ -459,8 +951,9 @@ class PaxosContext:
             msgtype=p1a.msgtype.at[0].set(MSG_P1A),
             inst=window,
             rnd=p1a.rnd.at[0].set(crnd),
+            gid=gtag,
         )
-        promises = self.hw.prepare(p1a)
+        promises = surface.prepare(p1a)
         best: Tuple[int, Optional[bytes]] = (NO_ROUND, None)
         got = 0
         for v in promises:
@@ -474,7 +967,7 @@ class PaxosContext:
             if vr > best[0]:
                 best = (vr, host["value"][0].tobytes())
         if got < self.cfg.quorum:
-            return  # cannot recover without a quorum
+            return None  # cannot recover without a quorum
         if best[1] is not None and best[0] != NO_ROUND:
             value_words = np.frombuffer(best[1], "<i4").copy()
         else:
@@ -486,13 +979,9 @@ class PaxosContext:
             inst=window,  # distinct slots; fillers at NO_ROUND never accept
             rnd=p2a.rnd.at[0].set(crnd),
             value=p2a.value.at[0].set(jnp.asarray(value_words)),
+            gid=gtag,
         )
-        votes = self.hw.vote(p2a)
-        for aid, v in enumerate(votes):
-            if v is None:
-                continue
-            for lid in range(self.n_learners):
-                self.net.send(("learner", lid), ("votes", aid, _to_host(v)))
+        return surface.vote(p2a)
 
 
 def _to_host(m: MsgBatch) -> dict:

@@ -14,8 +14,8 @@ from collections import defaultdict
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .network import SimNet
-from .paxos import Acceptor, Coordinator, Learner, Msg, Proposer
-from .types import MSG_P1B, MSG_P2A, MSG_P2B, MSG_REJECT, MSG_SUBMIT, PaxosConfig
+from .paxos import Acceptor, Coordinator, Learner, Proposer
+from .types import MSG_P1B, MSG_P2A, MSG_P2B, MSG_SUBMIT, PaxosConfig
 
 
 class SoftwarePaxos:

@@ -366,3 +366,51 @@ def fused_round(
     )
     lstate, fresh = learner_update(lstate, deliver, inst, value)
     return cstate, stack, lstate, fresh, inst, win, value
+
+
+# ---------------------------------------------------------------------------
+# Multi-group wire path — G independent Paxos groups, one dispatch
+# ---------------------------------------------------------------------------
+def multigroup_fused_round(
+    cstate: CoordinatorState,   # leaves shaped (G,)
+    stack: AcceptorState,       # leaves shaped (G, A, N[, V])
+    lstate: LearnerState,       # leaves shaped (G, N[, V])
+    values: jax.Array,          # int32[G, B, V]
+    active: jax.Array,          # bool[G, B]
+    alive: jax.Array,           # bool[G, A]
+    quorum: int | jax.Array,
+) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+           jax.Array, jax.Array, jax.Array, jax.Array]:
+    """``fused_round`` vmapped over a leading group axis: G device-resident
+    Paxos groups advance one Phase-2 round in a single jnp program.
+
+    Groups are fully independent — per-group sequencer watermark and round,
+    per-group acceptor rings, per-group learner ring and liveness row — so
+    this is bit-identical to running ``fused_round`` per group in a loop.
+    It is the semantic oracle (and CPU fallback) for the Pallas megakernel
+    ``repro.kernels.wirepath.multigroup_wirepath_round`` (DESIGN.md §5).
+    Returns the ``fused_round`` tuple with every output grown a (G,) axis.
+    """
+    return jax.vmap(fused_round, in_axes=(0, 0, 0, 0, 0, 0, None))(
+        cstate, stack, lstate, values, active, alive, quorum
+    )
+
+
+def init_multigroup_state(
+    n_groups: int, n_acceptors: int, n_instances: int, value_words: int
+) -> Tuple[CoordinatorState, AcceptorState, LearnerState]:
+    """Freshly initialized (G,)-stacked coordinator/acceptor/learner state."""
+    cstate = CoordinatorState(
+        next_inst=jnp.zeros((n_groups,), jnp.int32),
+        crnd=jnp.zeros((n_groups,), jnp.int32),
+    )
+    one = AcceptorState.init(n_instances, value_words)
+    stack = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_groups, n_acceptors) + x.shape).copy(),
+        one,
+    )
+    lstate = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(),
+        LearnerState.init(n_instances, value_words),
+    )
+    return cstate, stack, lstate

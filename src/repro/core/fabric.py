@@ -20,7 +20,6 @@ fewer hops", at ICI speed.  Acceptor failure is modelled by an ``alive`` mask
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -28,7 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import batched
-from .types import MSG_P2B, AcceptorState, CoordinatorState, MsgBatch
+from .types import MSG_P2B, AcceptorState, CoordinatorState
 
 NO_ROUND = jnp.int32(-1)
 

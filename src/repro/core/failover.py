@@ -16,13 +16,12 @@ preserves agreement for already-decided instances.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .types import MSG_P1A, MSG_P1B, MSG_P2A, MsgBatch
+from .types import MSG_P1A, MSG_P2A, MsgBatch
 
 NO_ROUND = -1
 
@@ -114,4 +113,33 @@ def takeover(
     next_inst = max(est_next_inst, highest_voted + 1)
     return TakeoverResult(
         crnd=crnd, next_inst=next_inst, reproposed=reproposed, scanned=hi - lo
+    )
+
+
+def takeover_group(
+    mg,                      # MultiGroupDataplane
+    gid: int,
+    *,
+    coordinator_id: int,
+    epoch: int,
+    est_next_inst: int,
+    window: int,
+    quorum: int,
+) -> TakeoverResult:
+    """Per-group coordinator takeover against a multi-group dataplane.
+
+    Runs the exact same safe procedure as :func:`takeover`, but scoped to one
+    group's acceptor rings via ``mg.group_view(gid)`` — the Phase-1 scan, the
+    re-proposals, and the sequencer catch-up touch only that group's slice of
+    the stacked ``(G, A, N)`` state.  Every other group's registers, watermark
+    and round are untouched, which is what makes failover a per-tenant event
+    in the shared-service model (DESIGN.md §5).
+    """
+    return takeover(
+        mg.group_view(gid),
+        coordinator_id=coordinator_id,
+        epoch=epoch,
+        est_next_inst=est_next_inst,
+        window=window,
+        quorum=quorum,
     )

@@ -9,7 +9,7 @@ log view a state-machine-replication application consumes, gap detection
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass

@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import random
 from collections import defaultdict, deque
-from typing import Any, Deque, Dict, Hashable, List, Tuple
+from typing import Any, Deque, Dict, Hashable, List
 
 
 @dataclasses.dataclass

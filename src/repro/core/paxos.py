@@ -19,7 +19,6 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from .types import (
     MSG_DELIVER,
-    MSG_NOP,
     MSG_P1A,
     MSG_P1B,
     MSG_P2A,

@@ -51,6 +51,7 @@ class PaxosConfig:
     n_instances: int = DEFAULT_INSTANCES
     value_words: int = DEFAULT_VALUE_WORDS
     batch: int = 128                  # dataplane batch ("packets per burst")
+    n_groups: int = 1                 # device-resident Paxos groups (G)
 
     @property
     def f(self) -> int:
@@ -67,6 +68,13 @@ class MsgBatch:
     """A batch of Paxos headers, structure-of-arrays.
 
     Shapes: all fields ``[B]`` except ``value`` which is ``[B, V]``.
+
+    ``gid`` is the consensus-group id the batch belongs to when the dataplane
+    serves multiple device-resident groups (the multi-group analogue of the
+    paper's single switch pipeline serving one group).  ``None`` — the
+    default, and the only value on the single-group fast path — means "group
+    0 / untagged"; group routing happens before batching, so a batch is
+    always homogeneous and one scalar-per-batch id suffices.
     """
 
     msgtype: jax.Array   # int32[B]
@@ -75,10 +83,12 @@ class MsgBatch:
     vrnd: jax.Array      # int32[B]
     swid: jax.Array      # int32[B]  sender id
     value: jax.Array     # int32[B, V]
+    gid: Any = None      # optional scalar int32: consensus group id
 
     def tree_flatten(self):
         return (
-            (self.msgtype, self.inst, self.rnd, self.vrnd, self.swid, self.value),
+            (self.msgtype, self.inst, self.rnd, self.vrnd, self.swid,
+             self.value, self.gid),
             None,
         )
 

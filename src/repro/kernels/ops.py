@@ -89,7 +89,6 @@ def learner_quorum(
         vote_value,
         interpret=INTERPRET,
     )
-    b = vote_inst.shape[1]
     inst = vote_inst[0]  # position-aligned batches: inst identical across A
     return deliver.astype(bool), inst, win, value
 
@@ -132,6 +131,61 @@ def fused_round(
         )
     )
     inst = cstate.next_inst + jnp.arange(b, dtype=jnp.int32)
+    new_c = CoordinatorState(
+        next_inst=cstate.next_inst + b, crnd=cstate.crnd
+    )
+    return (
+        new_c,
+        AcceptorState(st_rnd, st_vrnd, st_val),
+        LearnerState(ldel, linst, lval),
+        fresh != 0,
+        inst,
+        win,
+        value,
+    )
+
+
+def multigroup_fused_round(
+    cstate: CoordinatorState,   # leaves shaped (G,)
+    stack: AcceptorState,       # leaves shaped (G, A, N[, V])
+    lstate: LearnerState,       # leaves shaped (G, N[, V])
+    values: jax.Array,          # int32[G, B, V]
+    active: jax.Array,          # bool[G, B]
+    alive: jax.Array,           # bool[G, A]
+    quorum: int | jax.Array,
+    *,
+    group_block: int = 1,
+) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+           jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Kernel-backed drop-in for ``batched.multigroup_fused_round`` — G
+    device-resident Paxos groups, one ``pallas_call`` (DESIGN.md §5).
+
+    ``active`` never reaches the device for the same reason as in
+    ``fused_round``.  ``group_block > 1`` folds groups into one grid step —
+    legal only when the folded groups' watermarks are in lockstep, which the
+    ``MultiGroupDataplane`` checks against its host watermark mirrors.
+    Precondition: every group's ``next_inst`` is block-aligned.
+    """
+    del active  # sequenced fillers vote like P2As; see fused_round
+    b = values.shape[1]
+    (st_rnd, st_vrnd, st_val, ldel, linst, lval, fresh, win, value) = (
+        _wirepath.multigroup_wirepath_round(
+            cstate.next_inst,
+            cstate.crnd,
+            jnp.asarray(quorum, jnp.int32),
+            jnp.asarray(alive, jnp.int32),
+            stack.rnd,
+            stack.vrnd,
+            stack.value,
+            lstate.delivered,
+            lstate.inst,
+            lstate.value,
+            values,
+            group_block=group_block,
+            interpret=INTERPRET,
+        )
+    )
+    inst = cstate.next_inst[:, None] + jnp.arange(b, dtype=jnp.int32)[None, :]
     new_c = CoordinatorState(
         next_inst=cstate.next_inst + b, crnd=cstate.crnd
     )

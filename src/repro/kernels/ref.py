@@ -18,7 +18,6 @@ from repro.core.types import (
     MSG_NOP,
     MSG_P2A,
     MSG_P2B,
-    MSG_REJECT,
     AcceptorState,
     MsgBatch,
 )

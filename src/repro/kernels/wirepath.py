@@ -1,38 +1,45 @@
-"""Pallas TPU megakernel: the fused CAANS wire path.
+"""Pallas TPU megakernel: the fused CAANS wire path, for G resident groups.
 
 One ``pallas_call`` executes a *complete* Phase-2 round — coordinator
 sequencing, the Phase-2 vote of all ``A = 2f+1`` acceptors against the
-stacked ``(A, N)`` instance ring, the learner quorum count, and the
-``LearnerState`` ring-dedup update.  This is the TPU analogue of the paper's
-core claim: once consensus logic lives below the host boundary, a Paxos round
-costs barely more than forwarding the packets (PAPER.md; DESIGN.md §3).
+stacked instance rings, the learner quorum count, and the ``LearnerState``
+ring-dedup update — for **G independent Paxos groups at once**.  This is the
+TPU analogue of the paper's core claim (a consensus round costs barely more
+than forwarding the packets) combined with NetChain's scale-free observation:
+a device pipeline serves *many* replicated groups as one shared service
+(PAPER.md; DESIGN.md §3, §5).
 
-Layout (DESIGN.md §3):
+Layout (DESIGN.md §5):
 
-    grid = (B // BB,)            # one step per batch block — nothing else
-    stacked rings  (A, N)[, V]   --BlockSpec (A, BB)-->   VMEM, in-place
-    learner ring   (N,)[, V]     --BlockSpec (BB,)  -->   VMEM, in-place
-    burst values   (B, V)        --BlockSpec (BB, V)-->   VMEM
-    fresh/win/value outputs      <--                      VMEM
+    grid = (G // GB, B // BB)       # group axis x batch axis
+    stacked rings  (G, A, N)[, V]   --BlockSpec (GB, A, BB)-->  VMEM, in-place
+    learner rings  (G, N)[, V]      --BlockSpec (GB, BB)  -->   VMEM, in-place
+    burst values   (G, B, V)        --BlockSpec (GB, BB, V)-->  VMEM
+    fresh/win/value outputs         <--                         VMEM
 
-The acceptor axis rides the *sublane* dimension of one block: a single grid
-step loads every acceptor's ring window, votes all of them in-register, and
-reduces the quorum count straight down axis 0 — the entire round for a batch
-block is one load -> VREG compare/select -> reduce -> store pass, with no
-inner acceptor loop anywhere (host or grid).  All five state arrays are
-passed through ``input_output_aliases``: coordinator/acceptor/learner state
-never round-trips through host memory between pump rounds.
+Groups never interact: each has its own coordinator watermark/round (the
+``next_inst``/``crnd`` scalar-prefetch vectors are per-group), its own
+acceptor rings, its own learner ring, and its own liveness row in the
+``(G, A)`` alive mask.  The quorum reduction runs down the acceptor axis
+*within* each group block.
 
-In-kernel sequencing collapses to round-stamping: the window
-``[next_inst, next_inst + B)`` is implied by the grid, and sequenced NOP
-fillers vote exactly like P2As (the application discards them by value), so
-no per-message msgtype materializes on the fast path.
+``group_block`` picks the group→grid mapping:
 
-Invariants (maintained by ``core.api.HardwareDataplane``, asserted where
-shapes are static): ``BB | B``, ``BB | N``, ``B <= N``, and the window base
-``next_inst`` is BB-aligned.  Liveness is a *runtime* input — the ``alive``
-mask rides in scalar-prefetch SMEM, so killing/reviving an acceptor never
-recompiles the kernel.
+  * ``group_block=1`` (default): one group per grid step, each group's ring
+    window derived from its own watermark — fully general, including groups
+    whose watermarks diverged after a per-group coordinator failover.
+  * ``group_block=GB>1``: GB groups ride the leading block dimension of a
+    single grid step (the batch analogue of the acceptor-in-block decision).
+    Requires the GB groups of a block to share one BB-aligned watermark
+    ("lockstep"), since a block has a single ring offset.  This is the
+    highest-amortization mapping for the common case of a service pumping
+    all groups together.
+
+Invariants (maintained by ``core.api.MultiGroupDataplane``, asserted where
+shapes are static): ``BB | B``, ``BB | N``, ``B <= N``, ``GB | G``, and every
+group's window base is BB-aligned.  Liveness is a *runtime* input — the
+``(G, A)`` alive mask rides in scalar-prefetch SMEM, so killing/reviving an
+acceptor in any group never recompiles the kernel.
 """
 from __future__ import annotations
 
@@ -63,72 +70,206 @@ def _alive_col(alive_ref, a: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# The fused round megakernel
+# The fused multi-group round megakernel
 # ---------------------------------------------------------------------------
-def _wirepath_kernel(
-    # scalar prefetch (SMEM)
-    ni_ref,         # int32[1]  next_inst: absolute window base, BB-aligned
-    crnd_ref,       # int32[1]  coordinator round
-    q_ref,          # int32[1]  quorum (f+1)
-    alive_ref,      # int32[A]  runtime liveness mask
+def _mg_wirepath_kernel(
+    # scalar prefetch (SMEM) — consumed by the index maps; the kernel body
+    # reads the same per-group values from the VMEM mirrors below, as vector
+    # loads instead of G*A scalar gathers (the per-group marginal cost)
+    ni_ref,         # int32[G]     per-group window base, BB-aligned
+    crnd_ref,       # int32[G]     per-group coordinator round
+    q_ref,          # int32[1]     quorum (f+1)
+    alive_ref,      # int32[G, A]  per-group runtime liveness mask
     # inputs (VMEM tiles)
-    values_ref,     # int32[BB, V]     burst values
-    st_rnd_ref,     # int32[A, BB]     acceptor ring blocks (aliased out)
-    st_vrnd_ref,    # int32[A, BB]
-    st_val_ref,     # int32[A, BB, V]
-    ldel_ref,       # int32[BB]        learner ring block (aliased out)
-    linst_ref,      # int32[BB]
-    lval_ref,       # int32[BB, V]
+    values_ref,     # int32[GB, BB, V]     burst values
+    st_rnd_ref,     # int32[GB, A, BB]     acceptor ring blocks (aliased out)
+    st_vrnd_ref,    # int32[GB, A, BB]
+    st_val_ref,     # int32[GB, A, BB, V]
+    ldel_ref,       # int32[GB, BB]        learner ring blocks (aliased out)
+    linst_ref,      # int32[GB, BB]
+    lval_ref,       # int32[GB, BB, V]
+    niv_ref,        # int32[GB]     VMEM mirror of ni_ref's block
+    crndv_ref,      # int32[GB]     VMEM mirror of crnd_ref's block
+    alivev_ref,     # int32[GB, A]  VMEM mirror of alive_ref's block
     # outputs
-    o_rnd_ref,      # int32[A, BB]
-    o_vrnd_ref,     # int32[A, BB]
-    o_val_ref,      # int32[A, BB, V]
-    o_ldel_ref,     # int32[BB]
-    o_linst_ref,    # int32[BB]
-    o_lval_ref,     # int32[BB, V]
-    fresh_ref,      # int32[BB]  out: fresh (non-duplicate) delivery mask
-    win_ref,        # int32[BB]  out: winning vrnd (NO_ROUND if none)
-    value_ref,      # int32[BB, V]  out: decided value
+    o_rnd_ref,      # int32[GB, A, BB]
+    o_vrnd_ref,     # int32[GB, A, BB]
+    o_val_ref,      # int32[GB, A, BB, V]
+    o_ldel_ref,     # int32[GB, BB]
+    o_linst_ref,    # int32[GB, BB]
+    o_lval_ref,     # int32[GB, BB, V]
+    fresh_ref,      # int32[GB, BB]  out: fresh (non-duplicate) delivery mask
+    win_ref,        # int32[GB, BB]  out: winning vrnd (NO_ROUND if none)
+    value_ref,      # int32[GB, BB, V]  out: decided value
 ):
-    i = pl.program_id(0)
-    a, bb = st_rnd_ref.shape
+    del ni_ref, crnd_ref, alive_ref  # index-map inputs; body uses the mirrors
+    i = pl.program_id(1)
+    _gb, _a, bb = st_rnd_ref.shape
 
-    crnd = crnd_ref[0]
-    mval = values_ref[...]
-    alive = _alive_col(alive_ref, a)                      # (A, 1)
+    ni_g = niv_ref[...]                                            # (GB,)
+    crnd_g = crndv_ref[...]                                        # (GB,)
+    alive = alivev_ref[...] != 0                                   # (GB, A)
 
-    # -- the acceptor array votes (Phase 2A -> 2B), all A at once ------------
-    cur_rnd = st_rnd_ref[...]                             # (A, BB)
+    crnd = crnd_g[:, None, None]                                   # (GB, 1, 1)
+    mval = values_ref[...]                                         # (GB, BB, V)
+
+    # -- every group's acceptor array votes (Phase 2A -> 2B), all at once ----
+    cur_rnd = st_rnd_ref[...]                                      # (GB, A, BB)
     cur_vrnd = st_vrnd_ref[...]
     cur_val = st_val_ref[...]
-    accept = alive & (crnd >= cur_rnd)                    # (A, BB)
+    accept = alive[:, :, None] & (crnd >= cur_rnd)                 # (GB, A, BB)
 
     o_rnd_ref[...] = jnp.where(accept, crnd, cur_rnd)
     o_vrnd_ref[...] = jnp.where(accept, crnd, cur_vrnd)
-    o_val_ref[...] = jnp.where(accept[:, :, None], mval[None], cur_val)
+    o_val_ref[...] = jnp.where(accept[..., None], mval[:, None], cur_val)
 
-    # -- learner quorum: reduce straight down the acceptor axis --------------
-    vote_vrnd = jnp.where(accept, crnd, NO_ROUND)         # (A, BB)
-    win = jnp.max(vote_vrnd, axis=0)                      # (BB,)
-    agree = accept & (vote_vrnd == win[None, :])          # (A, BB)
-    count = jnp.sum(agree.astype(jnp.int32), axis=0)      # (BB,)
+    # -- learner quorum: reduce down the acceptor axis, per group ------------
+    vote_vrnd = jnp.where(accept, crnd, NO_ROUND)                  # (GB, A, BB)
+    win = jnp.max(vote_vrnd, axis=1)                               # (GB, BB)
+    agree = accept & (vote_vrnd == win[:, None, :])                # (GB, A, BB)
+    count = jnp.sum(agree.astype(jnp.int32), axis=1)               # (GB, BB)
     deliver = count >= q_ref[0]
     # decided value: first agreeing acceptor's vote, as a one-hot contraction
-    first = agree & (jnp.cumsum(agree.astype(jnp.int32), axis=0) == 1)
-    vote_val = jnp.where(accept[:, :, None], mval[None], 0)
-    value = jnp.sum(first.astype(jnp.int32)[:, :, None] * vote_val, axis=0)
+    first = agree & (jnp.cumsum(agree.astype(jnp.int32), axis=1) == 1)
+    vote_val = jnp.where(accept[..., None], mval[:, None], 0)      # (GB,A,BB,V)
+    value = jnp.sum(first.astype(jnp.int32)[..., None] * vote_val, axis=1)
 
-    # -- ring dedup (LearnerState), in place ---------------------------------
-    inst = ni_ref[0] + i * bb + _lane_iota(bb)
+    # -- ring dedup (LearnerState), in place, per group ----------------------
+    inst = ni_g[:, None] + i * bb + _lane_iota(bb)[None, :]        # (GB, BB)
     dup = (ldel_ref[...] != 0) & (linst_ref[...] == inst)
     fresh = deliver & ~dup
     o_ldel_ref[...] = ldel_ref[...] | deliver.astype(jnp.int32)
     o_linst_ref[...] = jnp.where(fresh, inst, linst_ref[...])
-    o_lval_ref[...] = jnp.where(fresh[:, None], value, lval_ref[...])
+    o_lval_ref[...] = jnp.where(fresh[..., None], value, lval_ref[...])
 
     fresh_ref[...] = fresh.astype(jnp.int32)
     win_ref[...] = win
     value_ref[...] = value
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "group_block", "interpret")
+)
+def multigroup_wirepath_round(
+    next_inst: jax.Array,   # int32[G]  per-group window base (BB-aligned)
+    crnd: jax.Array,        # int32[G]  per-group coordinator round
+    quorum: jax.Array,      # int32[]
+    alive: jax.Array,       # int32[G, A] (0/1)
+    st_rnd: jax.Array,      # int32[G, A, N]   stacked acceptor rings
+    st_vrnd: jax.Array,     # int32[G, A, N]
+    st_val: jax.Array,      # int32[G, A, N, V]
+    ldel: jax.Array,        # int32[G, N]      learner rings
+    linst: jax.Array,       # int32[G, N]
+    lval: jax.Array,        # int32[G, N, V]
+    values: jax.Array,      # int32[G, B, V]   per-group burst values
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    group_block: int = 1,
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """One fused Phase-2 round for G device-resident groups; single dispatch.
+
+    ``group_block > 1`` folds that many groups into each grid step (see the
+    module docstring); the folded groups of a block must share one BB-aligned
+    watermark — the caller's responsibility (``MultiGroupDataplane`` only
+    folds when its host watermark mirrors are in lockstep).
+
+    Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
+    fresh[G, B], win_vrnd[G, B], value[G, B, V])``.
+    """
+    g, a, n = st_rnd.shape
+    _, b, v = values.shape
+    bb = min(block_b, b)
+    gb = group_block
+    assert b % bb == 0, (b, bb)
+    assert n % bb == 0, (n, bb)
+    assert b <= n, "burst may not lap the instance ring"
+    assert g % gb == 0, (g, gb)
+    nb_ring = n // bb
+    grid = (g // gb, b // bb)
+
+    # Ring offset of a block comes from its first group's watermark; with
+    # group_block == 1 that IS the group's own watermark, with group_block > 1
+    # the caller guarantees the folded groups are in lockstep.
+    def ring2(gi, i, ni_ref, *_):
+        return (gi, (ni_ref[gi * gb] // bb + i) % nb_ring)
+
+    def ring3(gi, i, ni_ref, *_):
+        return (gi, (ni_ref[gi * gb] // bb + i) % nb_ring, 0)
+
+    def stack3(gi, i, ni_ref, *_):
+        return (gi, 0, (ni_ref[gi * gb] // bb + i) % nb_ring)
+
+    def stack4(gi, i, ni_ref, *_):
+        return (gi, 0, (ni_ref[gi * gb] // bb + i) % nb_ring, 0)
+
+    def batch2(gi, i, *_):
+        return (gi, i)
+
+    def batch3(gi, i, *_):
+        return (gi, i, 0)
+
+    def group1(gi, i, *_):
+        return (gi,)
+
+    def group2(gi, i, *_):
+        return (gi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((gb, bb, v), batch3),       # values
+            pl.BlockSpec((gb, a, bb), stack3),       # st_rnd
+            pl.BlockSpec((gb, a, bb), stack3),       # st_vrnd
+            pl.BlockSpec((gb, a, bb, v), stack4),    # st_val
+            pl.BlockSpec((gb, bb), ring2),           # ldel
+            pl.BlockSpec((gb, bb), ring2),           # linst
+            pl.BlockSpec((gb, bb, v), ring3),        # lval
+            pl.BlockSpec((gb,), group1),             # ni (VMEM mirror)
+            pl.BlockSpec((gb,), group1),             # crnd (VMEM mirror)
+            pl.BlockSpec((gb, a), group2),           # alive (VMEM mirror)
+        ],
+        out_specs=[
+            pl.BlockSpec((gb, a, bb), stack3),       # st_rnd'
+            pl.BlockSpec((gb, a, bb), stack3),       # st_vrnd'
+            pl.BlockSpec((gb, a, bb, v), stack4),    # st_val'
+            pl.BlockSpec((gb, bb), ring2),           # ldel'
+            pl.BlockSpec((gb, bb), ring2),           # linst'
+            pl.BlockSpec((gb, bb, v), ring3),        # lval'
+            pl.BlockSpec((gb, bb), batch2),          # fresh
+            pl.BlockSpec((gb, bb), batch2),          # win_vrnd
+            pl.BlockSpec((gb, bb, v), batch3),       # value
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((g, a, n), jnp.int32),
+        jax.ShapeDtypeStruct((g, a, n), jnp.int32),
+        jax.ShapeDtypeStruct((g, a, n, v), jnp.int32),
+        jax.ShapeDtypeStruct((g, n), jnp.int32),
+        jax.ShapeDtypeStruct((g, n), jnp.int32),
+        jax.ShapeDtypeStruct((g, n, v), jnp.int32),
+        jax.ShapeDtypeStruct((g, b), jnp.int32),
+        jax.ShapeDtypeStruct((g, b), jnp.int32),
+        jax.ShapeDtypeStruct((g, b, v), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        _mg_wirepath_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        # all five state arrays update in place: inputs 5..10 (after the 4
+        # scalar-prefetch args) alias outputs 0..5 — device-resident state
+        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5},
+        interpret=interpret,
+    )
+    ni = jnp.asarray(next_inst, jnp.int32).reshape((g,))
+    cr = jnp.asarray(crnd, jnp.int32).reshape((g,))
+    q = jnp.asarray(quorum, jnp.int32).reshape((1,))
+    al = jnp.asarray(alive, jnp.int32).reshape((g, a))
+    return tuple(
+        fn(ni, cr, q, al, values, st_rnd, st_vrnd, st_val, ldel, linst, lval,
+           ni, cr, al)
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
@@ -148,89 +289,28 @@ def wirepath_round(
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
 ) -> Tuple[jax.Array, ...]:
-    """One fused Phase-2 round; single dispatch, state resident in place.
+    """One fused Phase-2 round for a single group: the G=1 slice of
+    ``multigroup_wirepath_round`` (same kernel, one group on the grid).
 
     Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
     fresh[B], win_vrnd[B], value[B, V])``.
     """
-    a, n = st_rnd.shape
-    b, v = values.shape
-    bb = min(block_b, b)
-    assert b % bb == 0, (b, bb)
-    assert n % bb == 0, (n, bb)
-    assert b <= n, "burst may not lap the instance ring"
-    nb_ring = n // bb
-    grid = (b // bb,)
-
-    def ring1(i, ni_ref, *_):
-        return ((ni_ref[0] // bb + i) % nb_ring,)
-
-    def ring2(i, ni_ref, *_):
-        return ((ni_ref[0] // bb + i) % nb_ring, 0)
-
-    def stack2(i, ni_ref, *_):
-        return (0, (ni_ref[0] // bb + i) % nb_ring)
-
-    def stack3(i, ni_ref, *_):
-        return (0, (ni_ref[0] // bb + i) % nb_ring, 0)
-
-    def batch1(i, *_):
-        return (i,)
-
-    def batch2(i, *_):
-        return (i, 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, v), batch2),       # values
-            pl.BlockSpec((a, bb), stack2),       # st_rnd
-            pl.BlockSpec((a, bb), stack2),       # st_vrnd
-            pl.BlockSpec((a, bb, v), stack3),    # st_val
-            pl.BlockSpec((bb,), ring1),          # ldel
-            pl.BlockSpec((bb,), ring1),          # linst
-            pl.BlockSpec((bb, v), ring2),        # lval
-        ],
-        out_specs=[
-            pl.BlockSpec((a, bb), stack2),       # st_rnd'
-            pl.BlockSpec((a, bb), stack2),       # st_vrnd'
-            pl.BlockSpec((a, bb, v), stack3),    # st_val'
-            pl.BlockSpec((bb,), ring1),          # ldel'
-            pl.BlockSpec((bb,), ring1),          # linst'
-            pl.BlockSpec((bb, v), ring2),        # lval'
-            pl.BlockSpec((bb,), batch1),         # fresh
-            pl.BlockSpec((bb,), batch1),         # win_vrnd
-            pl.BlockSpec((bb, v), batch2),       # value
-        ],
-    )
-    out_shapes = [
-        jax.ShapeDtypeStruct((a, n), jnp.int32),
-        jax.ShapeDtypeStruct((a, n), jnp.int32),
-        jax.ShapeDtypeStruct((a, n, v), jnp.int32),
-        jax.ShapeDtypeStruct((n,), jnp.int32),
-        jax.ShapeDtypeStruct((n,), jnp.int32),
-        jax.ShapeDtypeStruct((n, v), jnp.int32),
-        jax.ShapeDtypeStruct((b,), jnp.int32),
-        jax.ShapeDtypeStruct((b,), jnp.int32),
-        jax.ShapeDtypeStruct((b, v), jnp.int32),
-    ]
-    fn = pl.pallas_call(
-        _wirepath_kernel,
-        grid_spec=grid_spec,
-        out_shape=out_shapes,
-        # all five state arrays update in place: inputs 5..10 (after the 4
-        # scalar-prefetch args) alias outputs 0..5 — device-resident state
-        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5},
+    outs = multigroup_wirepath_round(
+        jnp.asarray(next_inst, jnp.int32).reshape((1,)),
+        jnp.asarray(crnd, jnp.int32).reshape((1,)),
+        quorum,
+        jnp.asarray(alive, jnp.int32)[None],
+        st_rnd[None],
+        st_vrnd[None],
+        st_val[None],
+        ldel[None],
+        linst[None],
+        lval[None],
+        values[None],
+        block_b=block_b,
         interpret=interpret,
     )
-    ni = jnp.asarray(next_inst, jnp.int32).reshape((1,))
-    cr = jnp.asarray(crnd, jnp.int32).reshape((1,))
-    q = jnp.asarray(quorum, jnp.int32).reshape((1,))
-    al = jnp.asarray(alive, jnp.int32)
-    return tuple(
-        fn(ni, cr, q, al, values, st_rnd, st_vrnd, st_val, ldel, linst, lval)
-    )
+    return tuple(x[0] for x in outs)
 
 
 # ---------------------------------------------------------------------------

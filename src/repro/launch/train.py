@@ -15,13 +15,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import PaxosConfig, PaxosContext
 from repro.launch import sharding as sh
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models import registry
 from repro.train import checkpoint as ckpt_mod
 from repro.train import data as data_mod
 from repro.train import optimizer as opt_mod

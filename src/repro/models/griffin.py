@@ -206,7 +206,6 @@ def forward(cfg, params, batch, *, collect_cache: bool = False):
     body_fn = L.checkpoint_fn(super_body, cfg)
     h, sc = jax.lax.scan(body_fn, h, params["super"])
 
-    rem_states = []
     if n_rem:
         def rem_body(carry, blk):
             x, st = _rec_block(blk, carry, cfg)

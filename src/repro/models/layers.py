@@ -192,7 +192,7 @@ def flash_attention(
         )
 
         def per_k_chunk(carry, inputs):
-            acc, m, l = carry
+            acc, m, lse = carry
             k_blk, v_blk, kpos, kvalid = inputs
             s = jnp.einsum(
                 "bqkgd,bskd->bqkgs", q_blk, k_blk,
@@ -208,21 +208,21 @@ def flash_attention(
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l = l * alpha + jnp.sum(p, axis=-1)
+            lse = lse * alpha + jnp.sum(p, axis=-1)
             pv = jnp.einsum(
                 "bqkgs,bskd->bqkgd", p.astype(v_blk.dtype), v_blk,
                 preferred_element_type=jnp.float32,
             )
             acc = acc * alpha[..., None] + pv
-            return (acc, m_new, l), None
+            return (acc, m_new, lse), None
 
         acc0 = jnp.zeros((b, cq, kvh, g, d), jnp.float32)
         m0 = jnp.full((b, cq, kvh, g), -jnp.inf, jnp.float32)
         l0 = jnp.zeros((b, cq, kvh, g), jnp.float32)
-        (acc, m, l), _ = jax.lax.scan(
+        (acc, m, lse), _ = jax.lax.scan(
             per_k_chunk, (acc0, m0, l0), (kr, vr, kposr, kvalidr)
         )
-        return acc / jnp.maximum(l[..., None], 1e-30)
+        return acc / jnp.maximum(lse[..., None], 1e-30)
 
     out = jax.lax.map(
         lambda args: per_q_chunk(*args),

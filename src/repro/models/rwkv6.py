@@ -13,7 +13,7 @@ O(1) state); decode is a single recurrence step — which is what makes the
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -209,7 +209,6 @@ def prefill(cfg, params, batch):
 
 def decode_step(cfg, params, tokens, cache, pos):
     """One-token step: O(1) state update per layer (no KV cache)."""
-    b = tokens.shape[0]
     h = params["embed"][tokens[:, 0]].astype(params["embed"].dtype)  # (B, D)
     hheads, hd = cfg.n_heads, cfg.rwkv_head_dim
 

@@ -7,7 +7,7 @@ over the encoder output, GELU MLPs, tied embeddings.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -241,8 +241,6 @@ def decode_step(cfg, params, tokens, cache, pos):
 
 def _pos_embed_at(pos: jax.Array, d: int) -> jax.Array:
     """Sinusoidal position embedding for one (traced) position."""
-    import math
-
     dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
     ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d][None]

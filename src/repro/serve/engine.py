@@ -1,15 +1,22 @@
-"""Serving engine: batched prefill + decode over any registry architecture.
+"""Serving engine: batched prefill + decode over any registry architecture,
+plus the consensus-as-a-service front door.
 
 ``prefill_step`` and ``serve_step`` are the two lowered entry points of the
 inference shapes (``prefill_32k`` lowers prefill; ``decode_32k`` /
 ``long_500k`` lower one ``serve_step`` against a seq_len-deep cache).  The
 host-side ``ServeLoop`` runs continuous batching over them for the examples
 and benchmarks.
+
+``ConsensusService`` is the serving tier of the multi-group dataplane
+(DESIGN.md §5): client *sessions* hash-route onto the G device-resident
+Paxos groups of a multi-group ``PaxosContext``, so millions of independent
+session streams share one fused dispatch while each session keeps a total
+order within its group.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +51,86 @@ class Request:
     prompt: np.ndarray         # (S,) int32
     max_new: int = 16
     generated: Optional[List[int]] = None
+
+
+# ---------------------------------------------------------------------------
+# Consensus as a service: session -> group routing over the fused dataplane
+# ---------------------------------------------------------------------------
+_FNV_OFFSET = 0x811C9DC5
+_FNV_PRIME = 0x01000193
+
+
+def session_group(session_id, n_groups: int) -> int:
+    """Deterministic session -> consensus-group routing (32-bit FNV-1a).
+
+    Stable across processes and runs (unlike Python's salted ``hash``), cheap
+    enough for the submit path, and uniform enough that G groups see balanced
+    load from arbitrary session-id distributions.
+    """
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    if isinstance(session_id, bytes):
+        data = session_id
+    elif isinstance(session_id, str):
+        data = session_id.encode()
+    else:
+        # variable-length encoding: arbitrary-width ints (uuid4().int is
+        # 128-bit) must not overflow a fixed 8-byte window
+        sid = int(session_id)
+        data = sid.to_bytes(
+            max(1, (sid.bit_length() + 8) // 8), "little", signed=True
+        )
+    h = _FNV_OFFSET
+    for byte in data:
+        h = ((h ^ byte) * _FNV_PRIME) & 0xFFFFFFFF
+    return h % n_groups
+
+
+class ConsensusService:
+    """Front door of the multi-group consensus dataplane.
+
+    Wraps a (multi-group) ``PaxosContext``: ``submit`` hash-routes a client
+    session's value to its group, ``pump``/``run_until_quiescent`` drive the
+    shared fused dispatch, and ``delivered`` reads a session's group log —
+    the per-group total order every session in that group observes.
+    """
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.n_groups = ctx.cfg.n_groups
+        self.stats = {"submitted": 0}
+        # bounded introspection state: G counters, not a per-session map —
+        # the hash is pure and cheap, and a session universe of millions
+        # must not accrete host memory in the routing tier
+        self.submits_per_group = [0] * self.n_groups
+
+    def group_of(self, session_id) -> int:
+        return session_group(session_id, self.n_groups)
+
+    def submit(self, session_id, payload: bytes) -> Tuple[int, int]:
+        """Route one value; returns ``(group, client_seq)``."""
+        gid = self.group_of(session_id)
+        seq = self.ctx.submit(payload, group=gid)
+        self.stats["submitted"] += 1
+        self.submits_per_group[gid] += 1
+        return gid, seq
+
+    def pump(self, rounds: int = 1) -> None:
+        self.ctx.pump(rounds)
+
+    def run_until_quiescent(self, max_rounds: int = 64) -> None:
+        self.ctx.run_until_quiescent(max_rounds)
+
+    def delivered(self, session_id) -> List[Tuple[int, bytes]]:
+        """The (inst, payload) log of the session's group, in decided order."""
+        gid = self.group_of(session_id)
+        if self.n_groups == 1:
+            return list(self.ctx.delivered_log)
+        return list(self.ctx.group_log[gid])
+
+    def group_loads(self) -> List[int]:
+        """Values submitted per group (load-balance introspection)."""
+        return list(self.submits_per_group)
 
 
 class ServeLoop:

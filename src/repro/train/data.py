@@ -11,10 +11,8 @@ are yielded host-local and assembled into the global array by
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -15,9 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import List, Optional, Tuple
-
-import jax
+from typing import List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

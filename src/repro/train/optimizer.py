@@ -32,7 +32,9 @@ class OptState(NamedTuple):
 
 
 def init(params) -> OptState:
-    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return OptState(
         mu=jax.tree_util.tree_map(f32, params),
         nu=jax.tree_util.tree_map(f32, params),
@@ -42,7 +44,9 @@ def init(params) -> OptState:
 
 def init_shapes(param_shapes) -> OptState:
     """ShapeDtypeStruct version (dry-run)."""
-    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    def f32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
     return OptState(
         mu=jax.tree_util.tree_map(f32, param_shapes),
         nu=jax.tree_util.tree_map(f32, param_shapes),
@@ -64,7 +68,7 @@ def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
     )
 
 

@@ -12,7 +12,6 @@ tests) or the PaxosContext (host tests).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,8 +1,6 @@
 """Fused dataplane (single-dispatch Phase-2 round) vs the staged path."""
 from __future__ import annotations
 
-import numpy as np
-
 from _hypothesis_compat import given, settings, st
 
 from repro.core import FaultSpec, PaxosConfig, PaxosContext, SimNet

@@ -14,7 +14,6 @@ import pytest
 from repro.configs import get_config
 from repro.core import FaultSpec, PaxosConfig, PaxosContext, ReplicatedLog, SimNet
 from repro.core.failover import allocate_round, takeover
-from repro.models import registry
 from repro.train import checkpoint as ckpt_mod
 from repro.train import elastic, train_loop
 from repro.train.data import DataConfig, SyntheticStream

@@ -1,7 +1,6 @@
 """Pallas flash-attention kernel vs direct-softmax oracle (interpret mode)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -7,8 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 
 def _run(code: str, devices: int = 8) -> str:
     env_code = (

@@ -1,0 +1,192 @@
+"""Multi-group consensus as a service: context-level parity and routing.
+
+The contract under test (DESIGN.md §5): a ``PaxosContext`` over G
+device-resident groups behaves exactly like G *independent* single-group
+contexts — same per-group delivery logs, same device register files — while
+actually advancing all groups through ONE fused dispatch per burst.  That
+must hold through per-group acceptor death and a coordinator failover in one
+group (which may not perturb any other group), on both the jnp oracle path
+and the Pallas kernel path.  ``ConsensusService`` adds the serving tier:
+deterministic session -> group hash routing.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import MultiGroupDataplane, PaxosConfig, PaxosContext
+from repro.serve.engine import ConsensusService, session_group
+
+G = 4
+CFG_MG = PaxosConfig(n_acceptors=3, n_instances=512, batch=16, n_groups=G)
+CFG_1 = PaxosConfig(n_acceptors=3, n_instances=512, batch=16)
+
+
+def _group_state(hw, gid: int):
+    """Host copies of one group's acceptor + learner device state."""
+    src = (hw.stack, hw.lstate)
+    if isinstance(hw, MultiGroupDataplane):
+        src = jax.tree_util.tree_map(lambda x: x[gid], src)
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(src)]
+
+
+def _run_schedule(ctx, groups, waves, use_groups: bool):
+    """Submit ``waves`` rounds of one payload per group, pumping each wave."""
+    for w in range(waves):
+        for gid in groups:
+            payload = f"w{w}g{gid}".encode()
+            if use_groups:
+                ctx.submit(payload, group=gid)
+            else:
+                ctx.submit(payload)
+        ctx.run_until_quiescent()
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_groups_match_independent_contexts(use_kernels):
+    """G fused groups == G independent single-group contexts, bit for bit,
+    including a dead acceptor in one group."""
+    mg = PaxosContext(CFG_MG, use_kernels=use_kernels)
+    singles = [
+        PaxosContext(CFG_1, use_kernels=use_kernels, fused=True)
+        for _ in range(G)
+    ]
+    mg.hw.kill_acceptor(2, 1)       # group 2 loses acceptor 1...
+    singles[2].hw.kill_acceptor(1)  # ...and so does its independent twin
+
+    _run_schedule(mg, range(G), waves=3, use_groups=True)
+    for gid, ctx in enumerate(singles):
+        _run_schedule(ctx, [gid], waves=3, use_groups=False)
+
+    for gid, ctx in enumerate(singles):
+        assert mg.group_log[gid] == ctx.delivered_log, gid
+        for a, b in zip(_group_state(mg.hw, gid), _group_state(ctx.hw, gid)):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_group_failover_does_not_perturb_others(use_kernels):
+    """Coordinator failover in one group: that group fails over to software
+    sequencing and back, while every other group's delivery log and device
+    registers stay bit-identical to independent contexts that never saw a
+    failover."""
+    victim = 1
+    mg = PaxosContext(CFG_MG, use_kernels=use_kernels)
+    singles = [
+        PaxosContext(CFG_1, use_kernels=use_kernels, fused=True)
+        for _ in range(G)
+    ]
+
+    _run_schedule(mg, range(G), waves=2, use_groups=True)
+    for gid, ctx in enumerate(singles):
+        _run_schedule(ctx, [gid], waves=2, use_groups=False)
+
+    mg.fail_coordinator(group=victim)
+    singles[victim].fail_coordinator()
+
+    _run_schedule(mg, range(G), waves=2, use_groups=True)
+    for gid, ctx in enumerate(singles):
+        _run_schedule(ctx, [gid], waves=2, use_groups=False)
+
+    mg.restore_hardware_coordinator(group=victim)
+    singles[victim].restore_hardware_coordinator()
+
+    _run_schedule(mg, range(G), waves=2, use_groups=True)
+    for gid, ctx in enumerate(singles):
+        _run_schedule(ctx, [gid], waves=2, use_groups=False)
+
+    for gid, ctx in enumerate(singles):
+        assert mg.group_log[gid] == ctx.delivered_log, gid
+        for a, b in zip(_group_state(mg.hw, gid), _group_state(ctx.hw, gid)):
+            np.testing.assert_array_equal(a, b)
+    # every submission in every group was delivered exactly once
+    assert all(len(log) == 6 for log in mg.group_log)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_idle_group_unperturbed_under_skewed_load(use_kernels):
+    """All traffic to group 0, enough to lap its ring: the idle group 1 must
+    burn no ring instances, accrete no learned entries, and keep device state
+    bit-identical to a deployment that was never pumped — then still serve
+    traffic when it finally arrives."""
+    cfg = PaxosConfig(n_acceptors=3, n_instances=64, batch=16, n_groups=2)
+    ctx = PaxosContext(cfg, use_kernels=use_kernels)
+    ref = PaxosContext(
+        PaxosConfig(n_acceptors=3, n_instances=64, batch=16),
+        use_kernels=use_kernels,
+        fused=True,
+    )
+    for w in range(12):  # 12*16 = 192 instances: laps the 64-slot ring 3x
+        for k in range(16):
+            ctx.submit(f"w{w}k{k}".encode(), group=0)
+        ctx.run_until_quiescent()
+    assert len(ctx.group_log[0]) == 192 and len(ctx.group_log[1]) == 0
+    assert ctx.hw.next_inst_host[1] == 0
+    assert not ctx.learned_g[1]
+    for a, b in zip(_group_state(ctx.hw, 1), _group_state(ref.hw, 0)):
+        np.testing.assert_array_equal(a, b)
+    ctx.submit(b"late", group=1)
+    ctx.run_until_quiescent()
+    assert [p for _i, p in ctx.group_log[1]] == [b"late"]
+
+
+def test_group_recover_targets_one_group():
+    """paxos_recover on a multi-group context fills the gap in the addressed
+    group with a no-op without disturbing the other groups' rings."""
+    mg = PaxosContext(CFG_MG)
+    _run_schedule(mg, range(G), waves=2, use_groups=True)
+    before = [_group_state(mg.hw, gid) for gid in range(G)]
+
+    # instance beyond the watermark of group 3: phase 1 finds nothing voted,
+    # a no-op is decided into it (and discarded by the application layer)
+    mg.recover(100, group=3)
+    mg.pump()
+
+    after = [_group_state(mg.hw, gid) for gid in range(G)]
+    for gid in range(G):
+        if gid == 3:
+            continue
+        for a, b in zip(before[gid], after[gid]):
+            np.testing.assert_array_equal(a, b)
+    # group 3's ring now holds a vote for instance 100
+    assert np.asarray(mg.hw.stack.vrnd)[3, :, 100 % CFG_MG.n_instances].max() >= 0
+    # the no-op was never surfaced to the application
+    assert all(len(log) == 2 for log in mg.group_log)
+
+
+def test_session_routing_deterministic_and_balanced():
+    n_groups = 8
+    ids = [f"session-{i}" for i in range(400)]
+    groups = [session_group(s, n_groups) for s in ids]
+    # deterministic
+    assert groups == [session_group(s, n_groups) for s in ids]
+    # every group sees traffic, no group dominates
+    counts = np.bincount(groups, minlength=n_groups)
+    assert (counts > 0).all()
+    assert counts.max() < len(ids) // 2
+    # int and bytes session ids route too
+    assert 0 <= session_group(12345, n_groups) < n_groups
+    assert 0 <= session_group(b"\x00\xff", n_groups) < n_groups
+
+
+def test_consensus_service_routes_and_delivers():
+    svc = ConsensusService(PaxosContext(CFG_MG))
+    sessions = [f"user-{i}" for i in range(12)]
+    routed = {}
+    for k in range(3):
+        for s in sessions:
+            gid, _seq = svc.submit(s, f"{s}:op{k}".encode())
+            assert routed.setdefault(s, gid) == gid  # stable affinity
+    svc.run_until_quiescent()
+
+    assert svc.ctx.stats["delivered"] == 3 * len(sessions)
+    assert sum(svc.group_loads()) == 3 * len(sessions)
+    for s in sessions:
+        log = svc.delivered(s)
+        mine = [p for _inst, p in log if p.startswith(f"{s}:".encode())]
+        # the session observes its own ops in submission order, totally
+        # ordered within its group
+        assert mine == [f"{s}:op{k}".encode() for k in range(3)]
+    # group logs partition the traffic
+    assert sum(len(log) for log in svc.ctx.group_log) == 3 * len(sessions)

@@ -17,7 +17,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import FaultSpec, PaxosConfig, PaxosContext, SimNet, SoftwarePaxos
-from repro.core.paxos import Acceptor, Coordinator, Learner, Msg
+from repro.core.paxos import Acceptor, Msg
 from repro.core.types import MSG_P2A
 
 SMALL = PaxosConfig(n_acceptors=3, n_instances=256, batch=8)

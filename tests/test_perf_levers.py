@@ -44,9 +44,11 @@ def test_grouped_cache_is_smaller():
     base = mod.cache_specs(dataclasses.replace(cfg, ring_local_cache=False),
                            128, 32768)
     grp = mod.cache_specs(cfg, 128, 32768)
-    nbytes = lambda sp: sum(
-        math.prod(s.shape) * s.dtype.itemsize for s in jax.tree_util.tree_leaves(sp)
-    )
+    def nbytes(sp):
+        return sum(
+            math.prod(s.shape) * s.dtype.itemsize
+            for s in jax.tree_util.tree_leaves(sp)
+        )
     ratio = nbytes(base) / nbytes(grp)
     assert ratio > 4.0, ratio   # ~5.3x for 5:1 local:global @ 32k
 

@@ -11,7 +11,6 @@ from repro.launch import sharding as sh
 @pytest.fixture(scope="module")
 def mesh():
     # abstract mesh: no devices touched
-    import numpy as np
 
     return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
 

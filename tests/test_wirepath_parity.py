@@ -241,6 +241,171 @@ def test_fused_round_duplicate_instance_suppressed():
     assert not np.asarray(fresh2).any()
 
 
+# ---------------------------------------------------------------------------
+# Multi-group parity: G fused groups == G independent single-group runs
+# ---------------------------------------------------------------------------
+def _mk_mg_state(g: int, a: int, n: int, v: int):
+    return batched.init_multigroup_state(g, a, n, v)
+
+
+@pytest.mark.parametrize("g", [1, 4, 8])
+def test_multigroup_fused_matches_independent_runs(g):
+    """The G-group fused round (Pallas kernel, both group->grid mappings, and
+    the vmapped jnp oracle) is bit-identical to G *independent* single-group
+    ``fused_round`` executions and to G independent scalar oracles — through
+    per-group dead acceptors, a mid-schedule coordinator failover in one
+    group (round bump + watermark jump), and ring wraparound."""
+    a, n, b, v = 3, 256, 32, 4
+    quorum = a // 2 + 1
+    rounds = 2 * n // b + 3  # wraps each group's ring
+    fail_group = g - 1       # the group that loses its coordinator
+    fail_round = rounds // 2
+    rng = np.random.default_rng(g)
+
+    cstate, stack, lstate = _mk_mg_state(g, a, n, v)
+    cstate_k, stack_k, lstate_k = _mk_mg_state(g, a, n, v)
+    # independent single-group references + scalar oracles, one per group
+    ind = [_mk_device_state(a, n, v) for _ in range(g)]
+    oracles = [_ScalarWirePath(a, n) for _ in range(g)]
+
+    crnd_host = np.zeros((g,), np.int32)
+    ni_host = np.zeros((g,), np.int32)
+    lockstep = True
+    for r in range(rounds):
+        # per-group liveness: quorum always alive, the rest random
+        alive = rng.random((g, a)) > 0.3
+        alive[:, :quorum] = True
+        if r == fail_round:
+            # takeover in ONE group: strictly higher unique round, watermark
+            # jumps forward past the uncertainty window (block-aligned)
+            crnd_host[fail_group] += 7
+            ni_host[fail_group] += 2 * b
+            lockstep = False
+            for gid in range(g):
+                oracles[gid].co.crnd = int(crnd_host[gid])
+            oracles[fail_group].co.next_inst = int(ni_host[fail_group])
+        values = rng.integers(-99, 99, (g, b, v)).astype(np.int32)
+
+        cstate = CoordinatorState(
+            next_inst=jnp.asarray(ni_host), crnd=jnp.asarray(crnd_host)
+        )
+        cstate_k = CoordinatorState(
+            next_inst=jnp.asarray(ni_host), crnd=jnp.asarray(crnd_host)
+        )
+
+        # jnp multigroup oracle
+        cstate, stack, lstate, fresh, inst, win, value = (
+            batched.multigroup_fused_round(
+                cstate, stack, lstate, jnp.asarray(values),
+                jnp.ones((g, b), bool), jnp.asarray(alive), quorum,
+            )
+        )
+        # Pallas megakernel, one group per grid step (general mapping) and —
+        # while the watermarks are in lockstep — all groups folded per step.
+        # EVERY mapping must match the jnp oracle bit for bit (both calls see
+        # the same pre-round state; no donation at this call level).
+        group_blocks = (1, g) if lockstep else (1,)
+        for gb in group_blocks:
+            outs = wirepath.multigroup_wirepath_round(
+                cstate_k.next_inst, cstate_k.crnd, jnp.int32(quorum),
+                jnp.asarray(alive, jnp.int32),
+                stack_k.rnd, stack_k.vrnd, stack_k.value,
+                lstate_k.delivered, lstate_k.inst, lstate_k.value,
+                jnp.asarray(values), group_block=gb, interpret=True,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(fresh), np.asarray(outs[6]) != 0, err_msg=f"gb={gb}"
+            )
+            np.testing.assert_array_equal(
+                np.asarray(win), np.asarray(outs[7]), err_msg=f"gb={gb}"
+            )
+            np.testing.assert_array_equal(
+                np.asarray(value), np.asarray(outs[8]), err_msg=f"gb={gb}"
+            )
+            for x, y in zip(jax.tree_util.tree_leaves((stack, lstate)),
+                            outs[:6]):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y), err_msg=f"gb={gb}"
+                )
+        (k_rnd, k_vrnd, k_val, k_ldel, k_linst, k_lval,
+         k_fresh, k_win, k_value) = outs
+        stack_k = AcceptorState(k_rnd, k_vrnd, k_val)
+        lstate_k = batched.LearnerState(k_ldel, k_linst, k_lval)
+
+        for gid in range(g):
+            # fused group slice == independent single-group fused_round
+            c_g, st_g, ls_g = ind[gid]
+            c_g = CoordinatorState(
+                next_inst=jnp.int32(ni_host[gid]), crnd=jnp.int32(crnd_host[gid])
+            )
+            c_g, st_g, ls_g, f_g, i_g, w_g, v_g = batched.fused_round(
+                c_g, st_g, ls_g, jnp.asarray(values[gid]),
+                jnp.ones((b,), bool), jnp.asarray(alive[gid]), quorum,
+            )
+            ind[gid] = (c_g, st_g, ls_g)
+            np.testing.assert_array_equal(np.asarray(fresh[gid]), np.asarray(f_g))
+            np.testing.assert_array_equal(np.asarray(inst[gid]), np.asarray(i_g))
+            np.testing.assert_array_equal(np.asarray(win[gid]), np.asarray(w_g))
+            np.testing.assert_array_equal(np.asarray(value[gid]), np.asarray(v_g))
+            for x, y in zip(
+                jax.tree_util.tree_leaves(
+                    jax.tree_util.tree_map(lambda s: s[gid], (stack, lstate))
+                ),
+                jax.tree_util.tree_leaves((st_g, ls_g)),
+            ):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+            # fused group slice == the group's independent scalar oracle
+            o_fresh, o_win, o_value = oracles[gid].round(values[gid], alive[gid])
+            np.testing.assert_array_equal(np.asarray(fresh[gid]), o_fresh)
+            np.testing.assert_array_equal(
+                np.asarray(win[gid])[o_fresh], o_win[o_fresh]
+            )
+            np.testing.assert_array_equal(
+                np.asarray(value[gid])[o_fresh], o_value[o_fresh]
+            )
+
+        ni_host += b
+
+    # final per-group register files agree with each group's scalar acceptors
+    h_rnd = np.asarray(stack.rnd)
+    h_vrnd = np.asarray(stack.vrnd)
+    for gid in range(g):
+        for aid, acc in enumerate(oracles[gid].acceptors):
+            for slot, (rnd, vrnd, _val) in acc.slots.items():
+                assert h_rnd[gid, aid, slot] == rnd, (gid, aid, slot)
+                assert h_vrnd[gid, aid, slot] == vrnd, (gid, aid, slot)
+
+
+def test_multigroup_dead_acceptor_isolated_to_group():
+    """Killing an acceptor in one group changes nothing in any other group:
+    the others' outputs and register files stay bit-identical to an all-alive
+    run, and the victim group still delivers through its quorum."""
+    g, a, n, b, v = 4, 3, 128, 32, 2
+    rng = np.random.default_rng(7)
+    values = jnp.asarray(rng.integers(0, 99, (g, b, v)).astype(np.int32))
+    active = jnp.ones((g, b), bool)
+
+    alive_all = jnp.ones((g, a), bool)
+    alive_dead = alive_all.at[1, 2].set(False)  # kill acceptor 2 of group 1
+
+    outs = {}
+    for key, alive in (("all", alive_all), ("dead", alive_dead)):
+        cstate, stack, lstate = _mk_mg_state(g, a, n, v)
+        outs[key] = batched.multigroup_fused_round(
+            cstate, stack, lstate, values, active, alive, 2
+        )
+    for x, y in zip(jax.tree_util.tree_leaves(outs["all"]),
+                    jax.tree_util.tree_leaves(outs["dead"])):
+        x, y = np.asarray(x), np.asarray(y)
+        mask = np.ones(x.shape[0], bool)
+        mask[1] = False  # every group but the victim is untouched
+        np.testing.assert_array_equal(x[mask], y[mask])
+    # the victim still has quorum (2 of 3) and delivers everything
+    fresh_dead = np.asarray(outs["dead"][3])
+    assert fresh_dead[1].all()
+
+
 def test_vote_all_window_kernel_matches_jnp():
     """Staged all-acceptor vote kernel vs the vmapped scatter path."""
     from repro.kernels import ref
