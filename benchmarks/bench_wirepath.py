@@ -310,6 +310,100 @@ MG_PATHS = (
 )
 
 
+# -- groups-sharded scaling: the slab-partitioned dispatch on the host mesh --
+# The sharded dataplane (DESIGN.md §6) wraps the same fused round in a
+# shard_map over a ``groups`` mesh axis, so G scales past one chip.  On the
+# CPU host mesh (usually 1 device) the sweep measures the sharding layer's
+# dispatch amortization — the shard_map plumbing must not eat the
+# multi-group win — and the scaling ratio is gated by CI against the
+# committed artifact (check_wirepath_regression.py).
+def _mk_sharded_step(g: int, use_kernels: bool):
+    from repro.core.fabric import make_sharded_multigroup_round
+    from repro.launch.mesh import make_group_mesh
+
+    # Pinned to a 1-device mesh regardless of the host: the gated metric is
+    # the shard_map layer's dispatch amortization (G=8 vs G=1), and a ratio
+    # measured over a different shard count is not comparable to the
+    # committed artifact (and G=8 over 8 shards has no G=1 at all).
+    # Multi-device slab parallelism is exercised by the sharded test suite,
+    # not this gate.
+    mesh = make_group_mesh(1)
+    return make_sharded_multigroup_round(
+        mesh,
+        n_groups=g,
+        quorum=QUORUM,
+        use_kernels=use_kernels,
+        # lockstep sweep: fold each shard's whole slab per grid step, the
+        # production configuration of ShardedMultiGroupDataplane
+        group_block=g if use_kernels else 1,
+    )
+
+
+def _bench_sharded(g: int, use_kernels: bool) -> float:
+    step = _mk_sharded_step(g, use_kernels)
+    _c, stack, lstate = _mk_mg_state(g)
+    values = _mg_values(g)
+    active = jnp.ones((g, MG_BURST), bool)
+    alive = np.ones((g, A), np.int32)
+    ni = np.zeros((g,), np.int32)
+    cr = np.zeros((g,), np.int32)
+
+    def round_():
+        nonlocal stack, lstate, ni
+        stack, lstate, fresh, _inst, _win, _val = step(
+            ni, cr, alive, stack, lstate, values, active
+        )
+        ni = ni + MG_BURST
+        block(fresh)
+
+    return time_fn(round_, iters=15, stat="min")
+
+
+def bench_sharded_jnp(g: int) -> float:
+    return _bench_sharded(g, use_kernels=False)
+
+
+def bench_sharded_pallas(g: int) -> float:
+    return _bench_sharded(g, use_kernels=True)
+
+
+SHARDED_PATHS = (
+    ("sharded_jnp", bench_sharded_jnp),
+    ("sharded_pallas", bench_sharded_pallas),
+)
+
+
+def run_sharded(groups=MG_GROUPS) -> None:
+    agg = {}
+    for path, fn in SHARDED_PATHS:
+        for g in groups:
+            us = fn(g)
+            msgs = g * MG_BURST / us * 1e6
+            agg.setdefault(path, {})[g] = msgs
+            emit(
+                f"wirepath/{path}/G={g}",
+                us,
+                f"{msgs:.0f} msg/s aggregate",
+                path=path,
+                groups=g,
+                burst_per_group=MG_BURST,
+                msgs_per_s=msgs,
+                us_per_round=us,
+            )
+    hi, lo = max(groups), min(groups)
+    for path, _ in SHARDED_PATHS:
+        if hi in agg.get(path, {}) and lo in agg.get(path, {}) and hi > lo:
+            scale = agg[path][hi] / agg[path][lo]
+            emit(
+                f"wirepath/{path.replace('sharded', 'sharded_scaling')}"
+                f"/G={hi}",
+                0.0,
+                f"{scale:.1f}x aggregate vs G={lo}",
+                groups=hi,
+                scaling=scale,
+            )
+
+
 def run_multigroup(groups=MG_GROUPS) -> None:
     agg = {}
     for path, fn in MG_PATHS:
@@ -376,6 +470,7 @@ def run(bursts=BURSTS, out: Optional[str] = None) -> None:
             emit(f"wirepath/speedup_pallas_vs_per_acceptor/burst={b}", 0.0,
                  f"{speed:.1f}x", burst=b, speedup=speed)
     run_multigroup()
+    run_sharded()
     if full_sweep:
         write_json(
             JSON_PATH,

@@ -9,7 +9,11 @@ committed perf-trajectory artifact and fails on:
     machine are robust to runner speed, absolute msgs/s are not;
   * multi-group aggregate scaling (G=8 vs G=1, Pallas interpret path)
     dropping below ``--min-mg-scaling`` (default 3.0x) in the fresh run —
-    the DESIGN.md §5 service-scaling claim.
+    the DESIGN.md §5 service-scaling claim;
+  * groups-sharded aggregate scaling (``sharded_scaling_pallas``, the
+    slab-partitioned shard_map dispatch of DESIGN.md §6) regressing by more
+    than ``--sharded-tolerance`` (default 50%) relative to the committed
+    ratio — the sharding layer must not eat the multi-group win.
 
     PYTHONPATH=src python -m benchmarks.check_wirepath_regression \
         BENCH_wirepath.json /tmp/fresh.json
@@ -55,6 +59,11 @@ def main(argv=None) -> int:
                     help="allowed fractional speedup regression (default 0.30)")
     ap.add_argument("--min-mg-scaling", type=float, default=3.0,
                     help="required G=8 vs G=1 aggregate scaling (default 3.0)")
+    ap.add_argument("--sharded-tolerance", type=float, default=0.50,
+                    help="allowed fractional regression of the sharded "
+                         "scaling ratio vs the committed artifact "
+                         "(default 0.50; scaling ratios on shared runners "
+                         "are noisier than same-machine speedup ratios)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -99,6 +108,27 @@ def main(argv=None) -> int:
         if mg < args.min_mg_scaling:
             failures.append(
                 f"multigroup scaling {mg:.2f}x < {args.min_mg_scaling:.1f}x"
+            )
+
+    base_sh = _mg_scaling(base, path="sharded_scaling_pallas")
+    fresh_sh = _mg_scaling(fresh, path="sharded_scaling_pallas")
+    if base_sh is None:
+        # pre-§6 artifact: nothing committed to gate against (not a failure,
+        # or old baselines would brick CI retroactively)
+        print("sharded scaling: no committed row, gate skipped")
+    elif fresh_sh is None:
+        failures.append("fresh run has no sharded_scaling_pallas row")
+    else:
+        floor = base_sh * (1.0 - args.sharded_tolerance)
+        status = "OK" if fresh_sh >= floor else "REGRESSION"
+        print(
+            f"sharded aggregate scaling (pallas): fresh {fresh_sh:.1f}x vs "
+            f"committed {base_sh:.1f}x (floor {floor:.1f}x) -> {status}"
+        )
+        if fresh_sh < floor:
+            failures.append(
+                f"sharded scaling regressed >{args.sharded_tolerance:.0%}: "
+                f"{fresh_sh:.2f}x < floor {floor:.2f}x"
             )
 
     if failures:

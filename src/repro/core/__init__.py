@@ -19,7 +19,12 @@ from .types import (  # noqa: F401
     decode_value,
     encode_value,
 )
-from .api import HardwareDataplane, MultiGroupDataplane, PaxosContext  # noqa: F401
+from .api import (  # noqa: F401
+    HardwareDataplane,
+    MultiGroupDataplane,
+    PaxosContext,
+    ShardedMultiGroupDataplane,
+)
 from .baseline import SoftwarePaxos  # noqa: F401
 from .log import ReplicatedLog  # noqa: F401
 from .network import FaultSpec, SimNet  # noqa: F401

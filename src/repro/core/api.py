@@ -308,6 +308,41 @@ class MultiGroupDataplane:
     def _window_aligned(self, base: int, b: int) -> bool:
         return _wire_window_aligned(self.cfg, base, b)
 
+    # -- shared pre-dispatch plan (the parity contract between this class
+    # and its sharded subclass: both MUST resolve a round identically) ------
+    def _fold_width(self) -> int:
+        """Groups folded per grid step under lockstep (the whole service
+        here; one shard's slab in the sharded subclass)."""
+        return self.cfg.n_groups
+
+    def _plan_round(self, b: int, enabled: Optional[List[bool]]):
+        """Resolve the enabled mask against frozen rounds, decide kernel
+        eligibility from the host watermark mirrors, and pick the lockstep
+        fold width.  Returns ``(enabled, use_k, group_block)``."""
+        if enabled is None:
+            enabled = [c != NO_ROUND for c in self.crnd_host]
+        else:
+            enabled = [
+                bool(e) and c != NO_ROUND
+                for e, c in zip(enabled, self.crnd_host)
+            ]
+        # alignment must hold for every group — disabled groups' ring
+        # windows are still loaded (and left unchanged) by the kernel
+        use_k = self.use_kernels and all(
+            self._window_aligned(w, b) for w in self.next_inst_host
+        )
+        # lockstep watermarks let every grid step fold the full width
+        gb = self._fold_width() if len(set(self.next_inst_host)) == 1 else 1
+        return enabled, use_k, gb
+
+    def _empty_round(self, g: int, b: int):
+        """The all-disabled result: nothing would decide, skip dispatch."""
+        return (
+            np.zeros((g, b), np.int32),
+            np.zeros((g, b), np.int32),
+            np.zeros((g, b, self.cfg.value_words), np.int32),
+        )
+
     # -- fused fast path: ALL groups advance one round in ONE dispatch -------
     def pipeline(
         self,
@@ -327,28 +362,10 @@ class MultiGroupDataplane:
         ``(fresh, inst, value)`` with a leading group axis.
         """
         g, b = values.shape[0], values.shape[1]
-        if enabled is None:
-            enabled = [c != NO_ROUND for c in self.crnd_host]
-        else:
-            enabled = [
-                bool(e) and c != NO_ROUND
-                for e, c in zip(enabled, self.crnd_host)
-            ]
+        enabled, use_k, gb = self._plan_round(b, enabled)
         if not any(enabled):
-            # nothing would decide — skip the dispatch entirely
-            return (
-                np.zeros((g, b), np.int32),
-                np.zeros((g, b), np.int32),
-                np.zeros((g, b, self.cfg.value_words), np.int32),
-            )
-        # alignment must hold for every group — disabled groups' ring windows
-        # are still loaded (and left unchanged) by the kernel
-        use_k = self.use_kernels and all(
-            self._window_aligned(w, b) for w in self.next_inst_host
-        )
+            return self._empty_round(g, b)
         if use_k:
-            # lockstep watermarks let every grid step carry all G groups
-            gb = g if len(set(self.next_inst_host)) == 1 else 1
             fn = functools.partial(self._fused_k, group_block=gb)
         else:
             fn = self._fused
@@ -427,6 +444,176 @@ class MultiGroupDataplane:
         return _GroupView(self, gid)
 
 
+class ShardedMultiGroupDataplane(MultiGroupDataplane):
+    """``MultiGroupDataplane`` with the group axis partitioned over a device
+    mesh (DESIGN.md §6): the ``(G, A, N)`` acceptor rings, ``(G, N)`` learner
+    rings and per-group burst slabs shard over a ``groups`` mesh axis via
+    ``shard_map``, so the number of device-resident groups scales linearly
+    with device count instead of one chip's VMEM/HBM.
+
+    Placement is contiguous slabs: shard ``s`` owns groups
+    ``[s*Gl, (s+1)*Gl)`` with ``Gl = G / n_shards``.  Per-group scalar
+    control state — the watermark/round vectors and the ``(G, A)`` liveness
+    mask — is *host-authoritative* numpy, entering each dispatch replicated;
+    ``freeze_group``/``restore_group``/``kill_acceptor`` therefore flip host
+    scalars only and reach the owning shard with the next dispatch — no
+    global device round-trip, and the big slabs never move.  On a 1-device
+    mesh every dispatch reduces bit-exactly to ``MultiGroupDataplane``, so
+    the existing parity suites double as its regression net.
+    """
+
+    def __init__(
+        self,
+        cfg: PaxosConfig,
+        mesh=None,
+        axis: str = "groups",
+        use_kernels: bool = False,
+    ):
+        if mesh is None:
+            from repro.launch.mesh import make_group_mesh
+
+            mesh = make_group_mesh()
+        if axis not in mesh.shape:
+            raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
+        n_sh = mesh.shape[axis]
+        if cfg.n_groups % n_sh:
+            raise ValueError(
+                f"n_groups={cfg.n_groups} must be divisible by the {axis!r} "
+                f"mesh axis size {n_sh}"
+            )
+        super().__init__(cfg, use_kernels=use_kernels)
+        self.mesh = mesh
+        self.axis = axis
+        self.n_shards = n_sh
+        self.groups_per_shard = cfg.n_groups // n_sh
+        g, a = cfg.n_groups, cfg.n_acceptors
+        # host-authoritative scalar control state (mirrors next_inst_host /
+        # crnd_host, which the parent already maintains)
+        self.cstate = CoordinatorState(
+            next_inst=np.zeros((g,), np.int32), crnd=np.zeros((g,), np.int32)
+        )
+        self.alive_mask = np.ones((g, a), np.int32)
+        # big slabs: device-resident, leading group axis sharded over the mesh
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        self._slab_sharding = NamedSharding(mesh, P(axis))
+        self.stack = jax.device_put(self.stack, self._slab_sharding)
+        self.lstate = jax.device_put(self.lstate, self._slab_sharding)
+        self._dispatches: Dict[Tuple[bool, int], Any] = {}
+
+    def _fold_width(self) -> int:
+        # lockstep folds one shard's slab per grid step (a block has a
+        # single ring offset, and a shard sees only its own slab); on a
+        # 1-device mesh this is the parent's full-service fold
+        return self.groups_per_shard
+
+    # -- placement introspection (consumed by serve.ConsensusService) --------
+    def shard_of_group(self, gid: int) -> int:
+        """Mesh shard owning group ``gid`` (contiguous-slab placement)."""
+        self._check_gid(gid)
+        return gid // self.groups_per_shard
+
+    def group_placement(self) -> List[int]:
+        """group id -> owning shard, for the whole service."""
+        return [g // self.groups_per_shard for g in range(self.cfg.n_groups)]
+
+    # -- dispatch construction ----------------------------------------------
+    def _dispatch(self, use_k: bool, gb: int):
+        key = (use_k, gb)
+        fn = self._dispatches.get(key)
+        if fn is None:
+            from .fabric import make_sharded_multigroup_round
+
+            fn = make_sharded_multigroup_round(
+                self.mesh,
+                n_groups=self.cfg.n_groups,
+                quorum=self.cfg.quorum,
+                axis=self.axis,
+                use_kernels=use_k,
+                group_block=gb,
+            )
+            self._dispatches[key] = fn
+        return fn
+
+    def _ensure_placement(self) -> None:
+        # recovery/failover traffic (``group_view``) rewrites one group's
+        # slab with gather/scatter updates whose output sharding is
+        # unconstrained; re-pin before the next sharded dispatch (a no-op
+        # when placement is already correct)
+        self.stack = jax.device_put(self.stack, self._slab_sharding)
+        self.lstate = jax.device_put(self.lstate, self._slab_sharding)
+
+    # -- fused fast path: all shards advance their slabs in ONE dispatch ----
+    def pipeline(
+        self,
+        values: np.ndarray,
+        active: np.ndarray,
+        enabled: Optional[List[bool]] = None,
+    ):
+        """Same contract (and bit-identical results) as
+        ``MultiGroupDataplane.pipeline``, executed as one ``shard_map``
+        program over the group slabs."""
+        g, b = values.shape[0], values.shape[1]
+        enabled, use_k, gb = self._plan_round(b, enabled)
+        if not any(enabled):
+            return self._empty_round(g, b)
+        if not use_k:
+            gb = 1
+        self._ensure_placement()
+        ni = np.asarray(self.next_inst_host, np.int32)
+        en = np.asarray(enabled)
+        eff_crnd = np.where(
+            en, np.asarray(self.crnd_host, np.int32), NO_ROUND
+        ).astype(np.int32)
+        fn = self._dispatch(use_k, gb)
+        self.stack, self.lstate, fresh, inst, _win, value = fn(
+            ni,
+            eff_crnd,
+            self.alive_mask,
+            self.stack,
+            self.lstate,
+            jnp.asarray(values),
+            jnp.asarray(active),
+        )
+        for gid in range(g):
+            if enabled[gid]:
+                self.next_inst_host[gid] += b
+        self._sync_cstate()
+        return np.asarray(fresh), np.asarray(inst), np.asarray(value)
+
+    # -- per-group control: host scalars only, no device round-trip ----------
+    def _sync_cstate(self) -> None:
+        self.cstate = CoordinatorState(
+            next_inst=np.asarray(self.next_inst_host, np.int32),
+            crnd=np.asarray(self.crnd_host, np.int32),
+        )
+
+    def kill_acceptor(self, gid: int, aid: int) -> None:
+        self._check_gid(gid)
+        self.alive[gid][aid] = False
+        self.alive_mask[gid, aid] = 0
+
+    def revive_acceptor(self, gid: int, aid: int) -> None:
+        self._check_gid(gid)
+        self.alive[gid][aid] = True
+        self.alive_mask[gid, aid] = 1
+
+    def freeze_group(self, gid: int) -> None:
+        self._check_gid(gid)
+        self.crnd_host[gid] = NO_ROUND
+        self._sync_cstate()
+
+    def restore_group(self, gid: int, next_inst: int, crnd: int) -> None:
+        self._check_gid(gid)
+        if self.use_kernels:
+            bb = self._block(self.cfg.batch)
+            next_inst = -(-next_inst // bb) * bb
+        self.next_inst_host[gid] = next_inst
+        self.crnd_host[gid] = crnd
+        self._sync_cstate()
+
+
 class PaxosContext:
     """Drop-in replacement context (the paper's ``paxos_ctx``)."""
 
@@ -439,12 +626,17 @@ class PaxosContext:
         retransmit_after: int = 3,
         n_learners: int = 1,
         fused: bool = False,
+        mesh=None,
     ):
         self.cfg = cfg or PaxosConfig()
         self.deliver_cb = deliver
         self.net = net or SimNet()
         self.n_groups = self.cfg.n_groups
-        if self.n_groups > 1:
+        # the group-keyed surface engages for any multi-group config AND for
+        # a sharded single-group one (the sharded dataplane is group-keyed
+        # by construction, G = 1 included)
+        self.grouped = self.n_groups > 1 or mesh is not None
+        if self.grouped:
             # the multi-group service is wire-path only: all groups ride one
             # fused dispatch; staged traffic exists per group for recovery
             # and failover (group views), not as a peer execution mode
@@ -453,9 +645,16 @@ class PaxosContext:
                     "multi-group context drives the fused wire path and a "
                     "single learner role per group (n_learners must be 1)"
                 )
-            self.hw: HardwareDataplane = MultiGroupDataplane(  # type: ignore[assignment]
-                self.cfg, use_kernels=use_kernels
-            )
+            if mesh is not None:
+                # groups-sharded service: the G slabs partition over the
+                # mesh's ``groups`` axis (DESIGN.md §6)
+                self.hw: HardwareDataplane = ShardedMultiGroupDataplane(  # type: ignore[assignment]
+                    self.cfg, mesh=mesh, use_kernels=use_kernels
+                )
+            else:
+                self.hw = MultiGroupDataplane(  # type: ignore[assignment]
+                    self.cfg, use_kernels=use_kernels
+                )
             self.fused = True
             self._softco_g: Dict[int, SoftCoordinator] = {}
             # the group-keyed learn surface
@@ -496,7 +695,7 @@ class PaxosContext:
         group of a single-group context)."""
         if not 0 <= group < self.n_groups:
             raise ValueError(f"group {group} out of range [0, {self.n_groups})")
-        if self.n_groups > 1:
+        if self.grouped:
             seq = self._next_client_seq_g[group]
             self._next_client_seq_g[group] += 1
             self._pending[(group, seq)] = _Pending(payload, group=group)
@@ -542,7 +741,7 @@ class PaxosContext:
             for m in inbox
             if m[0] == "recover"
         ]
-        if self.n_groups > 1:
+        if self.grouped:
             self._pump_coordinator_groups(submits, recovers)
             return
 
@@ -808,7 +1007,7 @@ class PaxosContext:
         """
         if not 0 <= group < self.n_groups:
             raise ValueError(f"group {group} out of range [0, {self.n_groups})")
-        if self.n_groups > 1:
+        if self.grouped:
             return self._fail_coordinator_group(group, est_next_inst)
 
         from .failover import takeover
@@ -863,7 +1062,7 @@ class PaxosContext:
     def restore_hardware_coordinator(self, group: int = 0) -> None:
         if not 0 <= group < self.n_groups:
             raise ValueError(f"group {group} out of range [0, {self.n_groups})")
-        if self.n_groups > 1:
+        if self.grouped:
             co = self._softco_g.pop(group, None)
             if co is not None:
                 # per-group realignment: only this group's watermark/round

@@ -32,6 +32,25 @@ from .types import MSG_P2B, AcceptorState, CoordinatorState
 NO_ROUND = jnp.int32(-1)
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: the top-level export with
+    ``check_vma`` (jax >= 0.6) or the experimental one with ``check_rep``
+    (older releases, including this container's).  Replication checking is
+    disabled either way — the replicated outputs here are replicated by
+    construction (psum / identical sequencing), which the checker cannot
+    always prove."""
+    try:
+        from jax import shard_map as sm
+
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except (ImportError, TypeError):
+        from jax.experimental.shard_map import shard_map as sm
+
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 def consensus_round(
     astate: AcceptorState,
     cstate: CoordinatorState,
@@ -113,9 +132,7 @@ def make_fabric_consensus(
         a = AcceptorState(a.rnd[None], a.vrnd[None], a.value[None])
         return a, cstate, decided, inst, value
 
-    from jax import shard_map
-
-    fn = shard_map(
+    fn = _shard_map(
         local_round,
         mesh=mesh,
         in_specs=(
@@ -132,9 +149,128 @@ def make_fabric_consensus(
             P(),
             P(),
         ),
-        check_vma=False,
     )
     return init_fn, jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Groups-sharded multi-group wire path: G groups partitioned over a mesh axis
+# ---------------------------------------------------------------------------
+def make_sharded_multigroup_round(
+    mesh: jax.sharding.Mesh,
+    *,
+    n_groups: int,
+    quorum: int,
+    axis: str = "groups",
+    use_kernels: bool = False,
+    group_block: int = 1,
+):
+    """Build the groups-sharded fused dispatch (DESIGN.md §6): ONE compiled
+    program advances all G groups one Phase-2 round, with the ``(G, A, N)``
+    acceptor slabs and ``(G, N)`` learner slabs partitioned over
+    ``mesh[axis]`` so G scales with device count instead of one chip's
+    VMEM/HBM.
+
+    Per-group scalar metadata — the ``(G,)`` watermark/round vectors and the
+    ``(G, A)`` alive mask — enters *replicated*: it is tiny, host-mutated
+    control state, and each shard selects its own window by group offset
+    (``kernels.wirepath.shard_slab_round``).  The ring slabs stay
+    shard-local and nothing crosses the mesh axis during a round, because
+    groups share no state; the quorum reduction runs down the acceptor axis
+    *inside* each shard's slab.
+
+    Returns ``step(next_inst[G], crnd[G], alive[G, A], stack, lstate,
+    values[G, B, V], active[G, B]) -> (stack', lstate', fresh[G, B],
+    inst[G, B], win[G, B], value[G, B, V])`` with the state arguments
+    donated (device-resident in place across rounds).
+    """
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
+    n_sh = mesh.shape[axis]
+    if n_groups % n_sh:
+        raise ValueError(
+            f"n_groups={n_groups} must be divisible by the {axis!r} mesh "
+            f"axis size {n_sh}"
+        )
+    gl = n_groups // n_sh
+    if group_block > 1 and gl % group_block:
+        raise ValueError(
+            f"group_block={group_block} must divide the per-shard slab {gl}"
+        )
+    offsets = jnp.arange(n_sh, dtype=jnp.int32) * gl
+    q = quorum
+
+    def local(ni, cr, alive, off, stack, lstate, values, active):
+        # off is this shard's (1,)-slice of the offset vector: the global id
+        # of the slab's first group.  Scalar vectors stay global; slabs are
+        # local.
+        ni_l = jax.lax.dynamic_slice(ni, (off[0],), (gl,))
+        if use_kernels:
+            from repro.kernels import ops as kops
+            from repro.kernels import wirepath as kwp
+
+            del active  # sequenced fillers vote like P2As (DESIGN.md §3)
+            outs = kwp.shard_slab_round(
+                off[0], ni, cr, jnp.int32(q), alive,
+                stack.rnd, stack.vrnd, stack.value,
+                lstate.delivered, lstate.inst, lstate.value, values,
+                group_block=group_block, interpret=kops.INTERPRET,
+            )
+            stack = AcceptorState(*outs[:3])
+            lstate = batched.LearnerState(*outs[3:6])
+            fresh, win, value = outs[6] != 0, outs[7], outs[8]
+        else:
+            cr_l = jax.lax.dynamic_slice(cr, (off[0],), (gl,))
+            al_l = jax.lax.dynamic_slice(
+                alive, (off[0], 0), (gl, alive.shape[1])
+            )
+            cs = CoordinatorState(next_inst=ni_l, crnd=cr_l)
+            _c, stack, lstate, fresh, _i, win, value = (
+                batched.multigroup_fused_round(
+                    cs, stack, lstate, values, active, al_l != 0, q
+                )
+            )
+        b = values.shape[1]
+        inst = ni_l[:, None] + jnp.arange(b, dtype=jnp.int32)[None, :]
+        return stack, lstate, fresh, inst, win, value
+
+    sheet = P(axis)
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(),                                   # next_inst (replicated)
+            P(),                                   # crnd (replicated)
+            P(),                                   # alive (replicated)
+            sheet,                                 # offsets
+            AcceptorState(sheet, sheet, sheet),    # acceptor slabs
+            batched.LearnerState(sheet, sheet, sheet),  # learner slabs
+            sheet,                                 # values
+            sheet,                                 # active
+        ),
+        out_specs=(
+            AcceptorState(sheet, sheet, sheet),
+            batched.LearnerState(sheet, sheet, sheet),
+            sheet,                                 # fresh
+            sheet,                                 # inst
+            sheet,                                 # win
+            sheet,                                 # value
+        ),
+    )
+
+    def step(next_inst, crnd, alive, stack, lstate, values, active):
+        return fn(
+            jnp.asarray(next_inst, jnp.int32).reshape((n_groups,)),
+            jnp.asarray(crnd, jnp.int32).reshape((n_groups,)),
+            jnp.asarray(alive, jnp.int32),
+            offsets,
+            stack,
+            lstate,
+            values,
+            active,
+        )
+
+    return jax.jit(step, donate_argnums=(3, 4))
 
 
 # ---------------------------------------------------------------------------

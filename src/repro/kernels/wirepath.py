@@ -272,6 +272,54 @@ def multigroup_wirepath_round(
     )
 
 
+def shard_slab_round(
+    group_offset: jax.Array,  # int32[]  first global group id of this slab
+    next_inst: jax.Array,     # int32[G_global]  replicated watermark vector
+    crnd: jax.Array,          # int32[G_global]  replicated round vector
+    quorum: jax.Array,        # int32[]
+    alive: jax.Array,         # int32[G_global, A]  replicated liveness
+    st_rnd: jax.Array,        # int32[Gl, A, N]   this shard's acceptor slab
+    st_vrnd: jax.Array,       # int32[Gl, A, N]
+    st_val: jax.Array,        # int32[Gl, A, N, V]
+    ldel: jax.Array,          # int32[Gl, N]      this shard's learner slab
+    linst: jax.Array,         # int32[Gl, N]
+    lval: jax.Array,          # int32[Gl, N, V]
+    values: jax.Array,        # int32[Gl, B, V]   this shard's burst slab
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    group_block: int = 1,
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Local-slab entry point for the groups-sharded dataplane (DESIGN.md §6).
+
+    Runs ``multigroup_wirepath_round`` on ONE shard's contiguous slab of
+    ``Gl = G_global / n_shards`` groups.  The per-group scalar vectors
+    (watermarks, rounds, liveness) stay *global and replicated* — they are
+    tiny, host-mutated metadata — and ``group_offset`` selects this shard's
+    window so per-group scalars index correctly inside the shard.  Designed
+    to be called inside ``shard_map`` with the slab arrays partitioned over
+    a ``groups`` mesh axis (``core.fabric.make_sharded_multigroup_round``).
+    """
+    gl, a = st_rnd.shape[0], st_rnd.shape[1]
+    off = jnp.asarray(group_offset, jnp.int32).reshape(())
+    ni = jax.lax.dynamic_slice(
+        jnp.asarray(next_inst, jnp.int32).reshape((-1,)), (off,), (gl,)
+    )
+    cr = jax.lax.dynamic_slice(
+        jnp.asarray(crnd, jnp.int32).reshape((-1,)), (off,), (gl,)
+    )
+    al = jax.lax.dynamic_slice(
+        jnp.asarray(alive, jnp.int32).reshape((-1, a)),
+        (off, jnp.int32(0)),
+        (gl, a),
+    )
+    return multigroup_wirepath_round(
+        ni, cr, quorum, al,
+        st_rnd, st_vrnd, st_val, ldel, linst, lval, values,
+        block_b=block_b, group_block=group_block, interpret=interpret,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def wirepath_round(
     next_inst: jax.Array,   # int32[]  absolute window base (BB-aligned)

@@ -27,3 +27,17 @@ def make_host_mesh(n_devices: int = 0, model_parallel: int = 1) -> jax.sharding.
     mp = model_parallel
     assert n % mp == 0
     return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def make_group_mesh(n_devices: int = 0) -> jax.sharding.Mesh:
+    """1-D mesh with a single ``groups`` axis over the local devices.
+
+    The placement domain of the groups-sharded consensus dataplane
+    (``core.api.ShardedMultiGroupDataplane``, DESIGN.md §6): the G
+    device-resident Paxos groups partition into contiguous slabs, one per
+    mesh shard, so G scales with device count instead of one chip's
+    VMEM/HBM.  On a single-device host this degenerates to a (1,) mesh and
+    the sharded dataplane reduces bit-exactly to ``MultiGroupDataplane``.
+    """
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("groups",))

@@ -110,6 +110,19 @@ SERVE_RULES = ShardingRules(
 )
 
 
+def abstract_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """jax-version-portable ``AbstractMesh`` constructor (no devices touched).
+
+    Newer jax takes ``(shape, axis_names)``; 0.4.x takes one tuple of
+    ``(name, size)`` pairs.  Spec resolution only needs ``mesh.shape``, which
+    both construct identically.
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, shape)))
+
+
 def resolve_spec(
     shape: Sequence[int], axes: Sequence[Optional[str]], rules: ShardingRules, mesh: Mesh
 ) -> P:

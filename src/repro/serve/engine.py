@@ -107,6 +107,27 @@ class ConsensusService:
     def group_of(self, session_id) -> int:
         return session_group(session_id, self.n_groups)
 
+    # -- group -> shard placement (the sharded dataplane, DESIGN.md §6) ------
+    def group_placement(self) -> List[int]:
+        """group id -> owning mesh shard.  Routing composes as session ->
+        group (FNV-1a, placement-independent) -> shard (dataplane
+        placement); an unsharded dataplane is the degenerate one-shard
+        placement.  Re-placing groups over a different mesh therefore never
+        moves a session between groups — only the group's *shard* changes."""
+        hw = self.ctx.hw
+        if hasattr(hw, "group_placement"):
+            return hw.group_placement()
+        return [0] * self.n_groups
+
+    def shard_of(self, session_id) -> int:
+        """Mesh shard that serves the session's group (O(1): indexes the
+        dataplane's placement directly — no per-request list rebuild)."""
+        gid = self.group_of(session_id)
+        hw = self.ctx.hw
+        if hasattr(hw, "shard_of_group"):
+            return hw.shard_of_group(gid)
+        return 0
+
     def submit(self, session_id, payload: bytes) -> Tuple[int, int]:
         """Route one value; returns ``(group, client_seq)``."""
         gid = self.group_of(session_id)

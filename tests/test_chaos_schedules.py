@@ -1,0 +1,161 @@
+"""Randomized chaos schedules over the multi-group service.
+
+Property under test: a multi-group ``PaxosContext`` (unsharded or
+groups-sharded) driven through an arbitrary interleaving of
+submit / freeze / restore / kill / revive / pump operations produces
+*exactly* the per-group delivery logs of G independent single-group
+contexts fed the identical schedule — same payloads, same instances, same
+order — and every submission is delivered exactly once after the service
+heals.
+
+The harness keeps the pump cadence identical on both sides (ops are applied
+simultaneously; every ``pump`` op advances the multi-group context and all G
+twins by one round), which makes retransmission timing — and therefore
+instance consumption — deterministic, so logs can be compared bit for bit.
+The configs pin ``batch=8`` so the wire-burst right-sizing resolves to the
+same burst on both sides regardless of how skewed the per-group queues get.
+
+Deterministic seeds always run; when hypothesis is installed (the
+``_hypothesis_compat`` guard skip-marks otherwise) it searches the
+seed/length space and shrinks failing schedules toward short ones.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import PaxosConfig, PaxosContext
+from repro.launch.mesh import make_group_mesh
+
+A = 3
+QUORUM = A // 2 + 1
+CFG1 = PaxosConfig(n_acceptors=A, n_instances=64, batch=8)
+
+
+def _cfg(g: int) -> PaxosConfig:
+    return PaxosConfig(n_acceptors=A, n_instances=64, batch=8, n_groups=g)
+
+
+def _schedule(seed: int, g: int, steps: int):
+    """A random but always-legal op sequence, healed at the end (every
+    acceptor revived, every frozen group restored) so full delivery is a
+    checkable postcondition."""
+    rng = np.random.default_rng(seed)
+    frozen = [False] * g
+    alive = [[True] * A for _ in range(g)]
+    ops = []
+    for _ in range(steps):
+        r = rng.random()
+        gid = int(rng.integers(g))
+        if r < 0.45:
+            ops.append(("submit", gid))
+        elif r < 0.70:
+            ops.append(("pump",))
+        elif r < 0.78:
+            aid = int(rng.integers(A))
+            if alive[gid][aid]:
+                alive[gid][aid] = False
+                ops.append(("kill", gid, aid))
+        elif r < 0.86:
+            dead = [a for a in range(A) if not alive[gid][a]]
+            if dead:
+                aid = dead[int(rng.integers(len(dead)))]
+                alive[gid][aid] = True
+                ops.append(("revive", gid, aid))
+        elif r < 0.93:
+            # takeover needs a quorum of promises to discover voted values
+            if not frozen[gid] and sum(alive[gid]) >= QUORUM:
+                frozen[gid] = True
+                ops.append(("freeze", gid))
+        else:
+            if frozen[gid]:
+                frozen[gid] = False
+                ops.append(("restore", gid))
+    for gid in range(g):
+        for aid in range(A):
+            if not alive[gid][aid]:
+                ops.append(("revive", gid, aid))
+        if frozen[gid]:
+            ops.append(("restore", gid))
+    return ops
+
+
+def run_chaos(
+    seed: int,
+    g: int = 3,
+    use_kernels: bool = False,
+    sharded: bool = False,
+    steps: int = 30,
+) -> None:
+    mesh = make_group_mesh() if sharded else None
+    mg = PaxosContext(_cfg(g), use_kernels=use_kernels, mesh=mesh)
+    singles = [
+        PaxosContext(CFG1, use_kernels=use_kernels, fused=True)
+        for _ in range(g)
+    ]
+    sent = [[] for _ in range(g)]
+    for op in _schedule(seed, g, steps):
+        kind = op[0]
+        if kind == "submit":
+            gid = op[1]
+            p = f"s{len(sent[gid])}g{gid}".encode()
+            sent[gid].append(p)
+            mg.submit(p, group=gid)
+            singles[gid].submit(p)
+        elif kind == "pump":
+            mg.pump()
+            for s in singles:
+                s.pump()
+        elif kind == "kill":
+            _, gid, aid = op
+            mg.hw.kill_acceptor(gid, aid)
+            singles[gid].hw.kill_acceptor(aid)
+        elif kind == "revive":
+            _, gid, aid = op
+            mg.hw.revive_acceptor(gid, aid)
+            singles[gid].hw.revive_acceptor(aid)
+        elif kind == "freeze":
+            gid = op[1]
+            mg.fail_coordinator(group=gid)
+            singles[gid].fail_coordinator()
+        elif kind == "restore":
+            gid = op[1]
+            mg.restore_hardware_coordinator(group=gid)
+            singles[gid].restore_hardware_coordinator()
+    # drain: everything is healed, so a few retransmit cycles deliver all
+    for _ in range(30):
+        mg.pump()
+        for s in singles:
+            s.pump()
+    for gid in range(g):
+        assert mg.group_log[gid] == singles[gid].delivered_log, (seed, gid)
+        got = [p for _inst, p in mg.group_log[gid]]
+        assert len(got) == len(set(got)), (seed, gid)          # exactly once
+        assert sorted(got) == sorted(sent[gid]), (seed, gid)   # all delivered
+    assert not mg._pending
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_deterministic(seed, use_kernels):
+    run_chaos(seed, g=3, use_kernels=use_kernels, steps=30)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("seed", [3, 4])
+def test_chaos_sharded(seed, use_kernels):
+    """The groups-sharded dataplane under the same chaos contract."""
+    run_chaos(seed, g=2, use_kernels=use_kernels, sharded=True, steps=24)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(4, 40))
+def test_chaos_property_jnp(seed, steps):
+    run_chaos(seed, g=3, use_kernels=False, steps=steps)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(4, 24))
+def test_chaos_property_sharded(seed, steps):
+    run_chaos(seed, g=2, use_kernels=False, sharded=True, steps=steps)

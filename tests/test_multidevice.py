@@ -80,14 +80,12 @@ def test_quorum_commit_digest_straggler():
     out = _run(
         """
         import jax, jax.numpy as jnp, numpy as np, functools
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
-        from repro.core.fabric import quorum_commit_digest
+        from repro.core.fabric import _shard_map, quorum_commit_digest
         mesh = jax.make_mesh((8,), ("data",))
-        fn = shard_map(
+        fn = _shard_map(
             functools.partial(quorum_commit_digest, axis="data", quorum=5),
-            mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P(), P()),
-            check_vma=False)
+            mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P(), P()))
         # all groups agree
         d = jnp.full((8,), 1234, jnp.int32)
         h = jnp.ones((8,), bool)

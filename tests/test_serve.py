@@ -1,4 +1,5 @@
-"""Serving-engine tests: prefill/decode consistency and the batching loop."""
+"""Serving-engine tests: prefill/decode consistency, the batching loop, and
+session -> group -> shard routing of the consensus tier."""
 from __future__ import annotations
 
 import dataclasses
@@ -8,9 +9,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.configs import get_config
+from repro.core import PaxosConfig, PaxosContext
+from repro.launch.mesh import make_group_mesh
 from repro.models import registry
-from repro.serve.engine import Request, ServeLoop, make_prefill_step, make_serve_step
+from repro.serve.engine import (
+    ConsensusService,
+    Request,
+    ServeLoop,
+    make_prefill_step,
+    make_serve_step,
+)
 
 DECODE_FAMS = [
     "qwen3-4b",          # dense + qk_norm
@@ -82,6 +92,112 @@ def test_serve_loop_batched_requests():
     # determinism: same request set -> same generations
     out2 = ServeLoop(cfg, params, batch_size=3, max_len=16).run(reqs)
     assert out == out2
+
+
+# ---------------------------------------------------------------------------
+# Consensus tier: session -> group routing vs group -> shard placement
+# ---------------------------------------------------------------------------
+def _slab_placements(n_groups):
+    """Every contiguous-slab placement of G groups onto a shard count that
+    tiles G — the placements ``ShardedMultiGroupDataplane`` can produce."""
+    return [
+        [gid // (n_groups // n_sh) for gid in range(n_groups)]
+        for n_sh in range(1, n_groups + 1)
+        if n_groups % n_sh == 0
+    ]
+
+
+class _FakeShardedHw:
+    """A dataplane stub with an arbitrary group -> shard placement, so the
+    routing property can be tested against placements the in-process
+    single-device mesh cannot produce."""
+
+    def __init__(self, placement):
+        self._placement = list(placement)
+
+    def group_placement(self):
+        return list(self._placement)
+
+    def shard_of_group(self, gid):
+        return self._placement[gid]
+
+
+def _service_with_placement(n_groups, placement):
+    import types
+
+    ctx = types.SimpleNamespace(
+        cfg=PaxosConfig(n_groups=n_groups), hw=_FakeShardedHw(placement)
+    )
+    return ConsensusService(ctx)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    sid=st.one_of(
+        st.text(max_size=64),
+        st.binary(max_size=64),
+        st.integers(min_value=-(2**128), max_value=2**128),
+    )
+)
+def test_session_routing_stable_across_placements(sid):
+    """Re-placing groups over a different mesh must never move a session
+    between groups: the service's session -> group routing is identical
+    under every placement (it consults only the session id and G), while
+    the *shard* the session lands on is exactly the group's placement."""
+    n_groups = 8
+    services = [
+        _service_with_placement(n_groups, p)
+        for p in _slab_placements(n_groups)
+    ]
+    gids = [svc.group_of(sid) for svc in services]
+    assert len(set(gids)) == 1                     # placement-independent
+    gid = gids[0]
+    assert 0 <= gid < n_groups
+    for svc, placement in zip(services, _slab_placements(n_groups)):
+        assert svc.shard_of(sid) == placement[gid]
+        assert svc.group_placement() == placement
+
+
+def test_session_routing_stable_across_placements_deterministic():
+    """Hypothesis-free twin of the property above (runs in runtime-only
+    environments where hypothesis is absent)."""
+    n_groups = 8
+    placements = _slab_placements(n_groups)
+    services = [_service_with_placement(n_groups, p) for p in placements]
+    for sid in [f"sess-{i}" for i in range(64)] + [b"\x00\xff", 12345, 0]:
+        gids = {svc.group_of(sid) for svc in services}
+        assert len(gids) == 1, sid
+        gid = gids.pop()
+        for svc, placement in zip(services, placements):
+            assert svc.shard_of(sid) == placement[gid]
+
+
+def test_consensus_service_routing_stable_under_sharding():
+    """End to end: the same session lands on the same group id whether the
+    dataplane is unsharded or sharded, and ``shard_of`` is exactly the
+    placement of that group."""
+    cfg = PaxosConfig(n_acceptors=3, n_instances=128, batch=16, n_groups=4)
+    base = ConsensusService(PaxosContext(cfg))
+    sharded = ConsensusService(PaxosContext(cfg, mesh=make_group_mesh()))
+    assert base.group_placement() == [0] * 4       # degenerate one shard
+    placement = sharded.group_placement()
+    assert len(placement) == 4
+    for i in range(50):
+        s = f"sess-{i}"
+        assert base.group_of(s) == sharded.group_of(s)
+        assert sharded.shard_of(s) == placement[sharded.group_of(s)]
+    # the sharded service still decides and orders per session
+    sids = [f"u{i}" for i in range(6)]
+    for k in range(2):
+        for s in sids:
+            sharded.submit(s, f"{s}:op{k}".encode())
+    sharded.run_until_quiescent()
+    for s in sids:
+        mine = [
+            p for _i, p in sharded.delivered(s)
+            if p.startswith(f"{s}:".encode())
+        ]
+        assert mine == [f"{s}:op{k}".encode() for k in range(2)]
 
 
 def test_ring_cache_sliding_window_decode():

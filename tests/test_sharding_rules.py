@@ -1,7 +1,6 @@
 """Sharding-rule resolver unit tests (no devices needed beyond CPU)."""
 from __future__ import annotations
 
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -12,7 +11,7 @@ from repro.launch import sharding as sh
 def mesh():
     # abstract mesh: no devices touched
 
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return sh.abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_param_fsdp_tp(mesh):
@@ -42,7 +41,7 @@ def test_no_axis_reuse(mesh):
 
 
 def test_batch_axis_prefers_pod_data():
-    mesh3 = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh3 = sh.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert sh.resolve_spec((256, 4096), ("batch", None), sh.BASE_RULES, mesh3) == P(
         ("pod", "data")
     )
@@ -51,7 +50,7 @@ def test_batch_axis_prefers_pod_data():
 
 
 def test_opt_rules_enable_sp_and_cache_seq():
-    mesh3 = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh3 = sh.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     a = sh.resolve_spec((256, 4096, 5376), ("batch", "act_seq", None),
                         sh.OPT_RULES, mesh3)
     assert a == P(("pod", "data"), "model")
