@@ -345,13 +345,14 @@ def _bench_sharded(g: int, use_kernels: bool) -> float:
     values = _mg_values(g)
     active = jnp.ones((g, MG_BURST), bool)
     alive = np.ones((g, A), np.int32)
+    enabled = np.ones((g,), np.int32)     # all slots live (full tenancy)
     ni = np.zeros((g,), np.int32)
     cr = np.zeros((g,), np.int32)
 
     def round_():
         nonlocal stack, lstate, ni
         stack, lstate, fresh, _inst, _win, _val = step(
-            ni, cr, alive, stack, lstate, values, active
+            ni, cr, enabled, alive, stack, lstate, values, active
         )
         ni = ni + MG_BURST
         block(fresh)

@@ -16,6 +16,7 @@ suppression at learners implement the paper's §3.1 failure-handling contract.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import functools
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -270,6 +271,13 @@ class MultiGroupDataplane:
     ``restore_group`` realigns the group's watermark/round after a software
     coordinator hands back control.  ``group_view`` exposes one group's
     staged surface for recovery and takeover.
+
+    Dynamic membership (DESIGN.md §7): ``cfg.n_groups`` is a *capacity* —
+    the ``(G_cap, A, N)`` slabs stay allocated at it, and a host-side
+    free-list over the group axis lets tenants come and go at runtime.
+    ``retire_group`` is host-scalar-only (drain + park at NO_ROUND + free),
+    ``create_group`` claims the lowest free slot and zeroes only that slot's
+    rings; neither touches any other group's slab state.
     """
 
     def __init__(self, cfg: PaxosConfig, use_kernels: bool = False):
@@ -282,6 +290,10 @@ class MultiGroupDataplane:
         )
         self.alive = [[True] * a for _ in range(g)]   # host mirror
         self.alive_mask = jnp.ones((g, a), jnp.bool_)
+        # dynamic membership: every capacity slot starts live; the free-list
+        # (sorted, lowest-first: deterministic allocation) holds vacant slots
+        self.live_host: List[bool] = [True] * g
+        self._free: List[int] = []
         self.use_kernels = use_kernels
         # per-group host mirrors of the sequencer watermark and round — the
         # kernel path's alignment/lockstep decisions cost no device sync
@@ -316,23 +328,32 @@ class MultiGroupDataplane:
         return self.cfg.n_groups
 
     def _plan_round(self, b: int, enabled: Optional[List[bool]]):
-        """Resolve the enabled mask against frozen rounds, decide kernel
-        eligibility from the host watermark mirrors, and pick the lockstep
-        fold width.  Returns ``(enabled, use_k, group_block)``."""
+        """Resolve the enabled mask against membership and frozen rounds,
+        decide kernel eligibility from the host watermark mirrors, and pick
+        the lockstep fold width.  Returns ``(enabled, use_k, group_block)``.
+
+        Only *enabled* groups constrain the plan: a disabled group — frozen,
+        vacant (retired), or idle this round — rides the dispatch inert at
+        whatever watermark it has (the kernel's enabled-mask path substitutes
+        a folded block's ring offset for it), so divergent disabled
+        watermarks neither break alignment nor forfeit the lockstep fold."""
         if enabled is None:
-            enabled = [c != NO_ROUND for c in self.crnd_host]
+            enabled = [
+                lv and c != NO_ROUND
+                for lv, c in zip(self.live_host, self.crnd_host)
+            ]
         else:
             enabled = [
-                bool(e) and c != NO_ROUND
-                for e, c in zip(enabled, self.crnd_host)
+                bool(e) and lv and c != NO_ROUND
+                for e, lv, c in zip(enabled, self.live_host, self.crnd_host)
             ]
-        # alignment must hold for every group — disabled groups' ring
-        # windows are still loaded (and left unchanged) by the kernel
+        marks = [w for w, e in zip(self.next_inst_host, enabled) if e]
         use_k = self.use_kernels and all(
-            self._window_aligned(w, b) for w in self.next_inst_host
+            self._window_aligned(w, b) for w in marks
         )
-        # lockstep watermarks let every grid step fold the full width
-        gb = self._fold_width() if len(set(self.next_inst_host)) == 1 else 1
+        # lockstep watermarks (across enabled groups) let every grid step
+        # fold the full width
+        gb = self._fold_width() if len(set(marks)) <= 1 else 1
         return enabled, use_k, gb
 
     def _empty_round(self, g: int, b: int):
@@ -365,11 +386,18 @@ class MultiGroupDataplane:
         enabled, use_k, gb = self._plan_round(b, enabled)
         if not any(enabled):
             return self._empty_round(g, b)
+        en = jnp.asarray(enabled)
         if use_k:
-            fn = functools.partial(self._fused_k, group_block=gb)
+            # the kernel takes the membership mask itself (enabled-mask
+            # path): it forces disabled rounds to NO_ROUND and substitutes
+            # folded-block watermarks for vacant/frozen members
+            fn = functools.partial(
+                self._fused_k,
+                group_block=gb,
+                enabled=en.astype(jnp.int32),
+            )
         else:
             fn = self._fused
-        en = jnp.asarray(enabled)
         cs = self.cstate
         eff = CoordinatorState(
             next_inst=cs.next_inst, crnd=jnp.where(en, cs.crnd, NO_ROUND)
@@ -442,6 +470,78 @@ class MultiGroupDataplane:
         takeover traffic; the fast path stays in ``pipeline``)."""
         self._check_gid(gid)
         return _GroupView(self, gid)
+
+    # -- dynamic membership: a free-list over the group axis (DESIGN.md §7) --
+    def _check_live(self, gid: int) -> None:
+        self._check_gid(gid)
+        if not self.live_host[gid]:
+            raise ValueError(f"group {gid} is retired")
+
+    def live_groups(self) -> List[int]:
+        """Currently live group ids, ascending (the routing domain)."""
+        return [g for g in range(self.cfg.n_groups) if self.live_host[g]]
+
+    def _reset_group_slab(self, gid: int) -> None:
+        """Zero ONE group's acceptor and learner rings — a fresh tenant's
+        slot.  Touches only row ``gid`` of the slabs (the sharded subclass
+        re-pins placement before its next fused dispatch, exactly like the
+        staged recovery surface)."""
+        n, v, a = (
+            self.cfg.n_instances,
+            self.cfg.value_words,
+            self.cfg.n_acceptors,
+        )
+        one = AcceptorState.init(n, v)
+        fresh = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (a,) + x.shape), one
+        )
+        self.stack = jax.tree_util.tree_map(
+            lambda s, f: s.at[gid].set(f), self.stack, fresh
+        )
+        self.lstate = jax.tree_util.tree_map(
+            lambda s, f: s.at[gid].set(f),
+            self.lstate,
+            batched.LearnerState.init(n, v),
+        )
+
+    def create_group(self) -> int:
+        """Claim a free slot on the group axis: zeroed rings, fresh
+        watermark/round, all acceptors alive.  Deterministic (lowest free
+        gid first).  Raises when the service is at capacity."""
+        if not self._free:
+            raise RuntimeError(
+                f"no free group slots (capacity n_groups={self.cfg.n_groups})"
+            )
+        gid = self._free.pop(0)
+        self._reset_group_slab(gid)
+        self.live_host[gid] = True
+        for aid in range(self.cfg.n_acceptors):
+            self.revive_acceptor(gid, aid)
+        # fresh sequencer: watermark 0, round 0 (restore_group also resyncs
+        # the device/host scalar mirrors, polymorphically per subclass)
+        self.restore_group(gid, 0, 0)
+        return gid
+
+    def retire_group(self, gid: int) -> List[Tuple[int, bytes]]:
+        """Retire a live group: drain its learner ring to a host log, park
+        its round at ``NO_ROUND`` (inert in the shared dispatch, exactly
+        like freeze), and return the slot to the free-list.  Host scalars
+        only — no other group's slab state is touched, and the slabs
+        themselves do not move (the slot is zeroed lazily at the next
+        ``create_group``).  Returns the drained ``(inst, value_bytes)``
+        pairs in instance order — the decided values still resident in the
+        retiring group's dedup ring."""
+        self._check_live(gid)
+        ld = np.asarray(self.lstate.delivered[gid])
+        li = np.asarray(self.lstate.inst[gid])
+        lv = np.asarray(self.lstate.value[gid])
+        slots = np.nonzero(ld != 0)[0]
+        order = slots[np.argsort(li[slots], kind="stable")]
+        drained = [(int(li[s]), lv[s].tobytes()) for s in order]
+        self.live_host[gid] = False
+        self.freeze_group(gid)
+        bisect.insort(self._free, gid)
+        return drained
 
 
 class ShardedMultiGroupDataplane(MultiGroupDataplane):
@@ -562,14 +662,15 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
             gb = 1
         self._ensure_placement()
         ni = np.asarray(self.next_inst_host, np.int32)
-        en = np.asarray(enabled)
+        en = np.asarray(enabled, np.int32)
         eff_crnd = np.where(
-            en, np.asarray(self.crnd_host, np.int32), NO_ROUND
+            en != 0, np.asarray(self.crnd_host, np.int32), NO_ROUND
         ).astype(np.int32)
         fn = self._dispatch(use_k, gb)
         self.stack, self.lstate, fresh, inst, _win, value = fn(
             ni,
             eff_crnd,
+            en,
             self.alive_mask,
             self.stack,
             self.lstate,
@@ -664,12 +765,15 @@ class PaxosContext:
             self._partial_g: List[Dict[int, Dict[int, Tuple[int, bytes]]]] = [
                 dict() for _ in range(self.n_groups)
             ]
-            self.group_log: List[List[Tuple[int, bytes]]] = [
-                [] for _ in range(self.n_groups)
-            ]
         else:
             self.hw = HardwareDataplane(self.cfg, use_kernels=use_kernels)
             self.fused = fused
+        # the per-group delivery log is uniform across context shapes: an
+        # ungrouped single-group context logs into group_log[0], so readers
+        # (serve.ConsensusService.delivered) never need a G == 1 special case
+        self.group_log: List[List[Tuple[int, bytes]]] = [
+            [] for _ in range(self.n_groups)
+        ]
         self._delivered_seqs: set = set()
         self.retransmit_after = retransmit_after
         self.n_learners = n_learners
@@ -689,12 +793,17 @@ class PaxosContext:
         self.stats = {"submitted": 0, "delivered": 0, "retransmits": 0}
 
     # -- paper API -----------------------------------------------------------
+    def _check_group(self, group: int) -> None:
+        if not 0 <= group < self.n_groups:
+            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        if self.grouped and not self.hw.live_host[group]:
+            raise ValueError(f"group {group} is retired")
+
     def submit(self, payload: bytes, group: int = 0) -> int:
         """paxos_submit(ctx, value, size) — ``group`` selects which of the
         device-resident consensus groups sequences the value (0 is the only
         group of a single-group context)."""
-        if not 0 <= group < self.n_groups:
-            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        self._check_group(group)
         if self.grouped:
             seq = self._next_client_seq_g[group]
             self._next_client_seq_g[group] += 1
@@ -709,8 +818,7 @@ class PaxosContext:
 
     def recover(self, inst: int, nop: bytes = b"\x00", group: int = 0) -> None:
         """paxos_recover(ctx, iid, nop_value, size): phase 1+2 with a no-op."""
-        if not 0 <= group < self.n_groups:
-            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        self._check_group(group)
         self.net.send("coordinator", ("recover", inst, nop, group))
 
     # -- event loop ----------------------------------------------------------
@@ -837,6 +945,13 @@ class PaxosContext:
         """Group-keyed coordinator pump: recovery first, then groups under a
         software coordinator (staged, per group), then one fused multi-group
         dispatch per burst for everything hardware-sequenced."""
+        # traffic addressed to a retired group is dropped at the door: the
+        # slot may already belong to the free-list (or a future tenant), and
+        # a retired group must never sequence — in-flight submits died with
+        # the tenant (clients re-route at the membership epoch bump)
+        live = self.hw.live_host
+        submits = [s for s in submits if live[s[2]]]
+        recovers = [r for r in recovers if live[r[2]]]
         for inst, nop, gid in recovers:
             self._run_recover_group(gid, inst, nop)
         queues: List[List[Tuple[int, bytes]]] = [
@@ -963,8 +1078,7 @@ class PaxosContext:
         payload = raw[8 : 8 + int(words[1])]
         self._pending.pop(key, None)
         self.delivered_log.append((inst, payload))
-        if group is not None:
-            self.group_log[group].append((inst, payload))
+        self.group_log[0 if group is None else group].append((inst, payload))
         self.stats["delivered"] += 1
         if self.deliver_cb:
             self.deliver_cb(payload, len(payload), inst)
@@ -988,6 +1102,66 @@ class PaxosContext:
         head = np.array([seq, len(payload)], np.int32).tobytes()
         return np.frombuffer((head + payload).ljust(nbytes, b"\x00"), "<i4").copy()
 
+    # -- dynamic membership (DESIGN.md §7) -----------------------------------
+    def _require_grouped(self) -> None:
+        if not self.grouped:
+            raise ValueError(
+                "dynamic membership requires a group-keyed context "
+                "(n_groups > 1 or mesh=...)"
+            )
+
+    def live_groups(self) -> List[int]:
+        """Currently live group ids (ascending) — the routing domain."""
+        if not self.grouped:
+            return [0]
+        return self.hw.live_groups()
+
+    def create_group(self) -> int:
+        """Admit a tenant: claim a free slot on the group axis (zeroed
+        rings, fresh watermark/round and client-sequence space, empty
+        logs).  Returns the new group id — deterministic, lowest free slot
+        first."""
+        self._require_grouped()
+        gid = self.hw.create_group()
+        self.learned_g[gid] = {}
+        self._partial_g[gid] = {}
+        self.group_log[gid] = []
+        self._next_client_seq_g[gid] = 0
+        return gid
+
+    def retire_group(self, gid: int) -> List[Tuple[int, bytes]]:
+        """Reclaim a tenant's slot: the group's delivery log is drained
+        (returned to the caller — the serving tier archives it for routing-
+        epoch stitching), its round parks at ``NO_ROUND`` and the slot joins
+        the free-list.  Undelivered submissions to the group are dropped —
+        with the tenant gone there is no group to decide them — and their
+        dedup keys are purged so a future tenant reusing the slot starts
+        from a clean (group, seq) space.  Host scalars only: no other
+        group's state is touched."""
+        self._require_grouped()
+        self.hw.retire_group(gid)          # raises unless live
+        self._softco_g.pop(gid, None)
+        # flush the tenant's in-flight coordinator traffic NOW, not at the
+        # next pump: if the slot is recreated before a pump runs, the
+        # pump-time liveness filter would see the recycled slot live again
+        # and sequence the old tenant's stale submit into the new tenant's
+        # log (and poison its fresh (group, seq) dedup space)
+        self.net.purge(
+            "coordinator", lambda m: (m[3] if len(m) > 3 else 0) == gid
+        )
+        for key in [
+            k
+            for k in self._pending
+            if isinstance(k, tuple) and k[0] == gid
+        ]:
+            del self._pending[key]
+        self._delivered_seqs = {
+            k
+            for k in self._delivered_seqs
+            if not (isinstance(k, tuple) and k[0] == gid)
+        }
+        return self.group_log[gid]
+
     # -- failover ------------------------------------------------------------
     def fail_coordinator(
         self, est_next_inst: Optional[int] = None, group: int = 0
@@ -1005,8 +1179,7 @@ class PaxosContext:
         making it inert in the shared fused dispatch); every other group keeps
         hardware-sequencing undisturbed.
         """
-        if not 0 <= group < self.n_groups:
-            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        self._check_group(group)
         if self.grouped:
             return self._fail_coordinator_group(group, est_next_inst)
 
@@ -1060,8 +1233,7 @@ class PaxosContext:
         return res
 
     def restore_hardware_coordinator(self, group: int = 0) -> None:
-        if not 0 <= group < self.n_groups:
-            raise ValueError(f"group {group} out of range [0, {self.n_groups})")
+        self._check_group(group)
         if self.grouped:
             co = self._softco_g.pop(group, None)
             if co is not None:

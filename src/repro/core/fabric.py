@@ -171,18 +171,21 @@ def make_sharded_multigroup_round(
     ``mesh[axis]`` so G scales with device count instead of one chip's
     VMEM/HBM.
 
-    Per-group scalar metadata — the ``(G,)`` watermark/round vectors and the
-    ``(G, A)`` alive mask — enters *replicated*: it is tiny, host-mutated
-    control state, and each shard selects its own window by group offset
+    Per-group scalar metadata — the ``(G,)`` watermark/round vectors, the
+    ``(G, A)`` alive mask and the ``(G,)`` membership ``enabled`` mask —
+    enters *replicated*: it is tiny, host-mutated control state, and each
+    shard selects its own window by group offset
     (``kernels.wirepath.shard_slab_round``).  The ring slabs stay
     shard-local and nothing crosses the mesh axis during a round, because
     groups share no state; the quorum reduction runs down the acceptor axis
-    *inside* each shard's slab.
+    *inside* each shard's slab.  Disabled (frozen/vacant/idle) groups ride
+    along inert — see the enabled-mask path in ``kernels.wirepath``
+    (DESIGN.md §7): membership events therefore never move slab state.
 
-    Returns ``step(next_inst[G], crnd[G], alive[G, A], stack, lstate,
-    values[G, B, V], active[G, B]) -> (stack', lstate', fresh[G, B],
-    inst[G, B], win[G, B], value[G, B, V])`` with the state arguments
-    donated (device-resident in place across rounds).
+    Returns ``step(next_inst[G], crnd[G], enabled[G], alive[G, A], stack,
+    lstate, values[G, B, V], active[G, B]) -> (stack', lstate',
+    fresh[G, B], inst[G, B], win[G, B], value[G, B, V])`` with the state
+    arguments donated (device-resident in place across rounds).
     """
     if axis not in mesh.shape:
         raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
@@ -200,7 +203,7 @@ def make_sharded_multigroup_round(
     offsets = jnp.arange(n_sh, dtype=jnp.int32) * gl
     q = quorum
 
-    def local(ni, cr, alive, off, stack, lstate, values, active):
+    def local(ni, cr, en, alive, off, stack, lstate, values, active):
         # off is this shard's (1,)-slice of the offset vector: the global id
         # of the slab's first group.  Scalar vectors stay global; slabs are
         # local.
@@ -213,7 +216,7 @@ def make_sharded_multigroup_round(
             outs = kwp.shard_slab_round(
                 off[0], ni, cr, jnp.int32(q), alive,
                 stack.rnd, stack.vrnd, stack.value,
-                lstate.delivered, lstate.inst, lstate.value, values,
+                lstate.delivered, lstate.inst, lstate.value, values, en,
                 group_block=group_block, interpret=kops.INTERPRET,
             )
             stack = AcceptorState(*outs[:3])
@@ -221,6 +224,8 @@ def make_sharded_multigroup_round(
             fresh, win, value = outs[6] != 0, outs[7], outs[8]
         else:
             cr_l = jax.lax.dynamic_slice(cr, (off[0],), (gl,))
+            en_l = jax.lax.dynamic_slice(en, (off[0],), (gl,))
+            cr_l = jnp.where(en_l != 0, cr_l, NO_ROUND)
             al_l = jax.lax.dynamic_slice(
                 alive, (off[0], 0), (gl, alive.shape[1])
             )
@@ -241,6 +246,7 @@ def make_sharded_multigroup_round(
         in_specs=(
             P(),                                   # next_inst (replicated)
             P(),                                   # crnd (replicated)
+            P(),                                   # enabled (replicated)
             P(),                                   # alive (replicated)
             sheet,                                 # offsets
             AcceptorState(sheet, sheet, sheet),    # acceptor slabs
@@ -258,10 +264,11 @@ def make_sharded_multigroup_round(
         ),
     )
 
-    def step(next_inst, crnd, alive, stack, lstate, values, active):
+    def step(next_inst, crnd, enabled, alive, stack, lstate, values, active):
         return fn(
             jnp.asarray(next_inst, jnp.int32).reshape((n_groups,)),
             jnp.asarray(crnd, jnp.int32).reshape((n_groups,)),
+            jnp.asarray(enabled, jnp.int32).reshape((n_groups,)),
             jnp.asarray(alive, jnp.int32),
             offsets,
             stack,
@@ -270,7 +277,7 @@ def make_sharded_multigroup_round(
             active,
         )
 
-    return jax.jit(step, donate_argnums=(3, 4))
+    return jax.jit(step, donate_argnums=(4, 5))
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,7 @@ from typing import List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .types import MSG_P1A, MSG_P2A, MsgBatch
+from .types import MSG_NOP, MSG_P1A, MSG_P2A, MsgBatch
 
 NO_ROUND = -1
 
@@ -66,13 +66,25 @@ def takeover(
 
     reproposed: List[Tuple[int, bytes]] = []
     highest_voted = -1
+    scanned = 0
 
     for base in range(lo, hi, b):
         insts = np.arange(base, base + b, dtype=np.int32)
+        # The final batch may overhang the window when (hi - lo) % b != 0.
+        # Out-of-window positions are masked inert (msgtype NOP at NO_ROUND):
+        # a P1A there would bump promised rounds beyond the window, and the
+        # Phase-2 re-propose below would vote values into instances the
+        # takeover has no business touching.
+        in_win = insts < hi
+        scanned += int(in_win.sum())
         p1a = MsgBatch(
-            msgtype=jnp.full((b,), MSG_P1A, jnp.int32),
+            msgtype=jnp.where(
+                jnp.asarray(in_win), MSG_P1A, MSG_NOP
+            ).astype(jnp.int32),
             inst=jnp.asarray(insts),
-            rnd=jnp.full((b,), crnd, jnp.int32),
+            rnd=jnp.where(jnp.asarray(in_win), crnd, NO_ROUND).astype(
+                jnp.int32
+            ),
             vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
             swid=jnp.full((b,), coordinator_id, jnp.int32),
             value=jnp.zeros((b, vwords), jnp.int32),
@@ -94,13 +106,19 @@ def takeover(
             best_vrnd = np.where(better, host_vr, best_vrnd)
             best_val = np.where(better[:, None], host_val, best_val)
         quorate = got >= quorum
-        voted = quorate & (best_vrnd != NO_ROUND)
+        voted = quorate & (best_vrnd != NO_ROUND) & in_win
         if voted.any():
-            # re-propose discovered values at the new round (value-choice rule)
+            # Re-propose discovered values at the new round (value-choice
+            # rule).  NOP slots at ``crnd`` vote like P2As (the wire-path
+            # filler semantics), which is the designed in-window catch-up —
+            # but out-of-window slots must stay inert, so their round is
+            # NO_ROUND (below any promise).
             p2a = MsgBatch(
                 msgtype=jnp.where(jnp.asarray(voted), MSG_P2A, 0).astype(jnp.int32),
                 inst=jnp.asarray(insts),
-                rnd=jnp.full((b,), crnd, jnp.int32),
+                rnd=jnp.where(jnp.asarray(in_win), crnd, NO_ROUND).astype(
+                    jnp.int32
+                ),
                 vrnd=jnp.full((b,), NO_ROUND, jnp.int32),
                 swid=jnp.full((b,), coordinator_id, jnp.int32),
                 value=jnp.asarray(best_val),
@@ -112,7 +130,7 @@ def takeover(
 
     next_inst = max(est_next_inst, highest_voted + 1)
     return TakeoverResult(
-        crnd=crnd, next_inst=next_inst, reproposed=reproposed, scanned=hi - lo
+        crnd=crnd, next_inst=next_inst, reproposed=reproposed, scanned=scanned
     )
 
 

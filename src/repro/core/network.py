@@ -55,6 +55,19 @@ class SimNet:
             else:
                 q.append(msg)
 
+    def purge(self, dst: Hashable, predicate) -> int:
+        """Drop every queued message at ``dst`` matching ``predicate``;
+        returns the number dropped.  Models an endpoint flushing traffic
+        that became undeliverable (e.g. addressed to a retired consensus
+        group) without disturbing queue order for the survivors."""
+        q = self.queues[dst]
+        keep = [m for m in q if not predicate(m)]
+        n = len(q) - len(keep)
+        q.clear()
+        q.extend(keep)
+        self.dropped += n
+        return n
+
     def recv(self, dst: Hashable) -> Any | None:
         q = self.queues[dst]
         return q.popleft() if q else None

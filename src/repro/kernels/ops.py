@@ -153,6 +153,7 @@ def multigroup_fused_round(
     active: jax.Array,          # bool[G, B]
     alive: jax.Array,           # bool[G, A]
     quorum: int | jax.Array,
+    enabled: jax.Array | None = None,
     *,
     group_block: int = 1,
 ) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
@@ -162,9 +163,12 @@ def multigroup_fused_round(
 
     ``active`` never reaches the device for the same reason as in
     ``fused_round``.  ``group_block > 1`` folds groups into one grid step —
-    legal only when the folded groups' watermarks are in lockstep, which the
-    ``MultiGroupDataplane`` checks against its host watermark mirrors.
-    Precondition: every group's ``next_inst`` is block-aligned.
+    legal only when the folded *enabled* groups' watermarks are in lockstep,
+    which the ``MultiGroupDataplane`` checks against its host watermark
+    mirrors; ``enabled`` (0/1 per group) marks frozen/vacant/idle groups so
+    the kernel can hold them inert and fold over their divergent watermarks
+    (DESIGN.md §7).  Precondition: every enabled group's ``next_inst`` is
+    block-aligned.
     """
     del active  # sequenced fillers vote like P2As; see fused_round
     b = values.shape[1]
@@ -181,6 +185,7 @@ def multigroup_fused_round(
             lstate.inst,
             lstate.value,
             values,
+            None if enabled is None else jnp.asarray(enabled, jnp.int32),
             group_block=group_block,
             interpret=INTERPRET,
         )

@@ -37,14 +37,24 @@ acceptor rings, its own learner ring, and its own liveness row in the
 
 Invariants (maintained by ``core.api.MultiGroupDataplane``, asserted where
 shapes are static): ``BB | B``, ``BB | N``, ``B <= N``, ``GB | G``, and every
-group's window base is BB-aligned.  Liveness is a *runtime* input — the
-``(G, A)`` alive mask rides in scalar-prefetch SMEM, so killing/reviving an
-acceptor in any group never recompiles the kernel.
+*enabled* group's window base is BB-aligned.  Liveness is a *runtime* input —
+the ``(G, A)`` alive mask rides in scalar-prefetch SMEM, so killing/reviving
+an acceptor in any group never recompiles the kernel.
+
+**Enabled mask (dynamic membership, DESIGN.md §7).**  ``enabled`` marks which
+groups advance this round; a disabled group — frozen under a software
+coordinator, vacant (retired from the free-list), or simply idle — rides
+along *inert*: its round is presented as NO_ROUND (acceptors reject every
+slot) and, under ``group_block > 1``, its watermark is substituted with the
+block's enabled-lockstep base so a folded block keeps a single well-defined
+ring offset even when disabled members' watermarks diverged.  The disabled
+group's ring windows are loaded and stored back bit-unchanged, so folding
+over vacant slots is state-exact.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -162,6 +172,7 @@ def multigroup_wirepath_round(
     linst: jax.Array,       # int32[G, N]
     lval: jax.Array,        # int32[G, N, V]
     values: jax.Array,      # int32[G, B, V]   per-group burst values
+    enabled: Optional[jax.Array] = None,  # int32[G] (0/1); None = all enabled
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
@@ -170,9 +181,13 @@ def multigroup_wirepath_round(
     """One fused Phase-2 round for G device-resident groups; single dispatch.
 
     ``group_block > 1`` folds that many groups into each grid step (see the
-    module docstring); the folded groups of a block must share one BB-aligned
-    watermark — the caller's responsibility (``MultiGroupDataplane`` only
-    folds when its host watermark mirrors are in lockstep).
+    module docstring); the folded *enabled* groups of a block must share one
+    BB-aligned watermark — the caller's responsibility
+    (``MultiGroupDataplane`` only folds when its host watermark mirrors are
+    in lockstep across enabled groups).  ``enabled`` is the vacant/frozen
+    mask: disabled groups get their round forced to NO_ROUND and, when
+    folding, their watermark substituted with the block's enabled-lockstep
+    base — they ride the dispatch inert and bit-unchanged.
 
     Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
     fresh[G, B], win_vrnd[G, B], value[G, B, V])``.
@@ -264,6 +279,23 @@ def multigroup_wirepath_round(
     )
     ni = jnp.asarray(next_inst, jnp.int32).reshape((g,))
     cr = jnp.asarray(crnd, jnp.int32).reshape((g,))
+    if enabled is not None:
+        en = jnp.asarray(enabled, jnp.int32).reshape((g,)) != 0
+        # a disabled group decides (and mutates) nothing: NO_ROUND rejects
+        cr = jnp.where(en, cr, jnp.int32(NO_ROUND))
+        if gb > 1:
+            # a folded block has ONE ring offset (its first group's
+            # watermark); substitute disabled members with the block's
+            # enabled-lockstep base so their stray watermarks cannot skew
+            # it — their windows are written back unchanged wherever they
+            # land, so the substitution is state-exact
+            enb = en.reshape(g // gb, gb)
+            nib = ni.reshape(g // gb, gb)
+            base = jnp.max(
+                jnp.where(enb, nib, jnp.iinfo(jnp.int32).min), axis=1
+            )
+            base = jnp.where(jnp.any(enb, axis=1), base, 0)
+            ni = jnp.where(enb, nib, base[:, None]).reshape((g,))
     q = jnp.asarray(quorum, jnp.int32).reshape((1,))
     al = jnp.asarray(alive, jnp.int32).reshape((g, a))
     return tuple(
@@ -285,6 +317,7 @@ def shard_slab_round(
     linst: jax.Array,         # int32[Gl, N]
     lval: jax.Array,          # int32[Gl, N, V]
     values: jax.Array,        # int32[Gl, B, V]   this shard's burst slab
+    enabled: Optional[jax.Array] = None,  # int32[G_global] (0/1) replicated
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
@@ -294,11 +327,12 @@ def shard_slab_round(
 
     Runs ``multigroup_wirepath_round`` on ONE shard's contiguous slab of
     ``Gl = G_global / n_shards`` groups.  The per-group scalar vectors
-    (watermarks, rounds, liveness) stay *global and replicated* — they are
-    tiny, host-mutated metadata — and ``group_offset`` selects this shard's
-    window so per-group scalars index correctly inside the shard.  Designed
-    to be called inside ``shard_map`` with the slab arrays partitioned over
-    a ``groups`` mesh axis (``core.fabric.make_sharded_multigroup_round``).
+    (watermarks, rounds, liveness, and the membership ``enabled`` mask) stay
+    *global and replicated* — they are tiny, host-mutated metadata — and
+    ``group_offset`` selects this shard's window so per-group scalars index
+    correctly inside the shard.  Designed to be called inside ``shard_map``
+    with the slab arrays partitioned over a ``groups`` mesh axis
+    (``core.fabric.make_sharded_multigroup_round``).
     """
     gl, a = st_rnd.shape[0], st_rnd.shape[1]
     off = jnp.asarray(group_offset, jnp.int32).reshape(())
@@ -313,9 +347,14 @@ def shard_slab_round(
         (off, jnp.int32(0)),
         (gl, a),
     )
+    en = None
+    if enabled is not None:
+        en = jax.lax.dynamic_slice(
+            jnp.asarray(enabled, jnp.int32).reshape((-1,)), (off,), (gl,)
+        )
     return multigroup_wirepath_round(
         ni, cr, quorum, al,
-        st_rnd, st_vrnd, st_val, ldel, linst, lval, values,
+        st_rnd, st_vrnd, st_val, ldel, linst, lval, values, en,
         block_b=block_b, group_block=group_block, interpret=interpret,
     )
 

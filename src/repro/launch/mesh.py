@@ -38,6 +38,13 @@ def make_group_mesh(n_devices: int = 0) -> jax.sharding.Mesh:
     mesh shard, so G scales with device count instead of one chip's
     VMEM/HBM.  On a single-device host this degenerates to a (1,) mesh and
     the sharded dataplane reduces bit-exactly to ``MultiGroupDataplane``.
+
+    Capacity planning under dynamic membership (DESIGN.md §7): G is the
+    *capacity* of the group axis, fixed at mesh/dataplane construction and
+    divisible by the axis size.  Tenants create/retire over a free-list
+    *within* that capacity — membership events flip replicated host scalars
+    and never re-shard or move slab state — so size G for peak concurrent
+    tenancy, not current tenancy.
     """
     n = n_devices or len(jax.devices())
     return jax.make_mesh((n,), ("groups",))

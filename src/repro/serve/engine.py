@@ -60,15 +60,13 @@ _FNV_OFFSET = 0x811C9DC5
 _FNV_PRIME = 0x01000193
 
 
-def session_group(session_id, n_groups: int) -> int:
-    """Deterministic session -> consensus-group routing (32-bit FNV-1a).
+def session_hash(session_id) -> int:
+    """32-bit FNV-1a of a session id (bytes / str / arbitrary-width int).
 
     Stable across processes and runs (unlike Python's salted ``hash``), cheap
     enough for the submit path, and uniform enough that G groups see balanced
     load from arbitrary session-id distributions.
     """
-    if n_groups < 1:
-        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
     if isinstance(session_id, bytes):
         data = session_id
     elif isinstance(session_id, str):
@@ -83,7 +81,34 @@ def session_group(session_id, n_groups: int) -> int:
     h = _FNV_OFFSET
     for byte in data:
         h = ((h ^ byte) * _FNV_PRIME) & 0xFFFFFFFF
-    return h % n_groups
+    return h
+
+
+def session_group(session_id, n_groups: int) -> int:
+    """Deterministic session -> consensus-group routing over a full group
+    axis: ``session_hash % n_groups``."""
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    return session_hash(session_id) % n_groups
+
+
+def session_group_live(session_id, live_groups: List[int], capacity: int) -> int:
+    """Epoch-aware routing: primary slot with deterministic fallback.
+
+    The session's *primary* slot is the capacity routing
+    (``session_hash % capacity`` — exactly :func:`session_group`, and
+    placement-independent).  While the primary is live the session stays
+    pinned to it, so a membership event never moves sessions of surviving
+    groups; only sessions whose slot retired re-route, deterministically,
+    over the live set (``live_groups[hash % len]``) — and return to their
+    primary when the slot is recreated."""
+    if not live_groups:
+        raise ValueError("no live consensus groups to route onto")
+    h = session_hash(session_id)
+    primary = h % capacity
+    if primary in live_groups:
+        return primary
+    return live_groups[h % len(live_groups)]
 
 
 class ConsensusService:
@@ -93,6 +118,18 @@ class ConsensusService:
     session's value to its group, ``pump``/``run_until_quiescent`` drive the
     shared fused dispatch, and ``delivered`` reads a session's group log —
     the per-group total order every session in that group observes.
+
+    **Routing epochs (dynamic membership, DESIGN.md §7).**  ``cfg.n_groups``
+    is a capacity; the routing domain is the *live* group set.  Every
+    membership event driven through ``create_group``/``retire_group`` bumps
+    the routing epoch: sessions re-resolve via
+    :func:`session_group_live` (primary capacity slot with deterministic
+    fallback over the live set — placement-independent, and stable for
+    sessions of surviving groups), a retiring group's log is archived under
+    its ``(gid, generation)``, and ``delivered`` stitches a session's
+    pre-retirement logs in front of its current group's log.  Membership
+    must flow through this service (not the raw context) for the archive to
+    stay complete.
     """
 
     def __init__(self, ctx):
@@ -103,9 +140,49 @@ class ConsensusService:
         # the hash is pure and cheap, and a session universe of millions
         # must not accrete host memory in the routing tier
         self.submits_per_group = [0] * self.n_groups
+        # routing epochs: per-epoch (live gid list, per-slot generation)
+        # snapshots; archived logs keyed by (gid, generation)
+        self._gen = [0] * self.n_groups
+        self._epochs: List[Tuple[List[int], List[int]]] = [
+            (self._live_now(), list(self._gen))
+        ]
+        self._archived: Dict[Tuple[int, int], List[Tuple[int, bytes]]] = {}
+
+    # -- membership (drives the context, keeps the epoch history) ------------
+    def _live_now(self) -> List[int]:
+        live = getattr(self.ctx.hw, "live_host", None)
+        if live is None:
+            return list(range(self.n_groups))
+        return [g for g in range(self.n_groups) if live[g]]
+
+    @property
+    def routing_epoch(self) -> int:
+        return len(self._epochs) - 1
+
+    def _bump_epoch(self) -> None:
+        self._epochs.append((self._live_now(), list(self._gen)))
+
+    def create_group(self) -> int:
+        """Admit a tenant: claim a slot on the group axis and bump the
+        routing epoch — sessions re-resolve over the grown live set."""
+        gid = self.ctx.create_group()
+        self._gen[gid] += 1
+        self._bump_epoch()
+        return gid
+
+    def retire_group(self, gid: int) -> None:
+        """Reclaim a tenant's slot: the group's log is archived under its
+        (gid, generation) for ``delivered`` stitching, and the routing
+        epoch bumps — sessions pinned to the slot re-route
+        deterministically over the survivors."""
+        log = self.ctx.retire_group(gid)
+        self._archived[(gid, self._gen[gid])] = list(log)
+        self._bump_epoch()
 
     def group_of(self, session_id) -> int:
-        return session_group(session_id, self.n_groups)
+        """Epoch-aware session -> group routing over the live set."""
+        live, _gens = self._epochs[-1]
+        return session_group_live(session_id, live, self.n_groups)
 
     # -- group -> shard placement (the sharded dataplane, DESIGN.md §6) ------
     def group_placement(self) -> List[int]:
@@ -143,11 +220,31 @@ class ConsensusService:
         self.ctx.run_until_quiescent(max_rounds)
 
     def delivered(self, session_id) -> List[Tuple[int, bytes]]:
-        """The (inst, payload) log of the session's group, in decided order."""
-        gid = self.group_of(session_id)
-        if self.n_groups == 1:
-            return list(self.ctx.delivered_log)
-        return list(self.ctx.group_log[gid])
+        """The (inst, payload) log the session observes, in decided order.
+
+        Uniform group-log read — no G == 1 special case (a service can pass
+        through G == 1 transiently under dynamic membership, and an
+        ungrouped context logs into ``group_log[0]``).  Under routing
+        epochs the view is *stitched*: for every distinct (group,
+        generation) the session was routed to, the archived pre-retirement
+        log (retired generations) or the live group log (the current one),
+        concatenated in epoch order.
+        """
+        seen: set = set()
+        out: List[Tuple[int, bytes]] = []
+        for live, gens in self._epochs:
+            if not live:
+                continue
+            gid = session_group_live(session_id, live, self.n_groups)
+            key = (gid, gens[gid])
+            if key in seen:
+                continue
+            seen.add(key)
+            if key in self._archived:
+                out.extend(self._archived[key])
+            elif gens[gid] == self._gen[gid]:
+                out.extend(self.ctx.group_log[gid])
+        return out
 
     def group_loads(self) -> List[int]:
         """Values submitted per group (load-balance introspection)."""
@@ -164,40 +261,50 @@ class ServeLoop:
         self.max_len = max_len
         self.mod = registry.family_module(cfg)
         self._decode = jax.jit(make_serve_step(cfg))
-        self.cache = self.mod.init_cache(cfg, batch_size, max_len, jnp.dtype(cfg.dtype))
         self.steps = 0
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Teacher-forced prefill via decode steps, then greedy generation."""
+        """Teacher-forced prefill via decode steps, then greedy generation.
+
+        Mixed prompt lengths never see padding: every row feeds a *real*
+        token at every step — its prompt while the shared position counter
+        is inside the prompt, its own greedy continuation afterwards.  Each
+        row therefore crosses from teacher-forcing to generation at its own
+        boundary, and since row ``i`` has consumed exactly ``t`` of its own
+        tokens by step ``t``, the shared position counter is per-row exact.
+        Generations match per-request decode bit-for-bit (cache rows only
+        ever hold the row's own tokens); rows that finish early idle on
+        their last token, which touches no other row.
+        """
         out: Dict[int, List[int]] = {}
         for chunk_start in range(0, len(requests), self.batch):
             chunk = requests[chunk_start : chunk_start + self.batch]
             b = len(chunk)
-            plen = max(len(r.prompt) for r in chunk)
-            toks = np.zeros((self.batch, plen), np.int32)
-            for i, r in enumerate(chunk):
-                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            # an empty prompt seeds token 0 as an implicit BOS (the row must
+            # feed something at step 0) and generates from it
+            lens = [max(1, len(r.prompt)) for r in chunk]
             cache = self.mod.init_cache(
                 self.cfg, self.batch, self.max_len, jnp.dtype(self.cfg.dtype)
             )
-            last = None
-            for t in range(plen):
+            gen: List[List[int]] = [[] for _ in range(b)]
+            cur = np.zeros((self.batch, 1), np.int32)
+            for i, r in enumerate(chunk):
+                if len(r.prompt):
+                    cur[i, 0] = r.prompt[0]
+            total = max(ln + r.max_new for ln, r in zip(lens, chunk))
+            for t in range(total - 1):
                 last, cache = self._decode(
-                    self.params, jnp.asarray(toks[:, t : t + 1]), cache, jnp.int32(t)
+                    self.params, jnp.asarray(cur), cache, jnp.int32(t)
                 )
                 self.steps += 1
-            gen = [[] for _ in range(b)]
-            cur = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
-            max_new = max(r.max_new for r in chunk)
-            for s in range(max_new):
-                for i in range(b):
-                    if s < chunk[i].max_new:
-                        gen[i].append(int(cur[i, 0]))
-                last, cache = self._decode(
-                    self.params, cur, cache, jnp.int32(plen + s)
-                )
-                self.steps += 1
-                cur = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+                nxt = np.asarray(jnp.argmax(last, axis=-1), np.int32)
+                for i, r in enumerate(chunk):
+                    k = t + 1 - lens[i]         # generation index this step
+                    if k < 0:
+                        cur[i, 0] = r.prompt[t + 1]   # still teacher-forcing
+                    elif k < r.max_new:
+                        gen[i].append(int(nxt[i]))
+                        cur[i, 0] = nxt[i]
             for i, r in enumerate(chunk):
                 out[r.rid] = gen[i]
         return out

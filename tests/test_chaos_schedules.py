@@ -2,11 +2,18 @@
 
 Property under test: a multi-group ``PaxosContext`` (unsharded or
 groups-sharded) driven through an arbitrary interleaving of
-submit / freeze / restore / kill / revive / pump operations produces
-*exactly* the per-group delivery logs of G independent single-group
-contexts fed the identical schedule — same payloads, same instances, same
-order — and every submission is delivered exactly once after the service
-heals.
+submit / freeze / restore / kill / revive / pump / retire / create
+operations produces *exactly* the per-group delivery logs of G independent
+single-group contexts fed the identical schedule — same payloads, same
+instances, same order — and every submission is delivered exactly once
+after the service heals.
+
+Dynamic membership (DESIGN.md §7) rides the same contract: a ``retire``
+archives the group's log, which must equal its independent twin's at that
+instant (the twin is then discarded — submissions still pending at
+retirement are dropped on both sides); a ``create`` claims the lowest free
+slot deterministically and starts a *fresh* twin, whose log and registers
+the recycled slot must then match bit-for-bit.
 
 The harness keeps the pump cadence identical on both sides (ops are applied
 simultaneously; every ``pump`` op advances the multi-group context and all G
@@ -28,6 +35,8 @@ from _hypothesis_compat import given, settings, st
 from repro.core import PaxosConfig, PaxosContext
 from repro.launch.mesh import make_group_mesh
 
+pytestmark = pytest.mark.slow    # chaos suite: skipped in the fast CI lane
+
 A = 3
 QUORUM = A // 2 + 1
 CFG1 = PaxosConfig(n_acceptors=A, n_instances=64, batch=8)
@@ -37,42 +46,64 @@ def _cfg(g: int) -> PaxosConfig:
     return PaxosConfig(n_acceptors=A, n_instances=64, batch=8, n_groups=g)
 
 
-def _schedule(seed: int, g: int, steps: int):
+def _schedule(seed: int, g: int, steps: int, membership: bool = True):
     """A random but always-legal op sequence, healed at the end (every
     acceptor revived, every frozen group restored) so full delivery is a
-    checkable postcondition."""
+    checkable postcondition.  ``membership`` mixes in retire/create events;
+    the generator mirrors the dataplane's deterministic lowest-free-slot
+    allocation so a ``create`` op can name the gid it will receive."""
     rng = np.random.default_rng(seed)
     frozen = [False] * g
     alive = [[True] * A for _ in range(g)]
+    live = [True] * g
+    free: list = []
     ops = []
     for _ in range(steps):
         r = rng.random()
         gid = int(rng.integers(g))
-        if r < 0.45:
-            ops.append(("submit", gid))
-        elif r < 0.70:
+        if r < 0.40:
+            if live[gid]:
+                ops.append(("submit", gid))
+        elif r < 0.62:
             ops.append(("pump",))
-        elif r < 0.78:
+        elif r < 0.69:
             aid = int(rng.integers(A))
-            if alive[gid][aid]:
+            if live[gid] and alive[gid][aid]:
                 alive[gid][aid] = False
                 ops.append(("kill", gid, aid))
-        elif r < 0.86:
+        elif r < 0.76:
             dead = [a for a in range(A) if not alive[gid][a]]
-            if dead:
+            if live[gid] and dead:
                 aid = dead[int(rng.integers(len(dead)))]
                 alive[gid][aid] = True
                 ops.append(("revive", gid, aid))
-        elif r < 0.93:
+        elif r < 0.83:
             # takeover needs a quorum of promises to discover voted values
-            if not frozen[gid] and sum(alive[gid]) >= QUORUM:
+            if live[gid] and not frozen[gid] and sum(alive[gid]) >= QUORUM:
                 frozen[gid] = True
                 ops.append(("freeze", gid))
-        else:
-            if frozen[gid]:
+        elif r < 0.89:
+            if live[gid] and frozen[gid]:
                 frozen[gid] = False
                 ops.append(("restore", gid))
+        elif r < 0.95:
+            # retire a live tenant (keep at least one group serving);
+            # frozen/dead-acceptor state dies with the tenant
+            if membership and live[gid] and sum(live) > 1:
+                live[gid] = False
+                frozen[gid] = False
+                free.append(gid)
+                ops.append(("retire", gid))
+        else:
+            if membership and free:
+                ngid = min(free)        # the dataplane's allocation order
+                free.remove(ngid)
+                live[ngid] = True
+                alive[ngid] = [True] * A
+                ops.append(("create", ngid))
     for gid in range(g):
+        if not live[gid]:
+            continue
         for aid in range(A):
             if not alive[gid][aid]:
                 ops.append(("revive", gid, aid))
@@ -87,6 +118,7 @@ def run_chaos(
     use_kernels: bool = False,
     sharded: bool = False,
     steps: int = 30,
+    membership: bool = True,
 ) -> None:
     mesh = make_group_mesh() if sharded else None
     mg = PaxosContext(_cfg(g), use_kernels=use_kernels, mesh=mesh)
@@ -95,18 +127,20 @@ def run_chaos(
         for _ in range(g)
     ]
     sent = [[] for _ in range(g)]
-    for op in _schedule(seed, g, steps):
+    retired = [0] * g          # retire count per slot: unique payload tags
+    for op in _schedule(seed, g, steps, membership=membership):
         kind = op[0]
         if kind == "submit":
             gid = op[1]
-            p = f"s{len(sent[gid])}g{gid}".encode()
+            p = f"s{len(sent[gid])}g{gid}r{retired[gid]}".encode()
             sent[gid].append(p)
             mg.submit(p, group=gid)
             singles[gid].submit(p)
         elif kind == "pump":
             mg.pump()
             for s in singles:
-                s.pump()
+                if s is not None:
+                    s.pump()
         elif kind == "kill":
             _, gid, aid = op
             mg.hw.kill_acceptor(gid, aid)
@@ -123,12 +157,35 @@ def run_chaos(
             gid = op[1]
             mg.restore_hardware_coordinator(group=gid)
             singles[gid].restore_hardware_coordinator()
-    # drain: everything is healed, so a few retransmit cycles deliver all
+        elif kind == "retire":
+            gid = op[1]
+            # the archived log must equal the independent twin's at this
+            # instant (same ops, same pump cadence); submissions still
+            # pending die with the tenant on both sides
+            log = mg.retire_group(gid)
+            assert log == singles[gid].delivered_log, (seed, gid)
+            got = [p for _inst, p in log]
+            assert len(got) == len(set(got)), (seed, gid)
+            assert set(got) <= set(sent[gid]), (seed, gid)
+            singles[gid] = None
+            sent[gid] = []
+            retired[gid] += 1
+        elif kind == "create":
+            gid = op[1]
+            assert mg.create_group() == gid, (seed, gid)  # lowest-free-first
+            singles[gid] = PaxosContext(
+                CFG1, use_kernels=use_kernels, fused=True
+            )
+    # drain: everything live is healed, so retransmit cycles deliver all
     for _ in range(30):
         mg.pump()
         for s in singles:
-            s.pump()
+            if s is not None:
+                s.pump()
     for gid in range(g):
+        if singles[gid] is None:       # slot vacant at end of schedule
+            assert not mg.hw.live_host[gid]
+            continue
         assert mg.group_log[gid] == singles[gid].delivered_log, (seed, gid)
         got = [p for _inst, p in mg.group_log[gid]]
         assert len(got) == len(set(got)), (seed, gid)          # exactly once
@@ -147,6 +204,63 @@ def test_chaos_deterministic(seed, use_kernels):
 def test_chaos_sharded(seed, use_kernels):
     """The groups-sharded dataplane under the same chaos contract."""
     run_chaos(seed, g=2, use_kernels=use_kernels, sharded=True, steps=24)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("sharded", [False, True])
+def test_membership_lifecycle_matches_oracles(use_kernels, sharded):
+    """Scripted create/load/retire/recreate lifecycle on every backend
+    (jnp + pallas, sharded + unsharded): the recycled slots must match fresh
+    independent single-group twins bit-for-bit — logs AND device registers —
+    including a transient pass through a single live group."""
+    import jax
+
+    g = 3
+    mesh = make_group_mesh() if sharded else None
+    mg = PaxosContext(_cfg(g), use_kernels=use_kernels, mesh=mesh)
+    twins = [
+        PaxosContext(CFG1, use_kernels=use_kernels, fused=True)
+        for _ in range(g)
+    ]
+
+    def wave(tag, gids):
+        for gid in gids:
+            p = f"{tag}g{gid}".encode()
+            mg.submit(p, group=gid)
+            twins[gid].submit(p)
+        mg.run_until_quiescent()
+        for gid in gids:
+            twins[gid].run_until_quiescent()
+
+    wave("w0", [0, 1, 2])
+    log = mg.retire_group(1)
+    assert log == twins[1].delivered_log
+    twins[1] = None
+    wave("w1", [0, 2])                       # serve around the vacant slot
+    assert mg.create_group() == 1            # lowest free slot
+    twins[1] = PaxosContext(CFG1, use_kernels=use_kernels, fused=True)
+    wave("w2", [0, 1, 2])                    # recycled slot serves fresh
+    for gid in (0, 2):                       # transient G = 1
+        mg.retire_group(gid)
+        twins[gid] = None
+    assert mg.live_groups() == [1]
+    wave("w3", [1])
+    assert mg.create_group() == 0            # deterministic free-list order
+    assert mg.create_group() == 2
+    for gid in (0, 2):
+        twins[gid] = PaxosContext(CFG1, use_kernels=use_kernels, fused=True)
+    wave("w4", [0, 1, 2])
+
+    for gid in range(g):
+        assert mg.group_log[gid] == twins[gid].delivered_log, gid
+        mine = jax.tree_util.tree_map(
+            lambda x: np.asarray(x)[gid], (mg.hw.stack, mg.hw.lstate)
+        )
+        ref = (twins[gid].hw.stack, twins[gid].hw.lstate)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(mine), jax.tree_util.tree_leaves(ref)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 @settings(max_examples=8, deadline=None)

@@ -117,6 +117,45 @@ def test_safe_takeover_reproposes_voted_values():
     assert res.crnd == allocate_round(1, 1)
 
 
+def test_takeover_odd_window_never_touches_beyond_hi():
+    """Regression: when (hi - lo) is not a multiple of cfg.batch, the final
+    Phase-1/Phase-2 batch used to overhang the window — bumping promised
+    rounds and re-proposing values into instances >= hi, and advancing
+    next_inst past the window.  Out-of-window positions must stay
+    bit-untouched and ``scanned`` must report the true count."""
+    cfg = PaxosConfig(n_acceptors=3, n_instances=64, batch=8)
+    ctx = PaxosContext(cfg, fused=True)
+    for k in range(16):                    # decide instances 0..15 at round 0
+        ctx.submit(f"v{k}".encode())
+    ctx.run_until_quiescent()
+    before_rnd = np.asarray(ctx.hw.stack.rnd).copy()
+    before_vrnd = np.asarray(ctx.hw.stack.vrnd).copy()
+    before_val = np.asarray(ctx.hw.stack.value).copy()
+
+    # window [0, 12): 12 is NOT a multiple of batch=8 — the second batch
+    # covers [8, 16) and must mask positions 12..15
+    res = takeover(
+        ctx.hw, coordinator_id=1, epoch=1,
+        est_next_inst=4, window=8, quorum=cfg.quorum,
+    )
+    assert res.scanned == 12               # the true scanned count
+    # voted instances inside the window were re-proposed, none beyond it
+    assert {i for i, _ in res.reproposed} == set(range(12))
+    assert res.next_inst == 12             # not dragged past hi by overscan
+    # out-of-window slots 12..15: promised round, vote round and value are
+    # bit-identical to the pre-takeover register file
+    rnd = np.asarray(ctx.hw.stack.rnd)
+    vrnd = np.asarray(ctx.hw.stack.vrnd)
+    val = np.asarray(ctx.hw.stack.value)
+    np.testing.assert_array_equal(rnd[:, 12:16], before_rnd[:, 12:16])
+    np.testing.assert_array_equal(vrnd[:, 12:16], before_vrnd[:, 12:16])
+    np.testing.assert_array_equal(val[:, 12:16], before_val[:, 12:16])
+    # in-window voted slots really moved to the takeover round
+    assert (rnd[:, :12] == res.crnd).all()
+    # and every slot outside the final batch's reach is untouched too
+    np.testing.assert_array_equal(rnd[:, 16:], before_rnd[:, 16:])
+
+
 def test_round_allocation_disjoint():
     r1 = {allocate_round(e, 0) for e in range(50)}
     r2 = {allocate_round(e, 1) for e in range(50)}

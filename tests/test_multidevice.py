@@ -7,6 +7,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow   # subprocess suite: skipped in the fast lane
+
 
 def _run(code: str, devices: int = 8) -> str:
     env_code = (

@@ -155,6 +155,129 @@ def test_group_recover_targets_one_group():
     assert all(len(log) == 2 for log in mg.group_log)
 
 
+# ---------------------------------------------------------------------------
+# Dynamic membership: the free-list over the group axis (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+def test_membership_freelist_deterministic_and_bounded():
+    """retire returns slots to a sorted free-list; create claims the lowest;
+    capacity is a hard bound; retired groups reject every group op."""
+    cfg = PaxosConfig(n_acceptors=3, n_instances=64, batch=8, n_groups=4)
+    hw = MultiGroupDataplane(cfg)
+    with pytest.raises(RuntimeError):
+        hw.create_group()                      # at capacity
+    hw.retire_group(3)
+    hw.retire_group(1)
+    assert hw.live_groups() == [0, 2]
+    with pytest.raises(ValueError):
+        hw.retire_group(1)                     # already retired
+    assert hw.create_group() == 1              # lowest free slot first
+    assert hw.create_group() == 3
+    assert hw.live_groups() == [0, 1, 2, 3]
+    # context-level: submit/recover/failover on a retired group raise
+    ctx = PaxosContext(cfg)
+    ctx.retire_group(2)
+    for call in (
+        lambda: ctx.submit(b"x", group=2),
+        lambda: ctx.recover(0, group=2),
+        lambda: ctx.fail_coordinator(group=2),
+        lambda: ctx.retire_group(2),
+    ):
+        with pytest.raises(ValueError):
+            call()
+
+
+def test_retire_flushes_in_flight_traffic_before_slot_reuse():
+    """Regression: a submit queued on the net but not yet pumped, followed
+    by retire + create before the next pump, must NOT leak the old tenant's
+    payload into the recycled slot's log or poison its (group, seq) dedup
+    space — the retire flushes the tenant's in-flight coordinator traffic."""
+    cfg = PaxosConfig(n_acceptors=3, n_instances=64, batch=8, n_groups=2)
+    ctx = PaxosContext(cfg)
+    ctx.submit(b"stale", group=1)          # queued in flight, never pumped
+    ctx.retire_group(1)
+    assert ctx.create_group() == 1
+    ctx.pump()
+    assert ctx.group_log[1] == []          # the old tenant's value is gone
+    # the new tenant's seq space is clean: its seq-0 value delivers
+    ctx.submit(b"fresh", group=1)
+    ctx.run_until_quiescent()
+    assert [p for _i, p in ctx.group_log[1]] == [b"fresh"]
+    assert not ctx._pending
+    # and an in-flight recover() to the dead group is flushed too
+    ctx.submit(b"keep", group=0)
+    ctx.recover(5, group=1)
+    ctx.retire_group(1)
+    ctx.run_until_quiescent()
+    assert [p for _i, p in ctx.group_log[0]] == [b"keep"]
+
+
+def test_retire_drains_learner_ring_and_touches_no_other_group():
+    """The drained log carries the decided values still resident in the
+    retiring group's dedup ring, in instance order; every other group's
+    slab state is bit-untouched by retire AND by the subsequent create."""
+    ctx = PaxosContext(CFG_MG)
+    _run_schedule(ctx, range(G), waves=2, use_groups=True)
+    others_before = [_group_state(ctx.hw, gid) for gid in range(G) if gid != 1]
+    expect = [
+        (inst, np.frombuffer(raw, "<i4")[0])
+        for inst, raw in ctx.hw.retire_group(1)
+        if np.frombuffer(raw, "<i4")[0] != -0x7FFFFFFF   # skip NOP fillers
+    ]
+    # decided client values of group 1 in instance order (2 waves, batch>=2)
+    assert [inst for inst, _ in expect] == sorted(inst for inst, _ in expect)
+    assert len(expect) == 2
+    assert ctx.hw.create_group() == 1
+    others_after = [_group_state(ctx.hw, gid) for gid in range(G) if gid != 1]
+    for before, after in zip(others_before, others_after):
+        for a, b in zip(before, after):
+            np.testing.assert_array_equal(a, b)
+    # the recycled slot is a fresh deployment
+    fresh = MultiGroupDataplane(PaxosConfig(
+        n_acceptors=3, n_instances=512, batch=16, n_groups=1))
+    for a, b in zip(_group_state(ctx.hw, 1), _group_state(fresh, 0)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_vacant_slot_rides_folded_dispatch_inert(use_kernels):
+    """A vacant (retired) slot with a divergent watermark must not break the
+    lockstep fold: the plan still folds the full width, the kernel's
+    enabled-mask path substitutes the block's ring offset, and the vacant
+    slot's slab stays bit-identical while live groups decide normally."""
+    cfg = PaxosConfig(n_acceptors=3, n_instances=64, batch=8, n_groups=4)
+    ctx = PaxosContext(cfg, use_kernels=use_kernels)
+    # advance all groups, then retire group 0 and recreate it: its fresh
+    # watermark (0) diverges from the other groups' (8)
+    for gid in range(4):
+        ctx.submit(f"a{gid}".encode(), group=gid)
+    ctx.run_until_quiescent()
+    ctx.retire_group(0)
+    assert ctx.create_group() == 0
+    assert ctx.hw.next_inst_host == [0, 8, 8, 8]
+    # a burst over groups 1..3 (group 0 idle): enabled lockstep folds wide
+    enabled, use_k, gb = ctx.hw._plan_round(8, [False, True, True, True])
+    assert gb == 4 and use_k == use_kernels
+    vacant_before = [np.asarray(x) for x in jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda s: s[0], (ctx.hw.stack, ctx.hw.lstate))
+    )]
+    for gid in range(1, 4):
+        ctx.submit(f"b{gid}".encode(), group=gid)
+    ctx.run_until_quiescent()
+    for gid in range(1, 4):
+        assert [p for _i, p in ctx.group_log[gid]] == [
+            f"a{gid}".encode(), f"b{gid}".encode()
+        ]
+    vacant_after = [np.asarray(x) for x in jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda s: s[0], (ctx.hw.stack, ctx.hw.lstate))
+    )]
+    for a, b in zip(vacant_before, vacant_after):
+        np.testing.assert_array_equal(a, b)
+    # the recycled group then serves from its own (divergent) watermark
+    ctx.submit(b"late", group=0)
+    ctx.run_until_quiescent()
+    assert [p for _i, p in ctx.group_log[0]] == [b"late"]
+
+
 def test_session_routing_deterministic_and_balanced():
     n_groups = 8
     ids = [f"session-{i}" for i in range(400)]

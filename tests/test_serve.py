@@ -94,6 +94,40 @@ def test_serve_loop_batched_requests():
     assert out == out2
 
 
+def test_serve_loop_mixed_lengths_match_per_request_decode():
+    """Regression: mixed-length prompts in one chunk used to be left-padded
+    and teacher-forced through the pad zeros with a shared position counter,
+    so shorter requests decoded conditioned on leading pads.  A batched
+    chunk must generate exactly what each request generates decoded alone."""
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(), remat=False)
+    key = jax.random.PRNGKey(1)
+    params = registry.init_params(cfg, key)
+    rng = np.random.default_rng(7)
+    lengths = [3, 7, 5, 2]                   # one chunk, four lengths
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(1, cfg.vocab, ln).astype(np.int32),
+            max_new=4,
+        )
+        for i, ln in enumerate(lengths)
+    ]
+    batched = ServeLoop(cfg, params, batch_size=4, max_len=16).run(reqs)
+    # per-request oracle at the same batch shape (idle rows cannot perturb a
+    # row: caches and attention are per-row), so token ids must match exactly
+    solo_loop = ServeLoop(cfg, params, batch_size=4, max_len=16)
+    for r in reqs:
+        solo = solo_loop.run([r])
+        assert batched[r.rid] == solo[r.rid], r.rid
+    # an empty prompt must not crash the chunk: it seeds an implicit BOS 0
+    # and still generates max_new tokens alongside real requests
+    mixed = [Request(rid=9, prompt=np.array([], np.int32), max_new=3)] + reqs
+    out = ServeLoop(cfg, params, batch_size=4, max_len=16).run(mixed)
+    assert len(out[9]) == 3
+    for r in reqs:
+        assert len(out[r.rid]) == r.max_new
+
+
 # ---------------------------------------------------------------------------
 # Consensus tier: session -> group routing vs group -> shard placement
 # ---------------------------------------------------------------------------
@@ -198,6 +232,83 @@ def test_consensus_service_routing_stable_under_sharding():
             if p.startswith(f"{s}:".encode())
         ]
         assert mine == [f"{s}:op{k}".encode() for k in range(2)]
+
+
+# ---------------------------------------------------------------------------
+# Routing epochs: dynamic membership through the serving tier
+# ---------------------------------------------------------------------------
+def test_delivered_uniform_group_log_g1():
+    """The G == 1 special case is gone: ``delivered`` reads the group log on
+    every context shape — ungrouped single-group, grouped single-group
+    (mesh), and a multi-group service passing through G == 1 transiently."""
+    cfg1 = PaxosConfig(n_acceptors=3, n_instances=128, batch=16)
+    for ctx in (
+        PaxosContext(cfg1, fused=True),                      # ungrouped
+        PaxosContext(cfg1, mesh=make_group_mesh()),          # grouped G=1
+    ):
+        svc = ConsensusService(ctx)
+        for k in range(3):
+            svc.submit("sess", f"op{k}".encode())
+        svc.run_until_quiescent()
+        log = svc.delivered("sess")
+        assert [p for _i, p in log] == [f"op{k}".encode() for k in range(3)]
+        # the uniform path and the historical delivered_log read agree
+        assert log == list(ctx.delivered_log)
+
+
+def test_routing_epoch_reroutes_and_stitches():
+    """Retiring a group re-routes its sessions deterministically over the
+    live set at the epoch bump, and ``delivered`` stitches the archived
+    pre-retirement log in front of the new group's log.  Creating a group
+    bumps the epoch again and restores the capacity routing."""
+    cfg = PaxosConfig(n_acceptors=3, n_instances=128, batch=16, n_groups=4)
+    svc = ConsensusService(PaxosContext(cfg))
+    sids = [f"sess-{i}" for i in range(32)]
+    base_route = {s: svc.group_of(s) for s in sids}
+    victim = base_route[sids[0]]
+    victims = [s for s in sids if base_route[s] == victim]
+    for s in sids:
+        svc.submit(s, f"{s}:op0".encode())
+    svc.run_until_quiescent()
+    epoch0 = svc.routing_epoch
+
+    svc.retire_group(victim)
+    assert svc.routing_epoch == epoch0 + 1
+    live = [g for g in range(4) if g != victim]
+    for s in sids:
+        gid = svc.group_of(s)
+        assert gid in live
+        if base_route[s] != victim:
+            assert gid == base_route[s]      # survivors keep their pin
+    # re-route is deterministic: same live set -> same resolution
+    assert [svc.group_of(s) for s in sids] == [svc.group_of(s) for s in sids]
+
+    for s in sids:
+        svc.submit(s, f"{s}:op1".encode())
+    svc.run_until_quiescent()
+    for s in victims:
+        log = [p for _i, p in svc.delivered(s)]
+        # pre-retirement log of the dead group stitched before the live log
+        assert f"{s}:op0".encode() in log and f"{s}:op1".encode() in log
+        assert log.index(f"{s}:op0".encode()) < log.index(f"{s}:op1".encode())
+
+    gid = svc.create_group()
+    assert gid == victim                       # lowest free slot
+    assert svc.routing_epoch == epoch0 + 2
+    # full capacity again: routing returns to the placement-independent hash
+    for s in sids:
+        assert svc.group_of(s) == base_route[s]
+    # a victim session now routes back to the recycled slot; its view still
+    # stitches generation 0's archive, the interim group, then the fresh log
+    for s in victims:
+        svc.submit(s, f"{s}:op2".encode())
+    svc.run_until_quiescent()
+    for s in victims:
+        log = [p for _i, p in svc.delivered(s)]
+        ops = [
+            log.index(f"{s}:op{k}".encode()) for k in range(3)
+        ]
+        assert ops == sorted(ops), (s, log)
 
 
 def test_ring_cache_sliding_window_decode():

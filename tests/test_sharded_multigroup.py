@@ -233,6 +233,7 @@ def _run(code: str, devices: int = 8) -> str:
     return proc.stdout
 
 
+@pytest.mark.slow
 def test_sharded_multidevice():
     """8-shard mesh: G ∈ {8, 16} sharded == single-device unsharded, with
     the frozen group and the dead acceptor on distinct shards."""
