@@ -374,6 +374,183 @@ SHARDED_PATHS = (
 )
 
 
+# -- skewed load: two-tier cohort dispatch vs the shared-burst strawman ------
+# One hot group saturating the full burst every wave, G-1 cold groups
+# *trickling* — a small chunk every SKEW_COLD_EVERY-th wave, the service
+# regime the ROADMAP item names.  The pre-refactor dispatch cost G x HOT_B
+# slots of device work per wave regardless: cold chunks were NOP-padded up
+# to the hottest group's burst, and waves with no cold traffic still swept
+# the full (G, HOT_B) grid with the idle groups riding inert.  The cohort
+# planner (DESIGN.md §8) splits the schedule into a hot tier — a
+# group-axis-COMPACTED kernel round visiting one group's blocks, not G's —
+# plus a cold tier only on waves that have cold traffic, folded at the
+# right-sized burst.  Both paths decide identical useful instances; the
+# gated metric is useful decided-instances/s over the schedule.
+#
+# CPU-interpret caveat: the interpreter materializes the full aliased state
+# per dispatch (DESIGN.md §4), a fixed artifact that is *paid per dispatch
+# and independent of how little the dispatch decides* — it therefore favors
+# the shared-burst path (fewer, fatter dispatches).  The ratio below is a
+# conservative floor for the real-hardware win, where the hot tier's grid
+# touches 1/G of the slab traffic.
+SKEW_G = 8
+SKEW_HOT = 0           # the hot group's slot
+SKEW_HOT_B = 8192      # hot burst (== the full block-aligned batch)
+SKEW_COLD_B = 64       # right-sized cold burst
+SKEW_N = 1 << 13       # ring (>= the hot burst)
+SKEW_BLOCK = 8192      # messages per grid step
+SKEW_WAVES = 6         # waves per timed schedule
+SKEW_COLD_EVERY = 3    # cold groups trickle a chunk every 3rd wave
+
+
+def _mk_skew_state():
+    return batched.init_multigroup_state(SKEW_G, A, SKEW_N, V)
+
+
+def _skew_values():
+    rng = np.random.default_rng(0)
+    hot = rng.integers(-99, 99, (1, SKEW_HOT_B, V)).astype(np.int32)
+    cold = rng.integers(-99, 99, (SKEW_G, SKEW_COLD_B, V)).astype(np.int32)
+    padded = np.zeros((SKEW_G, SKEW_HOT_B, V), np.int32)
+    padded[:, :SKEW_COLD_B] = cold               # cold chunks, NOP-padded
+    padded[SKEW_HOT] = hot[0]
+    return jnp.asarray(hot), jnp.asarray(cold), jnp.asarray(padded)
+
+
+def _skew_cold_waves():
+    return [w for w in range(SKEW_WAVES) if w % SKEW_COLD_EVERY == 0]
+
+
+SKEW_USEFUL = (
+    SKEW_WAVES * SKEW_HOT_B
+    + len(_skew_cold_waves()) * (SKEW_G - 1) * SKEW_COLD_B
+)
+
+
+def bench_skew_shared_pallas() -> float:
+    """Pre-refactor shared-burst dispatch, modelled faithfully: every wave
+    is one full-width (G, HOT_B) megakernel round — cold chunks padded to
+    the hot burst, idle groups riding the grid inert — and the fold is the
+    historical all-or-nothing plan: ``group_block = G`` while the enabled
+    watermarks are in lockstep, ``group_block = 1`` once skew makes them
+    diverge (exactly the two wastes the ROADMAP items name)."""
+    _c, stack, lstate = _mk_skew_state()
+    hot, _cold, padded = _skew_values()
+    alive = jnp.ones((SKEW_G, A), jnp.int32)
+    cr = jnp.zeros((SKEW_G,), jnp.int32)
+    cold_waves = set(_skew_cold_waves())
+    hot_only = np.zeros((SKEW_G,), np.int32)
+    hot_only[SKEW_HOT] = 1
+    hot_padded = jnp.zeros_like(padded).at[SKEW_HOT].set(hot[0])
+    interpret = jax.default_backend() == "cpu"
+    state = {"ni": np.zeros((SKEW_G,), np.int32)}
+
+    def schedule():
+        nonlocal stack, lstate
+        ni = state["ni"]
+        for w in range(SKEW_WAVES):
+            with_cold = w in cold_waves
+            en = np.ones((SKEW_G,), np.int32) if with_cold else hot_only
+            # the historical binary fold decision, on enabled marks only
+            marks = {ni[i] for i in range(SKEW_G) if en[i]}
+            gb = SKEW_G if len(marks) <= 1 else 1
+            outs = wirepath.multigroup_wirepath_round(
+                jnp.asarray(ni), cr, jnp.int32(QUORUM), alive,
+                stack.rnd, stack.vrnd, stack.value,
+                lstate.delivered, lstate.inst, lstate.value,
+                padded if with_cold else hot_padded, jnp.asarray(en),
+                block_b=SKEW_BLOCK, group_block=gb, interpret=interpret,
+            )
+            stack = AcceptorState(*outs[:3])
+            lstate = batched.LearnerState(*outs[3:6])
+            # every dispatched group burns the shared burst
+            ni = ni + en * SKEW_HOT_B
+            block(outs[6])
+        state["ni"] = ni
+
+    return time_fn(schedule, iters=5, stat="min")
+
+
+def bench_skew_twotier_pallas() -> float:
+    """Cohort planner dispatch: per wave, the hot tier runs as a group-axis
+    compacted kernel round (one group's blocks); the cold tier fires only
+    on waves with cold traffic, folded at the right-sized burst — the
+    ``pipeline_cohort`` production configuration."""
+    _c, stack, lstate = _mk_skew_state()
+    hot, cold, _padded = _skew_values()
+    alive = jnp.ones((SKEW_G, A), jnp.int32)
+    cr = jnp.zeros((SKEW_G,), jnp.int32)
+    cold_waves = set(_skew_cold_waves())
+    en_hot = np.zeros((SKEW_G,), np.int32)
+    en_hot[SKEW_HOT] = 1
+    en_cold = 1 - en_hot
+    gsel_hot = jnp.asarray([SKEW_HOT], jnp.int32)
+    gsel_cold = jnp.asarray([0], jnp.int32)
+    interpret = jax.default_backend() == "cpu"
+    state = {"ni": np.zeros((SKEW_G,), np.int32)}
+
+    def schedule():
+        nonlocal stack, lstate
+        ni = state["ni"]
+        for w in range(SKEW_WAVES):
+            outs = wirepath.cohort_wirepath_round(
+                gsel_hot, jnp.asarray(ni), cr, jnp.int32(QUORUM), alive,
+                stack.rnd, stack.vrnd, stack.value,
+                lstate.delivered, lstate.inst, lstate.value,
+                hot, jnp.asarray(en_hot),
+                block_b=SKEW_BLOCK, group_block=1, interpret=interpret,
+            )
+            stack = AcceptorState(*outs[:3])
+            lstate = batched.LearnerState(*outs[3:6])
+            ni = ni + en_hot * SKEW_HOT_B
+            block(outs[6])
+            if w in cold_waves:
+                outs = wirepath.cohort_wirepath_round(
+                    gsel_cold, jnp.asarray(ni), cr, jnp.int32(QUORUM),
+                    alive, stack.rnd, stack.vrnd, stack.value,
+                    lstate.delivered, lstate.inst, lstate.value,
+                    cold, jnp.asarray(en_cold),
+                    block_b=SKEW_BLOCK, group_block=SKEW_G,
+                    interpret=interpret,
+                )
+                stack = AcceptorState(*outs[:3])
+                lstate = batched.LearnerState(*outs[3:6])
+                ni = ni + en_cold * SKEW_COLD_B
+                block(outs[6])
+        state["ni"] = ni
+
+    return time_fn(schedule, iters=5, stat="min")
+
+
+def run_skewed() -> None:
+    shared = bench_skew_shared_pallas()
+    twotier = bench_skew_twotier_pallas()
+    for path, us in (("skew_shared_pallas", shared),
+                     ("skew_twotier_pallas", twotier)):
+        msgs = SKEW_USEFUL / us * 1e6
+        emit(
+            f"wirepath/{path}/G={SKEW_G}",
+            us,
+            f"{msgs:.0f} useful msg/s",
+            path=path,
+            groups=SKEW_G,
+            hot_burst=SKEW_HOT_B,
+            cold_burst=SKEW_COLD_B,
+            waves=SKEW_WAVES,
+            cold_every=SKEW_COLD_EVERY,
+            msgs_per_s=msgs,
+            us_per_round=us,
+        )
+    ratio = shared / twotier
+    emit(
+        f"wirepath/skew_speedup_twotier/G={SKEW_G}",
+        0.0,
+        f"{ratio:.1f}x useful msgs/s vs shared burst",
+        groups=SKEW_G,
+        skew_speedup=ratio,
+    )
+
+
 def run_sharded(groups=MG_GROUPS) -> None:
     agg = {}
     for path, fn in SHARDED_PATHS:
@@ -472,6 +649,7 @@ def run(bursts=BURSTS, out: Optional[str] = None) -> None:
                  f"{speed:.1f}x", burst=b, speedup=speed)
     run_multigroup()
     run_sharded()
+    run_skewed()
     if full_sweep:
         write_json(
             JSON_PATH,

@@ -1,0 +1,94 @@
+"""Schema / sanity check of a committed wire-path bench artifact.
+
+``BENCH_wirepath.json`` is both the perf-trajectory record and the baseline
+the CI regression gate diffs against — a malformed commit (truncated sweep,
+NaN ratio, missing headline row) would otherwise only surface after CI has
+spent a full bench run, or worse, silently disable a gate.  This check is
+pure JSON validation: it runs in milliseconds, before any bench, and it is
+also exercised as a fast-lane unit test (``tests/test_bench_schema.py``)
+so a bad artifact fails the cheapest job first.
+
+    PYTHONPATH=src python -m benchmarks.check_bench_schema BENCH_wirepath.json
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import List
+
+# Headline rows the regression gate keys on: committing an artifact without
+# them would silently skip (or permanently fail) a gate.
+REQUIRED_HEADLINES = (
+    "wirepath/speedup_pallas_vs_per_acceptor/",
+    "wirepath/multigroup_scaling_pallas/",
+    "wirepath/sharded_scaling_pallas/",
+    "wirepath/skew_speedup_twotier/",
+)
+RATIO_FIELDS = ("speedup", "scaling", "skew_speedup")
+
+
+def _finite_positive(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def validate(doc: dict) -> List[str]:
+    """Returns a list of human-readable schema violations (empty = valid)."""
+    errors: List[str] = []
+    meta = doc.get("meta")
+    if not isinstance(meta, dict) or "backend" not in meta:
+        errors.append("meta missing or has no 'backend' key")
+    elif meta.get("partial"):
+        errors.append(
+            "artifact is a partial sweep (meta.partial) — the committed "
+            "baseline must come from the full sweep"
+        )
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return errors + ["rows missing or empty"]
+    for i, row in enumerate(rows):
+        name = row.get("name")
+        if not isinstance(name, str) or not name.startswith("wirepath/"):
+            errors.append(f"row {i}: bad name {name!r}")
+            continue
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)) or not math.isfinite(us) or us < 0:
+            errors.append(f"{name}: bad us_per_call {us!r}")
+        if "msgs_per_s" in row and not _finite_positive(row["msgs_per_s"]):
+            if not row.get("skipped"):
+                errors.append(f"{name}: bad msgs_per_s {row['msgs_per_s']!r}")
+        for field in RATIO_FIELDS:
+            if field in row and not _finite_positive(row[field]):
+                errors.append(f"{name}: bad {field} {row[field]!r}")
+    names = [r.get("name", "") for r in rows]
+    for prefix in REQUIRED_HEADLINES:
+        if not any(
+            n.startswith(prefix)
+            and any(f in r for f in RATIO_FIELDS)
+            for n, r in zip(names, rows)
+        ):
+            errors.append(f"missing headline row {prefix}* (gate would skip)")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        doc = json.load(f)
+    errors = validate(doc)
+    if errors:
+        for e in errors:
+            print(f"SCHEMA: {e}", file=sys.stderr)
+        return 1
+    print(
+        f"bench schema OK: {len(doc['rows'])} rows, "
+        f"backend={doc['meta'].get('backend')}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

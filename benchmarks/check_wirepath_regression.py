@@ -13,7 +13,12 @@ committed perf-trajectory artifact and fails on:
   * groups-sharded aggregate scaling (``sharded_scaling_pallas``, the
     slab-partitioned shard_map dispatch of DESIGN.md §6) regressing by more
     than ``--sharded-tolerance`` (default 50%) relative to the committed
-    ratio — the sharding layer must not eat the multi-group win.
+    ratio — the sharding layer must not eat the multi-group win;
+  * the skewed-load two-tier speedup (``skew_speedup_twotier``, the cohort
+    dispatch planner of DESIGN.md §8 vs the pre-refactor shared-burst
+    dispatch) regressing by more than ``--skew-tolerance`` (default 50%)
+    relative to the committed ratio — right-sized cold tiers and the
+    compacted hot tier must keep beating one-size-fits-all bursts.
 
     PYTHONPATH=src python -m benchmarks.check_wirepath_regression \
         BENCH_wirepath.json /tmp/fresh.json
@@ -45,9 +50,13 @@ def _speedups(doc: dict) -> Dict[int, float]:
 
 
 def _mg_scaling(doc: dict, path: str = "multigroup_scaling_pallas") -> Optional[float]:
+    return _row_metric(doc, path, "scaling")
+
+
+def _row_metric(doc: dict, path: str, field: str) -> Optional[float]:
     for row in doc["rows"]:
-        if row["name"].startswith(f"wirepath/{path}/") and "scaling" in row:
-            return row["scaling"]
+        if row["name"].startswith(f"wirepath/{path}/") and field in row:
+            return row[field]
     return None
 
 
@@ -64,6 +73,10 @@ def main(argv=None) -> int:
                          "scaling ratio vs the committed artifact "
                          "(default 0.50; scaling ratios on shared runners "
                          "are noisier than same-machine speedup ratios)")
+    ap.add_argument("--skew-tolerance", type=float, default=0.50,
+                    help="allowed fractional regression of the skewed-load "
+                         "two-tier speedup (skew_speedup_twotier) vs the "
+                         "committed artifact (default 0.50)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -129,6 +142,26 @@ def main(argv=None) -> int:
             failures.append(
                 f"sharded scaling regressed >{args.sharded_tolerance:.0%}: "
                 f"{fresh_sh:.2f}x < floor {floor:.2f}x"
+            )
+
+    base_sk = _row_metric(base, "skew_speedup_twotier", "skew_speedup")
+    fresh_sk = _row_metric(fresh, "skew_speedup_twotier", "skew_speedup")
+    if base_sk is None:
+        # pre-§8 artifact: nothing committed to gate against
+        print("skew speedup: no committed row, gate skipped")
+    elif fresh_sk is None:
+        failures.append("fresh run has no skew_speedup_twotier row")
+    else:
+        floor = base_sk * (1.0 - args.skew_tolerance)
+        status = "OK" if fresh_sk >= floor else "REGRESSION"
+        print(
+            f"skewed-load two-tier speedup (pallas): fresh {fresh_sk:.1f}x "
+            f"vs committed {base_sk:.1f}x (floor {floor:.1f}x) -> {status}"
+        )
+        if fresh_sk < floor:
+            failures.append(
+                f"skew speedup regressed >{args.skew_tolerance:.0%}: "
+                f"{fresh_sk:.2f}x < floor {floor:.2f}x"
             )
 
     if failures:

@@ -5,6 +5,8 @@ Layers:
   * ``paxos``     — scalar reference role semantics (the oracle + baseline)
   * ``batched``   — jnp batched multi-instance dataplane ("hardware" logic)
   * ``fabric``    — shard_map in-fabric consensus over a mesh axis
+  * ``plan``      — cohort dispatch planner: burst tiers, fold widths,
+                    lockstep realignment (DESIGN.md §8)
   * ``api``       — drop-in submit / deliver / recover (paper Fig. 4)
   * ``log``       — replicated log, gaps, quorum trim
   * ``failover``  — coordinator takeover (safe Phase-1 variant of §3.1)
@@ -24,6 +26,11 @@ from .api import (  # noqa: F401
     MultiGroupDataplane,
     PaxosContext,
     ShardedMultiGroupDataplane,
+)
+from .plan import (  # noqa: F401
+    Cohort,
+    DispatchPlanner,
+    RoundPlan,
 )
 from .baseline import SoftwarePaxos  # noqa: F401
 from .log import ReplicatedLog  # noqa: F401

@@ -26,8 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import batched
+from . import plan as plan_mod
 from .network import SimNet
 from .paxos import Coordinator as SoftCoordinator
+from .plan import NO_ROUND, NOP_SENTINEL
 from .types import (
     MSG_NOP,
     MSG_P1A,
@@ -39,28 +41,17 @@ from .types import (
     PaxosConfig,
 )
 
-NO_ROUND = -1
-NOP_SENTINEL = -0x7FFFFFFF  # first value word marking an internal filler slot
-
 
 def _wire_block(b: int) -> int:
     """Kernel batch-block size for a burst of ``b`` messages."""
-    from repro.kernels.wirepath import DEFAULT_BLOCK_B
-
-    return min(DEFAULT_BLOCK_B, b)
+    return plan_mod.wire_block(b)
 
 
 def _wire_window_aligned(cfg: PaxosConfig, base: int, b: int) -> bool:
     """True iff a contiguous window [base, base+b) satisfies the Pallas
-    ring-blocking invariants (BB | base, BB | B, BB | N, B <= N) — the ONE
-    definition both dataplanes consult (DESIGN.md §2)."""
-    bb = _wire_block(b)
-    return (
-        b % bb == 0
-        and cfg.n_instances % bb == 0
-        and b <= cfg.n_instances
-        and base % bb == 0
-    )
+    ring-blocking invariants — the ONE definition both dataplanes consult
+    (``core.plan.window_aligned``, DESIGN.md §2)."""
+    return plan_mod.window_aligned(cfg.n_instances, base, b)
 
 
 @dataclasses.dataclass
@@ -299,12 +290,18 @@ class MultiGroupDataplane:
         # kernel path's alignment/lockstep decisions cost no device sync
         self.next_inst_host: List[int] = [0] * g
         self.crnd_host: List[int] = [0] * g
+        self.last_gb: Optional[int] = None   # fold width of the last dispatch
         if use_kernels:
             from repro.kernels import ops as kops
 
             self._fused_k = jax.jit(
                 kops.multigroup_fused_round,
                 donate_argnums=(1, 2),
+                static_argnames=("group_block",),
+            )
+            self._cohort_k = jax.jit(
+                kops.cohort_fused_round,
+                donate_argnums=(0, 1),
                 static_argnames=("group_block",),
             )
         self._fused = jax.jit(
@@ -330,7 +327,10 @@ class MultiGroupDataplane:
     def _plan_round(self, b: int, enabled: Optional[List[bool]]):
         """Resolve the enabled mask against membership and frozen rounds,
         decide kernel eligibility from the host watermark mirrors, and pick
-        the lockstep fold width.  Returns ``(enabled, use_k, group_block)``.
+        the fold width (``core.plan.fold_width_full`` — the widest divisor
+        of the fold cap whose aligned blocks are internally lockstep, not
+        the historical all-or-nothing fold).  Returns
+        ``(enabled, use_k, group_block)``.
 
         Only *enabled* groups constrain the plan: a disabled group — frozen,
         vacant (retired), or idle this round — rides the dispatch inert at
@@ -347,13 +347,13 @@ class MultiGroupDataplane:
                 bool(e) and lv and c != NO_ROUND
                 for e, lv, c in zip(enabled, self.live_host, self.crnd_host)
             ]
-        marks = [w for w, e in zip(self.next_inst_host, enabled) if e]
+        en_gids = [i for i, e in enumerate(enabled) if e]
         use_k = self.use_kernels and all(
-            self._window_aligned(w, b) for w in marks
+            self._window_aligned(self.next_inst_host[g], b) for g in en_gids
         )
-        # lockstep watermarks (across enabled groups) let every grid step
-        # fold the full width
-        gb = self._fold_width() if len(set(marks)) <= 1 else 1
+        gb = plan_mod.fold_width_full(
+            en_gids, self.next_inst_host, self._fold_width()
+        )
         return enabled, use_k, gb
 
     def _empty_round(self, g: int, b: int):
@@ -419,7 +419,137 @@ class MultiGroupDataplane:
         for gid in range(g):
             if enabled[gid]:
                 self.next_inst_host[gid] += b
+        self.last_gb = gb          # the plan's fold width, engine-agnostic
         return np.asarray(fresh), np.asarray(inst), np.asarray(value)
+
+    # -- cohort dispatch: one tier of a RoundPlan (DESIGN.md §8) -------------
+    def _cohort_prologue(self, gids, values: np.ndarray):
+        """Shared pre-dispatch resolution for a cohort tier: membership
+        mask, kernel eligibility (every member's window aligned for this
+        burst), and the per-member instance windows — identical for the
+        unsharded and sharded executions, which is half the parity
+        contract."""
+        gids = list(gids)
+        be = values.shape[1]
+        assert values.shape[0] == len(gids), (values.shape, len(gids))
+        marks = self.next_inst_host
+        member = np.zeros((self.cfg.n_groups,), np.int32)
+        member[gids] = 1
+        use_k = self.use_kernels and all(
+            self._window_aligned(marks[gid], be) for gid in gids
+        )
+        inst = np.stack(
+            [
+                np.arange(marks[gid], marks[gid] + be, dtype=np.int32)
+                for gid in gids
+            ]
+        )
+        return gids, member, use_k, inst
+
+    def pipeline_cohort(
+        self, gids, values: np.ndarray, active: np.ndarray
+    ):
+        """Advance exactly the cohort ``gids`` one ``BE``-sized round.
+
+        ``values`` is *compact* ``(len(gids), BE, V)`` (row order = cohort
+        order), ``active`` ``(len(gids), BE)``.  Non-members neither move
+        nor mutate — a cold group is simply not a member of the hot tier's
+        dispatch.  On the kernel path the grid is additionally *compacted*
+        over the group axis (``core.plan.cohort_blocks`` +
+        ``kernels.wirepath.cohort_wirepath_round``): only the group blocks
+        containing members are visited, so a one-hot-group tier costs one
+        group's work, not G's.  Returns host ``(fresh, inst, value)`` in
+        cohort row order.
+        """
+        gids, member, use_k, inst = self._cohort_prologue(gids, values)
+        g = self.cfg.n_groups
+        be = values.shape[1]
+        marks = self.next_inst_host
+        # the compact mapping is the dispatch plan whether or not the
+        # kernel executes it; last_gb reports its fold width on both
+        # engines, so introspection never depends on engine choice
+        gb, blocks = plan_mod.cohort_blocks(gids, marks, self._fold_width())
+        self.last_gb = gb
+        en = jnp.asarray(member)
+        if use_k:
+            # compact kernel layout: row j*gb + k <-> group blocks[j]*gb + k
+            rowof = {
+                blk * gb + k: j * gb + k
+                for j, blk in enumerate(blocks)
+                for k in range(gb)
+            }
+            kvals = np.zeros(
+                (len(blocks) * gb, be, self.cfg.value_words), np.int32
+            )
+            kvals[:, :, 0] = NOP_SENTINEL
+            for row, gid in enumerate(gids):
+                kvals[rowof[gid]] = values[row]
+            self.stack, self.lstate, kfresh, _win, kvalue = self._cohort_k(
+                self.stack,
+                self.lstate,
+                jnp.asarray(np.asarray(blocks, np.int32)),
+                self.cstate.next_inst,
+                self.cstate.crnd,
+                self.alive_mask,
+                self.cfg.quorum,
+                jnp.asarray(kvals),
+                en,
+                group_block=gb,
+            )
+            kfresh, kvalue = np.asarray(kfresh), np.asarray(kvalue)
+            rows = [rowof[gid] for gid in gids]
+            fresh, value = kfresh[rows], kvalue[rows]
+        else:
+            # jnp oracle: full-width dispatch with non-members held inert
+            # (round presented as NO_ROUND) — bit-identical results
+            vals_f, act_f = plan_mod.scatter_rows(
+                gids, values, active, g, self.cfg.value_words
+            )
+            cs = self.cstate
+            eff = CoordinatorState(
+                next_inst=cs.next_inst,
+                crnd=jnp.where(en != 0, cs.crnd, NO_ROUND),
+            )
+            _c, self.stack, self.lstate, ffresh, _i, _w, fvalue = self._fused(
+                eff,
+                self.stack,
+                self.lstate,
+                jnp.asarray(vals_f),
+                jnp.asarray(act_f),
+                self.alive_mask,
+                self.cfg.quorum,
+            )
+            ffresh, fvalue = np.asarray(ffresh), np.asarray(fvalue)
+            fresh, value = ffresh[gids], fvalue[gids]
+        memj = jnp.asarray(member != 0)
+        self.cstate = CoordinatorState(
+            next_inst=jnp.where(
+                memj, self.cstate.next_inst + be, self.cstate.next_inst
+            ),
+            crnd=self.cstate.crnd,
+        )
+        for gid in gids:
+            self.next_inst_host[gid] += be
+        return fresh, inst, value
+
+    def burn_forward(self, gid: int, target: int) -> None:
+        """Advance a group's sequencer watermark to ``target`` without
+        proposing anything: the skipped instances are NOP holes, never
+        decided and recoverable as no-ops (paper §3.1 gap fill).  The
+        planner's realignment sweep uses this to bring divergent groups
+        back to a common block boundary so the full-width fold re-engages
+        (DESIGN.md §8)."""
+        self._check_gid(gid)
+        if target < self.next_inst_host[gid]:
+            raise ValueError(
+                f"burn_forward moves only forward: {target} < "
+                f"{self.next_inst_host[gid]} (group {gid})"
+            )
+        self.cstate = CoordinatorState(
+            next_inst=self.cstate.next_inst.at[gid].set(target),
+            crnd=self.cstate.crnd,
+        )
+        self.next_inst_host[gid] = target
 
     # -- per-group liveness and failover -------------------------------------
     def _check_gid(self, gid: int) -> None:
@@ -658,6 +788,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         enabled, use_k, gb = self._plan_round(b, enabled)
         if not any(enabled):
             return self._empty_round(g, b)
+        plan_gb = gb               # reported engine-agnostically (last_gb)
         if not use_k:
             gb = 1
         self._ensure_placement()
@@ -681,7 +812,71 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
             if enabled[gid]:
                 self.next_inst_host[gid] += b
         self._sync_cstate()
+        self.last_gb = plan_gb
         return np.asarray(fresh), np.asarray(inst), np.asarray(value)
+
+    # -- cohort dispatch (DESIGN.md §8), sharded execution -------------------
+    def pipeline_cohort(
+        self, gids, values: np.ndarray, active: np.ndarray
+    ):
+        """Same contract (and bit-identical results) as the unsharded
+        ``pipeline_cohort``, executed as one ``shard_map`` program.
+
+        The group axis is NOT compacted here: shard_map needs uniform
+        per-shard shapes and a cohort may land all its members on one
+        shard, so each shard runs its full slab with non-members held
+        inert by the ``enabled`` mask — the tier still rides the
+        right-sized burst, which is where the skew win lives.  The fold
+        width is the widest divisor of the per-shard slab whose aligned
+        blocks are internally lockstep over the cohort
+        (``core.plan.fold_width_full``)."""
+        gids, member, use_k, inst = self._cohort_prologue(gids, values)
+        g = self.cfg.n_groups
+        be = values.shape[1]
+        marks = self.next_inst_host
+        # full-width fold over the per-shard slab is this dataplane's
+        # dispatch plan; reported on both engines (the jnp branch ignores
+        # the fold, so its dispatch is built at width 1)
+        plan_gb = plan_mod.fold_width_full(gids, marks, self._fold_width())
+        gb = plan_gb if use_k else 1
+        vals_f, act_f = plan_mod.scatter_rows(
+            gids, values, active, g, self.cfg.value_words
+        )
+        self._ensure_placement()
+        ni = np.asarray(self.next_inst_host, np.int32)
+        eff_crnd = np.where(
+            member != 0, np.asarray(self.crnd_host, np.int32), NO_ROUND
+        ).astype(np.int32)
+        fn = self._dispatch(use_k, gb)
+        self.stack, self.lstate, fresh, _inst_d, _win, value = fn(
+            ni,
+            eff_crnd,
+            member,
+            self.alive_mask,
+            self.stack,
+            self.lstate,
+            jnp.asarray(vals_f),
+            jnp.asarray(act_f),
+        )
+        fresh, value = np.asarray(fresh)[gids], np.asarray(value)[gids]
+        for gid in gids:
+            self.next_inst_host[gid] += be
+        self._sync_cstate()
+        self.last_gb = plan_gb
+        return fresh, inst, value
+
+    def burn_forward(self, gid: int, target: int) -> None:
+        """Host-scalar-only realignment burn (the sharded control-state
+        discipline of DESIGN.md §6): the new watermark reaches the owning
+        shard with the next dispatch."""
+        self._check_gid(gid)
+        if target < self.next_inst_host[gid]:
+            raise ValueError(
+                f"burn_forward moves only forward: {target} < "
+                f"{self.next_inst_host[gid]} (group {gid})"
+            )
+        self.next_inst_host[gid] = target
+        self._sync_cstate()
 
     # -- per-group control: host scalars only, no device round-trip ----------
     def _sync_cstate(self) -> None:
@@ -768,6 +963,19 @@ class PaxosContext:
         else:
             self.hw = HardwareDataplane(self.cfg, use_kernels=use_kernels)
             self.fused = fused
+        # the dispatch planner owns burst sizing, cohort tiering and the
+        # realignment sweep for the group-keyed pump (DESIGN.md §8); the
+        # single-group context is the degenerate one-cohort case and only
+        # shares the burst quantizer
+        self.planner: Optional[plan_mod.DispatchPlanner] = (
+            plan_mod.DispatchPlanner(
+                batch=self.cfg.batch,
+                n_instances=self.cfg.n_instances,
+                realign_after=self.cfg.realign_after,
+            )
+            if self.grouped
+            else None
+        )
         # the per-group delivery log is uniform across context shapes: an
         # ungrouped single-group context logs into group_log[0], so readers
         # (serve.ConsensusService.delivered) never need a G == 1 special case
@@ -860,8 +1068,14 @@ class PaxosContext:
         b = self.cfg.batch
         for i in range(0, len(submits), b):
             chunk = submits[i : i + b]
-            # fused jnp path right-sizes the burst; the staged path keeps the
-            # full batch, and the kernel path its fixed block-aligned one
+            # the fused path right-sizes the burst on BOTH engines
+            # (engine-agnostic quantization, core.plan); the staged path
+            # keeps the full batch.  A sub-batch burst can leave the
+            # watermark off the full-batch block boundary, in which case
+            # later full bursts take the jnp fallback (bit-identical,
+            # slower) — the grouped pump's realignment sweep recovers the
+            # kernel window; a single-group deployment accepts the
+            # fallback (or burns forward via fail/restore).
             be = self._burst_size(len(chunk)) if self.fused else b
             vals, active = self._pack_chunk(chunk, be)
             if self.fused and self._softco is None:
@@ -973,61 +1187,68 @@ class PaxosContext:
                         # ambient context — the switch model (paper Fig. 5)
                         self._learn_group(int(v.gid), aid, _to_host(v))
 
-        # the whole service advances together: every remaining chunk wave is
-        # ONE device dispatch covering all G groups.  Frozen (software-
-        # coordinated) and idle groups ride along inert — round presented as
-        # NO_ROUND, watermark parked — so skewed load neither burns idle
-        # rings nor perturbs idle state (bit-identical to not being pumped).
+        # the whole service advances together, tiered by the dispatch
+        # planner (DESIGN.md §8): each chunk wave partitions the loaded
+        # groups into cohorts — one dispatch per distinct right-sized
+        # burst, hot cohorts at the full block-aligned batch, cold cohorts
+        # coalesced into a shared small burst — instead of padding every
+        # cold group up to the hottest group's burst.  Frozen (software-
+        # coordinated), vacant and idle groups are simply not members of
+        # any cohort: they burn no ring instances and stay bit-identical
+        # to not being pumped.  Burst sizes are engine-agnostic, so every
+        # backend — and G independent per-group oracles — resolves the
+        # wave identically.
+        hw = self.hw
         while any(queues):
             chunks = [q[:b] for q in queues]
             queues = [q[b:] for q in queues]
-            vals, active = self._group_burst(chunks)
-            enabled = [len(c) > 0 for c in chunks]
-            fresh, inst, value = self.hw.pipeline(vals, active, enabled)
-            for gid in range(self.n_groups):
-                if not enabled[gid] or gid in self._softco_g:
-                    continue
-                for j in range(fresh.shape[1]):
-                    if not fresh[gid, j]:
-                        continue
-                    raw = value[gid, j].tobytes()
-                    if int(inst[gid, j]) not in self.learned_g[gid]:
-                        self.learned_g[gid][int(inst[gid, j])] = raw
-                    self._deliver_group(gid, int(inst[gid, j]), raw)
+            rp = self.planner.plan_round(
+                [len(c) for c in chunks],
+                hw.next_inst_host,
+                hw.live_host,
+                hw.crnd_host,
+            )
+            for gid, target in rp.realign:
+                hw.burn_forward(gid, target)
+            for cohort in rp.cohorts:
+                packed = [
+                    self._pack_chunk(chunks[gid], cohort.burst)
+                    for gid in cohort.gids
+                ]
+                vals = np.stack([v for v, _ in packed])
+                act = np.stack([a for _, a in packed])
+                fresh, inst, value = hw.pipeline_cohort(
+                    cohort.gids, vals, act
+                )
+                for row, gid in enumerate(cohort.gids):
+                    for j in range(fresh.shape[1]):
+                        if not fresh[row, j]:
+                            continue
+                        raw = value[row, j].tobytes()
+                        if int(inst[row, j]) not in self.learned_g[gid]:
+                            self.learned_g[gid][int(inst[row, j])] = raw
+                        self._deliver_group(gid, int(inst[row, j]), raw)
 
     def _burst_size(self, longest: int) -> int:
-        """Wire-burst sizing: the kernel path keeps the fixed block-aligned
-        batch; the jnp path right-sizes to the next pow2 (a half-empty wire
-        batch costs real dataplane time, and jnp has no alignment needs)."""
-        if self.hw.use_kernels:
-            return self.cfg.batch
-        be = 8
-        while be < longest:
-            be *= 2
-        return min(be, self.cfg.batch)
+        """Wire-burst sizing, engine-agnostic (``core.plan.quantize_burst``):
+        the jnp oracle and the Pallas kernel path see identical burst
+        shapes, so burst sizing can never fork the backends' delivery logs;
+        pow2 quantization bounds both the NOP-filler waste and the jit
+        cache (one compiled program per distinct shape)."""
+        be = plan_mod.quantize_burst(longest, self.cfg.batch)
+        if self.planner is not None:
+            self.planner.note_burst(be)
+        return be
 
     def _pack_chunk(
         self, chunk: List[Tuple[int, bytes]], be: int
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Pack (seq, payload) pairs into a (BE, V) wire burst; unfilled
         slots carry the NOP sentinel and are inactive."""
-        vals = np.zeros((be, self.cfg.value_words), np.int32)
-        active = np.zeros((be,), bool)
-        vals[:, 0] = NOP_SENTINEL
-        for j, (seq, payload) in enumerate(chunk):
-            vals[j] = self._encode(seq, payload)
-            active[j] = True
-        return vals, active
-
-    def _group_burst(
-        self, chunks: List[List[Tuple[int, bytes]]]
-    ) -> Tuple[np.ndarray, np.ndarray]:
-        """One chunk per group -> a (G, BE, V) wire burst, one shared size."""
-        be = self._burst_size(max((len(c) for c in chunks), default=0))
-        packed = [self._pack_chunk(chunk, be) for chunk in chunks]
-        return (
-            np.stack([v for v, _ in packed]),
-            np.stack([a for _, a in packed]),
+        return plan_mod.pack_rows(
+            [self._encode(seq, payload) for seq, payload in chunk],
+            be,
+            self.cfg.value_words,
         )
 
     def _soft_sequence_group(

@@ -186,6 +186,17 @@ def make_sharded_multigroup_round(
     lstate, values[G, B, V], active[G, B]) -> (stack', lstate',
     fresh[G, B], inst[G, B], win[G, B], value[G, B, V])`` with the state
     arguments donated (device-resident in place across rounds).
+
+    Under the cohort dispatch planner (DESIGN.md §8) the same step serves
+    every tier of a round plan: ``B`` is the tier's right-sized burst (the
+    step retraces per distinct pow2 burst — a bounded vocabulary), the
+    ``enabled`` mask is the tier's membership, and ``group_block`` is the
+    per-cohort fold width (``core.plan.fold_width_full`` against the
+    per-shard slab).  The group axis is *not* compacted here — shard_map
+    needs uniform per-shard shapes, and a cohort may concentrate on one
+    shard — so non-member slabs ride each tier inert; the unsharded
+    dataplane additionally compacts via
+    ``kernels.wirepath.cohort_wirepath_round``.
     """
     if axis not in mesh.shape:
         raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")

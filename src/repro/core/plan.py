@@ -1,0 +1,335 @@
+"""The cohort dispatch planner: how a round of skewed multi-group load maps
+onto device dispatches (DESIGN.md §8).
+
+Before this module the plan was smeared across ``core.api``: the fold
+decision was all-or-nothing (``group_block ∈ {G, 1}``), one shared burst
+size padded every cold group's chunk with NOP filler up to the hottest
+group's burst, and after divergent per-group failovers the folded mapping
+never re-engaged.  ``plan.py`` owns all of those decisions in one place:
+
+* **Burst quantization** — every wire burst is a power of two in
+  ``[MIN_BURST, batch]``, regardless of execution engine (Pallas kernel or
+  jnp oracle).  Engine choice never shapes a burst, which is what makes the
+  planner's decisions — and therefore per-group delivery logs — identical
+  across the jnp/pallas × sharded/unsharded backends *and* against G
+  independent single-group oracles, even under arbitrarily skewed load.
+  Bounded shape vocabulary also bounds jit-cache churn.
+
+* **Lockstep cohorts** — the enabled groups of a round partition into
+  watermark-equivalence classes; groups whose quantized burst agrees ride
+  one dispatch (a *tier*): hot cohorts at the full block-aligned burst,
+  cold cohorts coalesced into a shared right-sized burst.  One dispatch per
+  distinct burst size, so a round costs at most ``log2(batch/MIN_BURST)+1``
+  dispatches however skewed the load.
+
+* **Per-cohort fold widths** — ``fold_width_full`` generalizes the old
+  binary group-folding cliff: the largest divisor ``d`` of the fold cap
+  such that every ``d``-aligned block's members share one watermark (the
+  kernel substitutes the block's lockstep base for non-members).
+  ``cohort_blocks`` additionally *compacts* the grid over the group axis
+  for the unsharded kernel path: only the blocks containing cohort members
+  are visited, so a one-hot-group tier costs one group's work, not G's.
+
+* **Realignment sweep** — after ``realign_after`` consecutive fragmented
+  rounds (enabled groups spread over >1 watermark class), divergent groups
+  are burned forward to a common block boundary: the skipped instances are
+  never proposed and are recoverable as no-ops (paper §3.1 gap fill),
+  and the full-width folded mapping re-engages.  Off by default
+  (``PaxosConfig.realign_after = None``) because burning forward changes
+  instance numbering relative to an independent deployment — services opt
+  in when they prefer amortization over twin-exact numbering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+NO_ROUND = -1
+NOP_SENTINEL = -0x7FFFFFFF  # first value word marking an internal filler slot
+MIN_BURST = 8               # smallest wire burst (pow2 quantization floor)
+
+
+def wire_block(b: int) -> int:
+    """Kernel batch-block size for a burst of ``b`` messages."""
+    from repro.kernels.wirepath import DEFAULT_BLOCK_B
+
+    return min(DEFAULT_BLOCK_B, b)
+
+
+def window_aligned(n_instances: int, base: int, b: int) -> bool:
+    """True iff a contiguous window [base, base+b) satisfies the Pallas
+    ring-blocking invariants (BB | base, BB | B, BB | N, B <= N) — the ONE
+    definition every dataplane consults (DESIGN.md §2)."""
+    bb = wire_block(b)
+    return (
+        b % bb == 0
+        and n_instances % bb == 0
+        and b <= n_instances
+        and base % bb == 0
+    )
+
+
+def quantize_burst(n: int, cap: int) -> int:
+    """Wire-burst sizing: next power of two >= ``n`` in [MIN_BURST, cap].
+
+    A half-empty wire batch costs real dataplane time, so bursts right-size
+    down to the load; quantizing to a bounded pow2 vocabulary keeps the jit
+    cache (one compiled program per distinct shape) bounded too.
+    """
+    be = MIN_BURST
+    while be < n:
+        be *= 2
+    return min(be, cap)
+
+
+def _divisors(cap: int) -> List[int]:
+    return [d for d in range(1, cap + 1) if cap % d == 0]
+
+
+def _block_lockstep(gids: Sequence[int], marks: Sequence[int], d: int) -> bool:
+    """True iff every ``d``-aligned block's members (of ``gids``) share one
+    watermark — the validity condition for folding ``d`` groups per grid
+    step with cohort-base substitution for non-members."""
+    classes: Dict[int, int] = {}
+    for g in gids:
+        blk = g // d
+        if classes.setdefault(blk, marks[g]) != marks[g]:
+            return False
+    return True
+
+
+def fold_width_full(
+    gids: Sequence[int], marks: Sequence[int], cap: int
+) -> int:
+    """Fold width for a *full-width* dispatch (every group block on the
+    grid): the largest divisor of ``cap`` folding validly over ``gids``.
+
+    Generalizes the historical ``group_block ∈ {cap, 1}`` cliff: cohorts
+    that diverged after per-group failovers can still fold block-wise
+    (e.g. groups [0..3] at one watermark and [4..7] at another fold at
+    width 4), each block deriving its ring offset from its own lockstep
+    base."""
+    for d in sorted(_divisors(cap), reverse=True):
+        if _block_lockstep(gids, marks, d):
+            return d
+    return 1
+
+
+def cohort_blocks(
+    gids: Sequence[int], marks: Sequence[int], cap: int
+) -> Tuple[int, List[int]]:
+    """Group-axis *compaction* for a cohort dispatch: pick ``(gb, blocks)``
+    so the kernel grid visits only the aligned ``gb``-blocks containing
+    cohort members.
+
+    Objective: minimize the number of visited blocks (grid steps along the
+    group axis), then the fold width (block size — smaller blocks carry
+    fewer inert filler rows).  A single hot group therefore costs one
+    1-group block; a 7-of-8 cold cohort costs one folded 8-group block."""
+    best: Optional[Tuple[Tuple[int, int], int, List[int]]] = None
+    for d in _divisors(cap):
+        if not _block_lockstep(gids, marks, d):
+            continue
+        blocks = sorted({g // d for g in gids})
+        key = (len(blocks), d)
+        if best is None or key < best[0]:
+            best = (key, d, blocks)
+    assert best is not None  # d = 1 is always valid
+    return best[1], best[2]
+
+
+def pack_rows(
+    rows: Sequence[np.ndarray], be: int, value_words: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack encoded value rows into a ``(be, V)`` wire burst; unfilled
+    slots carry the NOP sentinel and are inactive."""
+    vals = np.zeros((be, value_words), np.int32)
+    active = np.zeros((be,), bool)
+    vals[:, 0] = NOP_SENTINEL
+    for j, row in enumerate(rows):
+        vals[j] = row
+        active[j] = True
+    return vals, active
+
+
+def scatter_rows(
+    gids: Sequence[int],
+    values: np.ndarray,
+    active: Optional[np.ndarray],
+    g: int,
+    value_words: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Scatter compact cohort rows into a full-width ``(G, BE, V)`` burst:
+    non-member rows carry the NOP sentinel and are inactive (they ride any
+    dispatch inert).  The single definition of the full-width packing
+    convention, shared by the jnp-oracle and sharded execution paths."""
+    be = values.shape[1]
+    vals_f = np.zeros((g, be, value_words), np.int32)
+    vals_f[:, :, 0] = NOP_SENTINEL
+    act_f = np.zeros((g, be), bool)
+    for row, gid in enumerate(gids):
+        vals_f[gid] = values[row]
+        if active is not None:
+            act_f[gid] = active[row]
+    return vals_f, act_f
+
+
+@dataclasses.dataclass(frozen=True)
+class Cohort:
+    """One dispatch of a round plan: the enabled groups sharing a quantized
+    burst size.  ``gids`` may span several watermark classes — the dispatch
+    folds block-wise where classes align and degrades to width-1 blocks
+    where they don't (``fold_width_full`` / ``cohort_blocks``)."""
+
+    gids: Tuple[int, ...]
+    burst: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """The resolved plan for one chunk wave.
+
+    ``cohorts`` are ordered hot -> cold (burst descending); ``realign``
+    lists ``(gid, target_watermark)`` burns the dataplane must apply before
+    dispatching; ``fragmentation`` counts watermark classes among enabled
+    groups (after burns); ``full_fold`` marks the highest-amortization
+    state — one cohort, one watermark class — where the dispatch folds the
+    full width."""
+
+    cohorts: Tuple[Cohort, ...]
+    enabled: Tuple[bool, ...]
+    realign: Tuple[Tuple[int, int], ...]
+    fragmentation: int
+    full_fold: bool
+
+
+class DispatchPlanner:
+    """Owns the per-round dispatch policy for a multi-group context.
+
+    Stateless per round except for the realignment counter (consecutive
+    fragmented rounds) and introspection stats; the plan itself is a pure
+    function of host-authoritative scalars (loads, watermark mirrors,
+    membership, rounds), which is why unsharded, sharded and the jnp oracle
+    resolve every round identically — the parity contract (DESIGN.md §8).
+    """
+
+    def __init__(
+        self,
+        batch: int,
+        n_instances: int,
+        realign_after: Optional[int] = None,
+    ):
+        self.batch = batch
+        self.n_instances = n_instances
+        self.realign_after = realign_after
+        self._fragmented_rounds = 0
+        self.last_plan: Optional[RoundPlan] = None
+        self.stats = {
+            "rounds": 0,
+            "dispatches": 0,
+            "full_fold_rounds": 0,
+            "realignments": 0,
+            "burst_shapes": set(),
+            "service_loads": None,
+        }
+
+    # -- bookkeeping hooks ---------------------------------------------------
+    def note_burst(self, be: int) -> None:
+        """Record a burst shape minted outside plan_round (staged paths)."""
+        self.stats["burst_shapes"].add(be)
+
+    def observe_service_loads(self, loads: Sequence[int]) -> None:
+        """Serving-tier load snapshot (``ConsensusService.group_loads``) —
+        introspection only; tiering uses per-wave queue depths so that the
+        plan stays a pure function of the round's inputs."""
+        self.stats["service_loads"] = list(loads)
+
+    def report(self) -> Dict:
+        out = dict(self.stats)
+        out["burst_shapes"] = sorted(self.stats["burst_shapes"])
+        out["fragmented_rounds"] = self._fragmented_rounds
+        out["realign_after"] = self.realign_after
+        return out
+
+    # -- the planner ---------------------------------------------------------
+    def plan_round(
+        self,
+        loads: Sequence[int],
+        marks: Sequence[int],
+        live: Sequence[bool],
+        crnd: Sequence[int],
+    ) -> RoundPlan:
+        """Resolve one chunk wave: membership/frozen masking, the
+        realignment sweep, and the hot->cold cohort tiering.
+
+        ``loads`` are this wave's per-group chunk lengths; ``marks`` the
+        host watermark mirrors; ``live`` membership; ``crnd`` the host
+        round mirrors (``NO_ROUND`` = frozen under a software coordinator).
+        """
+        g = len(loads)
+        enabled = tuple(
+            loads[i] > 0 and bool(live[i]) and crnd[i] != NO_ROUND
+            for i in range(g)
+        )
+        en_gids = [i for i in range(g) if enabled[i]]
+        marks = list(marks)
+
+        # A round is *fragmented* when it cannot run the highest-amortization
+        # mapping: enabled watermarks spread over >1 class (fold breaks), OR
+        # some enabled watermark off the full-batch block boundary (the
+        # kernel window alignment a quantized sub-batch burst can cost —
+        # engine-agnostic on purpose: the burn must fire identically on the
+        # jnp oracle or backends' instance numbering would fork).
+        bb = wire_block(self.batch)
+        classes = {marks[i] for i in en_gids}
+        fragmented = len(classes) > 1 or any(
+            marks[i] % bb for i in en_gids
+        )
+        if fragmented:
+            self._fragmented_rounds += 1
+        elif en_gids:
+            self._fragmented_rounds = 0
+
+        realign: List[Tuple[int, int]] = []
+        if (
+            self.realign_after is not None
+            and fragmented
+            and self._fragmented_rounds >= self.realign_after
+        ):
+            # burn every straggling enabled group forward to one common
+            # block boundary: the skipped instances are never proposed and
+            # are recoverable as no-ops (paper §3.1), and the full-width
+            # folded block-aligned mapping re-engages on the next dispatch
+            target = -(-max(classes) // bb) * bb
+            for i in en_gids:
+                if marks[i] != target:
+                    realign.append((i, target))
+                    marks[i] = target
+            self._fragmented_rounds = 0
+            self.stats["realignments"] += 1
+
+        tiers: Dict[int, List[int]] = {}
+        for i in en_gids:
+            be = quantize_burst(loads[i], self.batch)
+            tiers.setdefault(be, []).append(i)
+            self.stats["burst_shapes"].add(be)
+        cohorts = tuple(
+            Cohort(gids=tuple(gids), burst=be)
+            for be, gids in sorted(tiers.items(), reverse=True)
+        )
+        fragmentation = len({marks[i] for i in en_gids})
+        plan = RoundPlan(
+            cohorts=cohorts,
+            enabled=enabled,
+            realign=tuple(realign),
+            fragmentation=fragmentation,
+            full_fold=len(cohorts) == 1 and fragmentation == 1,
+        )
+        self.stats["rounds"] += 1
+        self.stats["dispatches"] += len(cohorts)
+        if plan.full_fold:
+            self.stats["full_fold_rounds"] += 1
+        self.last_plan = plan
+        return plan

@@ -52,6 +52,12 @@ class PaxosConfig:
     value_words: int = DEFAULT_VALUE_WORDS
     batch: int = 128                  # dataplane batch ("packets per burst")
     n_groups: int = 1                 # device-resident Paxos groups (G)
+    # consecutive fragmented rounds (enabled groups spread over >1 watermark
+    # class) after which the dispatch planner burns divergent groups forward
+    # to a common block boundary so the full-width fold re-engages
+    # (DESIGN.md §8).  None = never realign: instance numbering then stays
+    # bit-identical to independent per-group deployments.
+    realign_after: "int | None" = None
 
     @property
     def f(self) -> int:

@@ -205,6 +205,56 @@ def multigroup_fused_round(
     )
 
 
+def cohort_fused_round(
+    stack: AcceptorState,       # leaves shaped (G, A, N[, V])
+    lstate: LearnerState,       # leaves shaped (G, N[, V])
+    gsel: jax.Array,            # int32[NB]  selected group-block indices
+    next_inst: jax.Array,       # int32[G]
+    crnd: jax.Array,            # int32[G]
+    alive: jax.Array,           # int32[G, A]
+    quorum: int | jax.Array,
+    values: jax.Array,          # int32[NB*GB, B, V]  compact cohort burst
+    enabled: jax.Array,         # int32[G]  cohort membership mask
+    *,
+    group_block: int = 1,
+) -> Tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
+    """Cohort-compacted fused round (DESIGN.md §8): the grid visits only the
+    group blocks named by ``gsel``, so a dispatch costs what its cohort
+    costs — not the full capacity G.  Stateless with respect to the
+    coordinator: the dataplane advances its own watermark mirrors for the
+    cohort members (it must mask non-members anyway).
+
+    Returns ``(stack', lstate', fresh[C, B], win[C, B], value[C, B, V])``
+    with ``C = NB * group_block`` compact rows in ``gsel``-block order.
+    """
+    (st_rnd, st_vrnd, st_val, ldel, linst, lval, fresh, win, value) = (
+        _wirepath.cohort_wirepath_round(
+            jnp.asarray(gsel, jnp.int32),
+            next_inst,
+            crnd,
+            jnp.asarray(quorum, jnp.int32),
+            jnp.asarray(alive, jnp.int32),
+            stack.rnd,
+            stack.vrnd,
+            stack.value,
+            lstate.delivered,
+            lstate.inst,
+            lstate.value,
+            values,
+            jnp.asarray(enabled, jnp.int32),
+            group_block=group_block,
+            interpret=INTERPRET,
+        )
+    )
+    return (
+        AcceptorState(st_rnd, st_vrnd, st_val),
+        LearnerState(ldel, linst, lval),
+        fresh != 0,
+        win,
+        value,
+    )
+
+
 def acceptor_phase2_all(
     stack: AcceptorState, msgs: MsgBatch, alive: jax.Array
 ) -> Tuple[AcceptorState, MsgBatch]:

@@ -50,6 +50,19 @@ block's enabled-lockstep base so a folded block keeps a single well-defined
 ring offset even when disabled members' watermarks diverged.  The disabled
 group's ring windows are loaded and stored back bit-unchanged, so folding
 over vacant slots is state-exact.
+
+**Cohort selection (DESIGN.md §8).**  ``cohort_wirepath_round`` is the
+general entry: a ``gsel`` scalar-prefetch vector names which GB-aligned
+group blocks the grid visits, so a dispatch costs what its cohort costs —
+the group-axis analogue of the ring blocking.  Unselected groups' slabs
+are never loaded; their rows of the aliased state outputs retain the input
+data, exactly like unvisited ring blocks along the batch axis.  Each
+selected block derives its ring offset from its own (substituted)
+watermark base, which is what lets cohorts that diverged after per-group
+failovers fold block-wise instead of collapsing to ``group_block = 1``.
+``multigroup_wirepath_round`` is its every-block-selected slice; the host
+side of the policy (burst tiers, fold widths, block selection) lives in
+``core.plan``.
 """
 from __future__ import annotations
 
@@ -157,10 +170,18 @@ def _mg_wirepath_kernel(
     value_ref[...] = value
 
 
+def _cohort_wirepath_kernel(gsel_ref, *rest):
+    # same body as the full-grid kernel; ``gsel_ref`` is consumed by the
+    # index maps only (it selects which group blocks the grid visits)
+    del gsel_ref
+    _mg_wirepath_kernel(*rest)
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_b", "group_block", "interpret")
 )
-def multigroup_wirepath_round(
+def cohort_wirepath_round(
+    gsel: jax.Array,        # int32[NB]  selected group-block indices (÷ GB)
     next_inst: jax.Array,   # int32[G]  per-group window base (BB-aligned)
     crnd: jax.Array,        # int32[G]  per-group coordinator round
     quorum: jax.Array,      # int32[]
@@ -171,52 +192,67 @@ def multigroup_wirepath_round(
     ldel: jax.Array,        # int32[G, N]      learner rings
     linst: jax.Array,       # int32[G, N]
     lval: jax.Array,        # int32[G, N, V]
-    values: jax.Array,      # int32[G, B, V]   per-group burst values
+    values: jax.Array,      # int32[NB*GB, B, V]  cohort burst values, compact
     enabled: Optional[jax.Array] = None,  # int32[G] (0/1); None = all enabled
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
     interpret: bool = False,
 ) -> Tuple[jax.Array, ...]:
-    """One fused Phase-2 round for G device-resident groups; single dispatch.
+    """One fused Phase-2 round for a *cohort* of groups: the grid visits
+    only the ``GB``-aligned group blocks named by ``gsel`` (DESIGN.md §8).
 
-    ``group_block > 1`` folds that many groups into each grid step (see the
-    module docstring); the folded *enabled* groups of a block must share one
-    BB-aligned watermark — the caller's responsibility
-    (``MultiGroupDataplane`` only folds when its host watermark mirrors are
-    in lockstep across enabled groups).  ``enabled`` is the vacant/frozen
-    mask: disabled groups get their round forced to NO_ROUND and, when
-    folding, their watermark substituted with the block's enabled-lockstep
-    base — they ride the dispatch inert and bit-unchanged.
+    This is the group-axis analogue of the ring blocking: a dispatch's cost
+    scales with the cohort it serves, not with the full capacity ``G``.
+    Unselected groups' slabs are never loaded — their rows of the aliased
+    state outputs retain their input data, exactly like the unvisited ring
+    blocks along the batch axis.  ``values`` and the ``fresh``/``win``/
+    ``value`` outputs are *compact*: row ``j*GB + k`` belongs to group
+    ``gsel[j]*GB + k``.
+
+    ``group_block > 1`` folds each selected block; the folded *enabled*
+    members of a block must share one BB-aligned watermark (the per-cohort
+    lockstep condition computed by ``core.plan.cohort_blocks``).
+    ``enabled`` marks the cohort: non-members inside a selected block ride
+    inert — round forced to NO_ROUND, watermark substituted with the
+    block's enabled-lockstep base — and are written back bit-unchanged.
 
     Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
-    fresh[G, B], win_vrnd[G, B], value[G, B, V])``.
+    fresh[NB*GB, B], win_vrnd[NB*GB, B], value[NB*GB, B, V])`` with the
+    state outputs full-width ``(G, ...)`` (aliased in place).
     """
     g, a, n = st_rnd.shape
-    _, b, v = values.shape
+    c, b, v = values.shape
     bb = min(block_b, b)
     gb = group_block
+    nb = gsel.shape[0]
     assert b % bb == 0, (b, bb)
     assert n % bb == 0, (n, bb)
     assert b <= n, "burst may not lap the instance ring"
     assert g % gb == 0, (g, gb)
+    assert c == nb * gb, (c, nb, gb)
     nb_ring = n // bb
-    grid = (g // gb, b // bb)
+    grid = (nb, b // bb)
 
-    # Ring offset of a block comes from its first group's watermark; with
-    # group_block == 1 that IS the group's own watermark, with group_block > 1
-    # the caller guarantees the folded groups are in lockstep.
-    def ring2(gi, i, ni_ref, *_):
-        return (gi, (ni_ref[gi * gb] // bb + i) % nb_ring)
+    # Ring offset of a selected block comes from its first group's watermark;
+    # with group_block == 1 that IS the group's own watermark, with
+    # group_block > 1 the caller guarantees the folded enabled members are in
+    # lockstep (and disabled members' watermarks are substituted below).
+    def ring2(gi, i, gsel_ref, ni_ref, *_):
+        gs = gsel_ref[gi]
+        return (gs, (ni_ref[gs * gb] // bb + i) % nb_ring)
 
-    def ring3(gi, i, ni_ref, *_):
-        return (gi, (ni_ref[gi * gb] // bb + i) % nb_ring, 0)
+    def ring3(gi, i, gsel_ref, ni_ref, *_):
+        gs = gsel_ref[gi]
+        return (gs, (ni_ref[gs * gb] // bb + i) % nb_ring, 0)
 
-    def stack3(gi, i, ni_ref, *_):
-        return (gi, 0, (ni_ref[gi * gb] // bb + i) % nb_ring)
+    def stack3(gi, i, gsel_ref, ni_ref, *_):
+        gs = gsel_ref[gi]
+        return (gs, 0, (ni_ref[gs * gb] // bb + i) % nb_ring)
 
-    def stack4(gi, i, ni_ref, *_):
-        return (gi, 0, (ni_ref[gi * gb] // bb + i) % nb_ring, 0)
+    def stack4(gi, i, gsel_ref, ni_ref, *_):
+        gs = gsel_ref[gi]
+        return (gs, 0, (ni_ref[gs * gb] // bb + i) % nb_ring, 0)
 
     def batch2(gi, i, *_):
         return (gi, i)
@@ -224,17 +260,17 @@ def multigroup_wirepath_round(
     def batch3(gi, i, *_):
         return (gi, i, 0)
 
-    def group1(gi, i, *_):
-        return (gi,)
+    def group1(gi, i, gsel_ref, *_):
+        return (gsel_ref[gi],)
 
-    def group2(gi, i, *_):
-        return (gi, 0)
+    def group2(gi, i, gsel_ref, *_):
+        return (gsel_ref[gi], 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=5,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((gb, bb, v), batch3),       # values
+            pl.BlockSpec((gb, bb, v), batch3),       # values (compact)
             pl.BlockSpec((gb, a, bb), stack3),       # st_rnd
             pl.BlockSpec((gb, a, bb), stack3),       # st_vrnd
             pl.BlockSpec((gb, a, bb, v), stack4),    # st_val
@@ -252,9 +288,9 @@ def multigroup_wirepath_round(
             pl.BlockSpec((gb, bb), ring2),           # ldel'
             pl.BlockSpec((gb, bb), ring2),           # linst'
             pl.BlockSpec((gb, bb, v), ring3),        # lval'
-            pl.BlockSpec((gb, bb), batch2),          # fresh
-            pl.BlockSpec((gb, bb), batch2),          # win_vrnd
-            pl.BlockSpec((gb, bb, v), batch3),       # value
+            pl.BlockSpec((gb, bb), batch2),          # fresh (compact)
+            pl.BlockSpec((gb, bb), batch2),          # win_vrnd (compact)
+            pl.BlockSpec((gb, bb, v), batch3),       # value (compact)
         ],
     )
     out_shapes = [
@@ -264,17 +300,17 @@ def multigroup_wirepath_round(
         jax.ShapeDtypeStruct((g, n), jnp.int32),
         jax.ShapeDtypeStruct((g, n), jnp.int32),
         jax.ShapeDtypeStruct((g, n, v), jnp.int32),
-        jax.ShapeDtypeStruct((g, b), jnp.int32),
-        jax.ShapeDtypeStruct((g, b), jnp.int32),
-        jax.ShapeDtypeStruct((g, b, v), jnp.int32),
+        jax.ShapeDtypeStruct((c, b), jnp.int32),
+        jax.ShapeDtypeStruct((c, b), jnp.int32),
+        jax.ShapeDtypeStruct((c, b, v), jnp.int32),
     ]
     fn = pl.pallas_call(
-        _mg_wirepath_kernel,
+        _cohort_wirepath_kernel,
         grid_spec=grid_spec,
         out_shape=out_shapes,
-        # all five state arrays update in place: inputs 5..10 (after the 4
+        # all five state arrays update in place: inputs 6..11 (after the 5
         # scalar-prefetch args) alias outputs 0..5 — device-resident state
-        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5},
+        input_output_aliases={6: 0, 7: 1, 8: 2, 9: 3, 10: 4, 11: 5},
         interpret=interpret,
     )
     ni = jnp.asarray(next_inst, jnp.int32).reshape((g,))
@@ -298,9 +334,57 @@ def multigroup_wirepath_round(
             ni = jnp.where(enb, nib, base[:, None]).reshape((g,))
     q = jnp.asarray(quorum, jnp.int32).reshape((1,))
     al = jnp.asarray(alive, jnp.int32).reshape((g, a))
+    gs = jnp.asarray(gsel, jnp.int32).reshape((nb,))
     return tuple(
-        fn(ni, cr, q, al, values, st_rnd, st_vrnd, st_val, ldel, linst, lval,
-           ni, cr, al)
+        fn(gs, ni, cr, q, al, values, st_rnd, st_vrnd, st_val, ldel, linst,
+           lval, ni, cr, al)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "group_block", "interpret")
+)
+def multigroup_wirepath_round(
+    next_inst: jax.Array,   # int32[G]  per-group window base (BB-aligned)
+    crnd: jax.Array,        # int32[G]  per-group coordinator round
+    quorum: jax.Array,      # int32[]
+    alive: jax.Array,       # int32[G, A] (0/1)
+    st_rnd: jax.Array,      # int32[G, A, N]   stacked acceptor rings
+    st_vrnd: jax.Array,     # int32[G, A, N]
+    st_val: jax.Array,      # int32[G, A, N, V]
+    ldel: jax.Array,        # int32[G, N]      learner rings
+    linst: jax.Array,       # int32[G, N]
+    lval: jax.Array,        # int32[G, N, V]
+    values: jax.Array,      # int32[G, B, V]   per-group burst values
+    enabled: Optional[jax.Array] = None,  # int32[G] (0/1); None = all enabled
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    group_block: int = 1,
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """One fused Phase-2 round for G device-resident groups; single dispatch.
+
+    The full-width slice of ``cohort_wirepath_round``: every group block is
+    selected, so the compact value/output layout coincides with the
+    ``(G, ...)`` layout.  ``group_block > 1`` folds that many groups into
+    each grid step (see the module docstring); the folded *enabled* groups
+    of a block must share one BB-aligned watermark — the caller's
+    responsibility (``core.plan.fold_width_full`` picks the widest legal
+    fold from the host watermark mirrors).  ``enabled`` is the vacant/
+    frozen mask: disabled groups get their round forced to NO_ROUND and,
+    when folding, their watermark substituted with the block's
+    enabled-lockstep base — they ride the dispatch inert and bit-unchanged.
+
+    Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
+    fresh[G, B], win_vrnd[G, B], value[G, B, V])``.
+    """
+    g = st_rnd.shape[0]
+    assert g % group_block == 0, (g, group_block)
+    gsel = jnp.arange(g // group_block, dtype=jnp.int32)
+    return cohort_wirepath_round(
+        gsel, next_inst, crnd, quorum, alive,
+        st_rnd, st_vrnd, st_val, ldel, linst, lval, values, enabled,
+        block_b=block_b, group_block=group_block, interpret=interpret,
     )
 
 

@@ -214,10 +214,29 @@ class ConsensusService:
         return gid, seq
 
     def pump(self, rounds: int = 1) -> None:
+        """Drive the shared dispatch.  The serving tier feeds the dispatch
+        planner its cumulative per-group load snapshot first
+        (``group_loads``) — introspection the planner surfaces through
+        ``plan_report`` alongside its own per-wave tiering decisions."""
+        planner = getattr(self.ctx, "planner", None)
+        if planner is not None:
+            planner.observe_service_loads(self.group_loads())
         self.ctx.pump(rounds)
 
     def run_until_quiescent(self, max_rounds: int = 64) -> None:
+        planner = getattr(self.ctx, "planner", None)
+        if planner is not None:
+            planner.observe_service_loads(self.group_loads())
         self.ctx.run_until_quiescent(max_rounds)
+
+    def plan_report(self) -> Dict:
+        """The dispatch planner's introspection report (burst-shape
+        vocabulary, cohort dispatch counts, full-fold rounds, realignment
+        sweeps) — the serving-tier view of DESIGN.md §8."""
+        planner = getattr(self.ctx, "planner", None)
+        if planner is None:
+            return {}
+        return planner.report()
 
     def delivered(self, session_id) -> List[Tuple[int, bytes]]:
         """The (inst, payload) log the session observes, in decided order.

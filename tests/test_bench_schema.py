@@ -1,0 +1,51 @@
+"""The committed BENCH_wirepath.json must satisfy the bench schema.
+
+A malformed bench commit (truncated sweep, NaN ratio, missing headline row)
+would otherwise surface only after CI spends a full bench run — or silently
+skip a regression gate forever.  This is the cheapest job that can catch
+it: pure JSON validation in the fast ``-m "not slow"`` lane, sharing the
+validator the bench-gate job runs (``benchmarks.check_bench_schema``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO_ROOT)
+
+from benchmarks.check_bench_schema import validate  # noqa: E402
+
+
+def _load():
+    with open(os.path.join(REPO_ROOT, "BENCH_wirepath.json")) as f:
+        return json.load(f)
+
+
+def test_committed_bench_artifact_is_schema_valid():
+    assert validate(_load()) == []
+
+
+def test_validator_catches_malformed_artifacts():
+    doc = _load()
+    # a NaN ratio in a headline row must be flagged
+    bad = json.loads(json.dumps(doc))
+    for row in bad["rows"]:
+        if "skew_speedup" in row:
+            row["skew_speedup"] = float("nan")
+    assert any("skew_speedup" in e for e in validate(bad))
+    # a missing headline row must be flagged
+    bad = json.loads(json.dumps(doc))
+    bad["rows"] = [
+        r
+        for r in bad["rows"]
+        if not r["name"].startswith("wirepath/multigroup_scaling_pallas/")
+    ]
+    assert any("multigroup_scaling_pallas" in e for e in validate(bad))
+    # a partial sweep must never be committed as the baseline
+    bad = json.loads(json.dumps(doc))
+    bad["meta"]["partial"] = True
+    assert any("partial" in e for e in validate(bad))
+    # empty rows
+    assert validate({"meta": {"backend": "cpu"}, "rows": []})

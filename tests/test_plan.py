@@ -1,0 +1,296 @@
+"""Cohort dispatch planner (core.plan, DESIGN.md §8).
+
+Three contracts under test:
+
+1. **Planner policy units** — pow2 burst quantization, cohort tiering
+   (one dispatch per distinct burst), per-cohort fold widths generalizing
+   the old ``group_block ∈ {G, 1}`` cliff, and group-axis compaction for
+   the kernel path.
+
+2. **Bounded burst-shape vocabulary** — a heavily skewed 1000-submit run
+   must mint only pow2 burst shapes in ``[MIN_BURST, batch]``, on the
+   fused and the staged (software-coordinated) paths alike, so the jit
+   cache cannot churn one compiled program per load level.
+
+3. **Lockstep realignment** — after divergent per-group failovers the
+   planner burns the stragglers forward to a common block boundary within
+   ``realign_after`` sweeps, the full-width fold re-engages
+   (``group_block == G``), and the burned NOP instances never surface in
+   ``delivered()``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import PaxosConfig, PaxosContext
+from repro.core import plan as plan_mod
+from repro.core.plan import (
+    MIN_BURST,
+    NO_ROUND,
+    DispatchPlanner,
+    cohort_blocks,
+    fold_width_full,
+    quantize_burst,
+)
+from repro.serve.engine import ConsensusService
+
+
+# ---------------------------------------------------------------------------
+# Policy units
+# ---------------------------------------------------------------------------
+def test_quantize_burst_pow2_floor_and_cap():
+    assert quantize_burst(0, 128) == MIN_BURST
+    assert quantize_burst(1, 128) == MIN_BURST
+    assert quantize_burst(8, 128) == 8
+    assert quantize_burst(9, 128) == 16
+    assert quantize_burst(100, 128) == 128
+    assert quantize_burst(1000, 128) == 128       # capped at batch
+    assert quantize_burst(3, 4) == 4              # cap below the floor
+
+
+def test_fold_width_full_generalizes_the_binary_cliff():
+    # full lockstep: the whole capacity folds
+    assert fold_width_full([0, 1, 2, 3], [8, 8, 8, 8], 4) == 4
+    # two lockstep halves: the historical plan fell to 1; now width 4
+    marks = [0, 0, 0, 0, 8, 8, 8, 8]
+    assert fold_width_full(list(range(8)), marks, 8) == 4
+    # fully divergent: width 1
+    assert fold_width_full([0, 1], [0, 8], 2) == 1
+    # divergence only among NON-members never constrains the fold
+    assert fold_width_full([1, 2, 3], [99, 8, 8, 8], 4) == 4
+    # empty member set: unconstrained
+    assert fold_width_full([], [0, 1, 2, 3], 4) == 4
+
+
+def test_cohort_blocks_compacts_the_group_axis():
+    marks = [0] * 8
+    # a single hot group: one width-1 block, not a full-width sweep
+    gb, blocks = cohort_blocks([2], marks, 8)
+    assert (gb, blocks) == (1, [2])
+    # 7-of-8 cold cohort: one folded full-width block beats 7 single blocks
+    gb, blocks = cohort_blocks(list(range(1, 8)), marks, 8)
+    assert (gb, blocks) == (8, [0])
+    # two divergent lockstep halves fold block-wise at width 4
+    marks = [0, 0, 0, 0, 8, 8, 8, 8]
+    gb, blocks = cohort_blocks(list(range(8)), marks, 8)
+    assert (gb, blocks) == (4, [0, 1])
+    # divergent neighbours cannot share a block
+    gb, blocks = cohort_blocks([0, 1], [0, 8], 2)
+    assert (gb, blocks) == (1, [0, 1])
+
+
+def test_plan_round_tiers_hot_to_cold():
+    p = DispatchPlanner(batch=128, n_instances=4096)
+    rp = p.plan_round(
+        loads=[128, 2, 0, 7, 128, 1],
+        marks=[0] * 6,
+        live=[True] * 6,
+        crnd=[0] * 6,
+    )
+    # one dispatch per distinct quantized burst, hot first
+    assert [c.burst for c in rp.cohorts] == [128, 8]
+    assert rp.cohorts[0].gids == (0, 4)
+    assert rp.cohorts[1].gids == (1, 3, 5)
+    assert rp.enabled == (True, True, False, True, True, True)
+    assert not rp.full_fold                      # two tiers
+    assert rp.fragmentation == 1                 # but one watermark class
+
+
+def test_plan_round_masks_frozen_and_vacant():
+    p = DispatchPlanner(batch=32, n_instances=512)
+    rp = p.plan_round(
+        loads=[4, 4, 4, 4],
+        marks=[0, 0, 0, 0],
+        live=[True, False, True, True],          # group 1 vacant
+        crnd=[0, 0, NO_ROUND, 0],                # group 2 frozen
+    )
+    assert rp.enabled == (True, False, False, True)
+    assert rp.cohorts == (plan_mod.Cohort(gids=(0, 3), burst=8),)
+    assert rp.full_fold
+
+
+def test_realignment_sweep_triggers_after_k_fragmented_rounds():
+    p = DispatchPlanner(batch=128, n_instances=4096, realign_after=3)
+    marks = [128, 256, 128, 128]
+    for k in range(2):
+        rp = p.plan_round([4] * 4, marks, [True] * 4, [0] * 4)
+        assert rp.realign == ()                  # below the threshold
+        assert rp.fragmentation == 2
+    rp = p.plan_round([4] * 4, marks, [True] * 4, [0] * 4)
+    # third consecutive fragmented round: burn to the common block boundary
+    # (gid 1 already sits on it and is not burned)
+    burned = dict(rp.realign)
+    assert set(burned) == {0, 2, 3}
+    assert all(t == 256 for t in burned.values())
+    assert rp.fragmentation == 1
+    assert rp.full_fold
+    assert p.stats["realignments"] == 1
+    # the counter reset: the next fragmented round starts a fresh window
+    rp = p.plan_round([4] * 4, [0, 64, 0, 0], [True] * 4, [0] * 4)
+    assert rp.realign == ()
+
+
+def test_realignment_fires_on_lockstep_but_misaligned_watermarks():
+    """Fragmentation is not only fold divergence: enabled groups in
+    lockstep at a watermark OFF the full-batch block boundary (the residue
+    a right-sized sub-batch burst leaves) can never run the block-aligned
+    kernel window — the sweep must burn them forward too, and it must fire
+    identically on every engine (the trigger reads host scalars only)."""
+    p = DispatchPlanner(batch=32, n_instances=512, realign_after=2)
+    marks = [8, 8, 8, 8]                         # one class, 8 % 32 != 0
+    rp = p.plan_round([4] * 4, marks, [True] * 4, [0] * 4)
+    assert rp.realign == ()
+    rp = p.plan_round([4] * 4, marks, [True] * 4, [0] * 4)
+    burned = dict(rp.realign)
+    assert set(burned) == {0, 1, 2, 3}
+    assert all(t == 32 for t in burned.values())  # next 32-block boundary
+    assert rp.full_fold
+    # aligned lockstep marks are NOT fragmented: the counter resets
+    rp = p.plan_round([4] * 4, [32] * 4, [True] * 4, [0] * 4)
+    assert rp.realign == () and p._fragmented_rounds == 0
+
+
+def test_realignment_disabled_by_default():
+    p = DispatchPlanner(batch=128, n_instances=4096)
+    for _ in range(50):
+        rp = p.plan_round([4] * 4, [0, 64, 0, 0], [True] * 4, [0] * 4)
+        assert rp.realign == ()
+    assert p.stats["realignments"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Bounded burst-shape vocabulary (jit-cache churn guard)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_skewed_1000_submit_run_mints_bounded_burst_shapes(use_kernels):
+    """1000 submits with per-group loads swept across every level — plus a
+    stretch under a software coordinator (the staged path) — must resolve
+    to pow2 bursts in [MIN_BURST, batch] only: at most
+    log2(batch/MIN_BURST)+1 distinct wire shapes ever reach a dispatch."""
+    cfg = PaxosConfig(
+        n_acceptors=3, n_instances=2048, batch=64, n_groups=4
+    )
+    ctx = PaxosContext(cfg, use_kernels=use_kernels)
+    rng = np.random.default_rng(0)
+    submitted = 0
+    wave = 0
+    while submitted < 1000:
+        if wave == 6:
+            ctx.fail_coordinator(group=1)        # staged path for group 1
+        if wave == 12:
+            ctx.restore_hardware_coordinator(group=1)
+        for gid in range(4):
+            k = int(rng.integers(0, cfg.batch + 1)) if gid else cfg.batch
+            for j in range(k):
+                ctx.submit(f"w{wave}g{gid}j{j}".encode(), group=gid)
+                submitted += 1
+        ctx.run_until_quiescent()
+        wave += 1
+    assert ctx.stats["delivered"] == submitted
+    shapes = ctx.planner.stats["burst_shapes"]
+    legal = {8, 16, 32, 64}                      # pow2 in [MIN_BURST, batch]
+    assert shapes <= legal, shapes
+    assert len(shapes) <= 4
+
+
+# ---------------------------------------------------------------------------
+# Lockstep realignment, end to end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_realignment_restores_full_width_fold_after_failover(use_kernels):
+    """Scripted divergent failover: after restore, the victim's watermark
+    sits off the others' class and the plan fragments; within
+    ``realign_after`` loaded sweeps the planner burns the stragglers
+    forward, the full-width fold (group_block == G) re-engages, and every
+    submitted payload — and nothing else — is delivered."""
+    g = 4
+    cfg = PaxosConfig(
+        n_acceptors=3, n_instances=512, batch=32, n_groups=g,
+        realign_after=2,
+    )
+    ctx = PaxosContext(cfg, use_kernels=use_kernels)
+    sent = [[] for _ in range(g)]
+
+    def wave(tag, extra=0):
+        for gid in range(g):
+            for j in range(1 + (extra if gid == 1 else 0)):
+                p = f"{tag}g{gid}j{j}".encode()
+                sent[gid].append(p)
+                ctx.submit(p, group=gid)
+        ctx.run_until_quiescent()
+
+    wave("w0")
+    ctx.fail_coordinator(group=1)
+    # heavier load on the victim while software-coordinated: its burst
+    # right-sizes to 16 where the others advance by 8, so the watermarks
+    # genuinely diverge on every backend
+    wave("w1", extra=8)
+    wave("w2")
+    ctx.restore_hardware_coordinator(group=1)
+    # the victim's restore-realigned watermark diverges from the others'
+    assert len(set(ctx.hw.next_inst_host)) > 1
+    for k in range(cfg.realign_after + 1):
+        wave(f"r{k}")
+    # the sweep fired, the service is back in lockstep, and the dispatch
+    # folds the full width again
+    assert ctx.planner.stats["realignments"] >= 1
+    assert len(set(ctx.hw.next_inst_host)) == 1
+    assert ctx.planner.last_plan.full_fold
+    assert ctx.hw.last_gb == g
+    assert ctx.hw._plan_round(cfg.batch, None)[2] == g
+    wave("post")
+    # burned instances are NOP holes: never proposed, never delivered —
+    # each group's log is exactly its submissions, in order
+    for gid in range(g):
+        assert [p for _i, p in ctx.group_log[gid]] == sent[gid], gid
+    assert not ctx._pending
+
+
+def test_realignment_burns_never_surface_in_service_delivered():
+    """The serving-tier view of the same sweep: sessions routed through
+    ``ConsensusService.delivered`` observe exactly their own ops, in
+    order, across a failover + realignment — burned instances are holes
+    in the instance space, not entries in any session's log."""
+    cfg = PaxosConfig(
+        n_acceptors=3, n_instances=512, batch=32, n_groups=4,
+        realign_after=2,
+    )
+    svc = ConsensusService(PaxosContext(cfg, use_kernels=True))
+    sessions = [f"user-{i}" for i in range(12)]
+    victim = svc.group_of(sessions[0])
+
+    def wave(tag):
+        for s in sessions:
+            svc.submit(s, f"{s}:{tag}".encode())
+        svc.run_until_quiescent()
+
+    wave("op0")
+    svc.ctx.fail_coordinator(group=victim)
+    wave("op1")
+    svc.ctx.restore_hardware_coordinator(group=victim)
+    for k in range(4):
+        wave(f"op{2 + k}")
+    report = svc.plan_report()
+    assert report["realignments"] >= 1
+    assert report["service_loads"] == svc.group_loads()
+    for s in sessions:
+        mine = [
+            p for _i, p in svc.delivered(s)
+            if p.startswith(f"{s}:".encode())
+        ]
+        assert mine == [f"{s}:op{k}".encode() for k in range(6)]
+
+
+def test_burn_forward_is_monotone_and_plan_is_backend_agnostic():
+    cfg = PaxosConfig(n_acceptors=3, n_instances=256, batch=16, n_groups=2)
+    ctx = PaxosContext(cfg)
+    ctx.hw.burn_forward(1, 32)
+    assert ctx.hw.next_inst_host == [0, 32]
+    assert int(np.asarray(ctx.hw.cstate.next_inst)[1]) == 32
+    with pytest.raises(ValueError):
+        ctx.hw.burn_forward(1, 16)
+    # the group still serves from the burned watermark
+    ctx.submit(b"x", group=1)
+    ctx.run_until_quiescent()
+    assert [(i, p) for i, p in ctx.group_log[1]] == [(32, b"x")]

@@ -437,3 +437,140 @@ def test_vote_all_window_kernel_matches_jnp():
     )
     for x, y in zip(k2, r2):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Cohort-compacted dispatch (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def test_cohort_round_matches_full_width_oracle():
+    """``cohort_wirepath_round`` — the group-axis-compacted kernel entry —
+    is bit-identical to the full-width jnp oracle with non-members held
+    inert, across: a compact single-group hot tier, a folded block carrying
+    a disabled member, divergent per-block watermark bases, and multiple
+    rounds of watermark advance (the cold tier wrapping its ring slower
+    than the hot tier).  Unselected groups' slabs must ride through the
+    aliased state outputs bit-unchanged."""
+    g, a, n, v = 8, 3, 256, 4
+    quorum = a // 2 + 1
+    rng = np.random.default_rng(11)
+    _cs, stack, ls = _mk_mg_state(g, a, n, v)
+    _cso, stack_o, ls_o = _mk_mg_state(g, a, n, v)
+    alive = jnp.ones((g, a), jnp.int32)
+    marks = np.zeros((g,), np.int32)
+    hot = 0
+    hot_b, cold_b = 64, 8
+    for r in range(2 * n // hot_b + 2):          # hot ring wraps twice
+        # -- hot tier: compact single-group block ---------------------------
+        vals_h = rng.integers(-99, 99, (1, hot_b, v)).astype(np.int32)
+        en_h = np.zeros((g,), np.int32)
+        en_h[hot] = 1
+        outs = wirepath.cohort_wirepath_round(
+            jnp.asarray([hot], jnp.int32),
+            jnp.asarray(marks), jnp.zeros((g,), jnp.int32),
+            jnp.int32(quorum), alive,
+            stack.rnd, stack.vrnd, stack.value,
+            ls.delivered, ls.inst, ls.value,
+            jnp.asarray(vals_h), jnp.asarray(en_h),
+            group_block=1, interpret=True,
+        )
+        stack = AcceptorState(*outs[:3])
+        ls = batched.LearnerState(*outs[3:6])
+        # oracle: full-width with non-members' rounds at NO_ROUND
+        vals_f = np.zeros((g, hot_b, v), np.int32)
+        vals_f[hot] = vals_h[0]
+        eff = CoordinatorState(
+            next_inst=jnp.asarray(marks),
+            crnd=jnp.where(jnp.asarray(en_h) != 0, 0, NO_ROUND),
+        )
+        _c, stack_o, ls_o, fresh_o, _i, _w, val_o = (
+            batched.multigroup_fused_round(
+                eff, stack_o, ls_o, jnp.asarray(vals_f),
+                jnp.ones((g, hot_b), bool), alive != 0, quorum,
+            )
+        )
+        np.testing.assert_array_equal(
+            np.asarray(outs[6] != 0), np.asarray(fresh_o)[[hot]]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(outs[8]), np.asarray(val_o)[[hot]]
+        )
+        marks[hot] += hot_b
+        # -- cold tier: groups 1..7 folded into one full-width block --------
+        vals_c = rng.integers(-99, 99, (g, cold_b, v)).astype(np.int32)
+        en_c = np.ones((g,), np.int32)
+        en_c[hot] = 0
+        outs = wirepath.cohort_wirepath_round(
+            jnp.asarray([0], jnp.int32),
+            jnp.asarray(marks), jnp.zeros((g,), jnp.int32),
+            jnp.int32(quorum), alive,
+            stack.rnd, stack.vrnd, stack.value,
+            ls.delivered, ls.inst, ls.value,
+            jnp.asarray(vals_c), jnp.asarray(en_c),
+            group_block=g, interpret=True,
+        )
+        stack = AcceptorState(*outs[:3])
+        ls = batched.LearnerState(*outs[3:6])
+        eff = CoordinatorState(
+            next_inst=jnp.asarray(marks),
+            crnd=jnp.where(jnp.asarray(en_c) != 0, 0, NO_ROUND),
+        )
+        _c, stack_o, ls_o, fresh_o, _i, _w, val_o = (
+            batched.multigroup_fused_round(
+                eff, stack_o, ls_o, jnp.asarray(vals_c),
+                jnp.ones((g, cold_b), bool), alive != 0, quorum,
+            )
+        )
+        np.testing.assert_array_equal(
+            np.asarray(outs[6] != 0), np.asarray(fresh_o)
+        )
+        cold = [i for i in range(g) if i != hot]
+        np.testing.assert_array_equal(
+            np.asarray(outs[8])[cold], np.asarray(val_o)[cold]
+        )
+        marks[[i for i in range(g) if i != hot]] += cold_b
+        # full state parity every round: compaction, folding over the
+        # disabled hot slot, and untouched-slab aliasing are all state-exact
+        for x, y in zip(
+            jax.tree_util.tree_leaves((stack, ls)),
+            jax.tree_util.tree_leaves((stack_o, ls_o)),
+        ):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_cohort_round_per_block_bases():
+    """Two divergent lockstep halves fold at width G/2, each block deriving
+    its ring offset from its own base — bit-identical to the oracle."""
+    g, a, n, v, b = 8, 3, 128, 4, 16
+    quorum = a // 2 + 1
+    rng = np.random.default_rng(5)
+    _cs, stack, ls = _mk_mg_state(g, a, n, v)
+    _cso, stack_o, ls_o = _mk_mg_state(g, a, n, v)
+    alive = jnp.ones((g, a), jnp.int32)
+    marks = np.asarray([32, 32, 32, 32, 96, 96, 96, 96], np.int32)
+    vals = rng.integers(-99, 99, (g, b, v)).astype(np.int32)
+    outs = wirepath.cohort_wirepath_round(
+        jnp.asarray([0, 1], jnp.int32),
+        jnp.asarray(marks), jnp.zeros((g,), jnp.int32),
+        jnp.int32(quorum), alive,
+        stack.rnd, stack.vrnd, stack.value,
+        ls.delivered, ls.inst, ls.value,
+        jnp.asarray(vals), jnp.ones((g,), jnp.int32),
+        group_block=4, interpret=True,
+    )
+    cs_o = CoordinatorState(
+        next_inst=jnp.asarray(marks), crnd=jnp.zeros((g,), jnp.int32)
+    )
+    _c, stack_o, ls_o, fresh_o, _i, _w, val_o = (
+        batched.multigroup_fused_round(
+            cs_o, stack_o, ls_o, jnp.asarray(vals),
+            jnp.ones((g, b), bool), alive != 0, quorum,
+        )
+    )
+    np.testing.assert_array_equal(np.asarray(outs[6] != 0), np.asarray(fresh_o))
+    np.testing.assert_array_equal(np.asarray(outs[8]), np.asarray(val_o))
+    for x, y in zip(
+        jax.tree_util.tree_leaves((AcceptorState(*outs[:3]),
+                                   batched.LearnerState(*outs[3:6]))),
+        jax.tree_util.tree_leaves((stack_o, ls_o)),
+    ):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
