@@ -551,6 +551,101 @@ def run_skewed() -> None:
     )
 
 
+# -- sustained uptime: throughput across ring generations (DESIGN.md §9) -----
+# The unbounded-uptime question: what does watermark-driven reclamation COST?
+# The sustained path drives a small ring through >= 8 generations with the
+# full §9 lifecycle between generations — drain the delivered prefix to the
+# host, seal the drained chunk with the digest kernel, advance the
+# reclamation watermark — while the unbounded baseline is the SAME ring
+# wrapping silently (the pre-§9 dataplane, no guard, no drain).  The gated
+# ``sustained_ratio`` row is sustained/unbounded msgs/s: the reclamation tax
+# a forever-running service pays for never corrupting its log.
+SUST_N = 512       # ring: small enough that generations are cheap to force
+SUST_B = 256       # burst per round
+SUST_GENS = 8      # ring generations per timed schedule
+SUST_ROUNDS = SUST_GENS * SUST_N // SUST_B
+
+
+def _mk_sust_hw(reclaim: bool):
+    from repro.core.api import HardwareDataplane
+    from repro.core.types import PaxosConfig
+
+    cfg = PaxosConfig(
+        n_acceptors=A, n_instances=SUST_N, batch=SUST_B, value_words=V
+    )
+    hw = HardwareDataplane(cfg, use_kernels=True)
+    if reclaim:
+        hw.enable_reclamation()
+    return hw
+
+
+def bench_sustained_pallas(reclaim: bool) -> float:
+    from repro.kernels import ops as kops
+
+    hw = _mk_sust_hw(reclaim)
+    rng = np.random.default_rng(0)
+    vals = rng.integers(-99, 99, (SUST_B, V)).astype(np.int32)
+    act = np.ones((SUST_B,), np.int32)
+    drain_every = SUST_N // SUST_B     # rounds per generation
+
+    def drain():
+        # generation boundary: drain the decided prefix, seal the drained
+        # chunk with the digest kernel, advance the reclamation watermark
+        lo = hw.reclaimed_host
+        hi = hw._next_inst_host
+        ld = np.asarray(hw.lstate.delivered)
+        li = np.asarray(hw.lstate.inst)
+        lv = np.asarray(hw.lstate.value)
+        slots = np.nonzero((ld != 0) & (li >= lo) & (li < hi))[0]
+        order = slots[np.argsort(li[slots], kind="stable")]
+        block(kops.tree_digest((li[order], lv[order])))
+        hw.set_reclaimed(hi)
+
+    def schedule():
+        fresh = None
+        for r in range(SUST_ROUNDS):
+            if reclaim and r % drain_every == 0 and r:
+                drain()
+            fresh, _inst, _val = hw.pipeline(vals, act)
+        block(jnp.asarray(fresh))
+        if reclaim:                     # final generation's drain
+            drain()
+
+    return time_fn(schedule, iters=3, stat="min")
+
+
+def run_sustained() -> None:
+    rows = (
+        ("sustained_pallas", True),
+        ("sustained_unbounded_pallas", False),
+    )
+    msgs = {}
+    total = SUST_ROUNDS * SUST_B
+    for path, reclaim in rows:
+        us = bench_sustained_pallas(reclaim)
+        msgs[path] = total / us * 1e6
+        emit(
+            f"wirepath/{path}/gens={SUST_GENS}",
+            us,
+            f"{msgs[path]:.0f} msg/s across {SUST_GENS} generations",
+            path=path,
+            gens=SUST_GENS,
+            ring=SUST_N,
+            burst=SUST_B,
+            msgs_per_s=msgs[path],
+            us_per_schedule=us,
+        )
+    ratio = msgs["sustained_pallas"] / msgs["sustained_unbounded_pallas"]
+    emit(
+        f"wirepath/sustained_ratio/gens={SUST_GENS}",
+        0.0,
+        f"{ratio:.2f}x of unbounded msgs/s",
+        gens=SUST_GENS,
+        ring=SUST_N,
+        sustained_ratio=ratio,
+    )
+
+
 def run_sharded(groups=MG_GROUPS) -> None:
     agg = {}
     for path, fn in SHARDED_PATHS:
@@ -650,6 +745,7 @@ def run(bursts=BURSTS, out: Optional[str] = None) -> None:
     run_multigroup()
     run_sharded()
     run_skewed()
+    run_sustained()
     if full_sweep:
         write_json(
             JSON_PATH,

@@ -24,8 +24,9 @@ REQUIRED_HEADLINES = (
     "wirepath/multigroup_scaling_pallas/",
     "wirepath/sharded_scaling_pallas/",
     "wirepath/skew_speedup_twotier/",
+    "wirepath/sustained_ratio/",
 )
-RATIO_FIELDS = ("speedup", "scaling", "skew_speedup")
+RATIO_FIELDS = ("speedup", "scaling", "skew_speedup", "sustained_ratio")
 
 
 def _finite_positive(x) -> bool:

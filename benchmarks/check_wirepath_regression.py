@@ -18,7 +18,13 @@ committed perf-trajectory artifact and fails on:
     dispatch planner of DESIGN.md §8 vs the pre-refactor shared-burst
     dispatch) regressing by more than ``--skew-tolerance`` (default 50%)
     relative to the committed ratio — right-sized cold tiers and the
-    compacted hot tier must keep beating one-size-fits-all bursts.
+    compacted hot tier must keep beating one-size-fits-all bursts;
+  * the sustained-uptime throughput ratio (``sustained_ratio``, >= 8 ring
+    generations with snapshot drain + digest seal + watermark reclamation
+    between generations, vs the same ring wrapping silently — DESIGN.md §9)
+    regressing by more than ``--sustained-tolerance`` (default 50%)
+    relative to the committed ratio — the reclamation tax a forever-running
+    service pays must stay bounded.
 
     PYTHONPATH=src python -m benchmarks.check_wirepath_regression \
         BENCH_wirepath.json /tmp/fresh.json
@@ -76,6 +82,10 @@ def main(argv=None) -> int:
     ap.add_argument("--skew-tolerance", type=float, default=0.50,
                     help="allowed fractional regression of the skewed-load "
                          "two-tier speedup (skew_speedup_twotier) vs the "
+                         "committed artifact (default 0.50)")
+    ap.add_argument("--sustained-tolerance", type=float, default=0.50,
+                    help="allowed fractional regression of the sustained-"
+                         "uptime throughput ratio (sustained_ratio) vs the "
                          "committed artifact (default 0.50)")
     args = ap.parse_args(argv)
 
@@ -162,6 +172,27 @@ def main(argv=None) -> int:
             failures.append(
                 f"skew speedup regressed >{args.skew_tolerance:.0%}: "
                 f"{fresh_sk:.2f}x < floor {floor:.2f}x"
+            )
+
+    base_su = _row_metric(base, "sustained_ratio", "sustained_ratio")
+    fresh_su = _row_metric(fresh, "sustained_ratio", "sustained_ratio")
+    if base_su is None:
+        # pre-§9 artifact: nothing committed to gate against
+        print("sustained ratio: no committed row, gate skipped")
+    elif fresh_su is None:
+        failures.append("fresh run has no sustained_ratio row")
+    else:
+        floor = base_su * (1.0 - args.sustained_tolerance)
+        status = "OK" if fresh_su >= floor else "REGRESSION"
+        print(
+            f"sustained-uptime throughput ratio (pallas): fresh "
+            f"{fresh_su:.2f}x vs committed {base_su:.2f}x "
+            f"(floor {floor:.2f}x) -> {status}"
+        )
+        if fresh_su < floor:
+            failures.append(
+                f"sustained ratio regressed >{args.sustained_tolerance:.0%}: "
+                f"{fresh_su:.2f}x < floor {floor:.2f}x"
             )
 
     if failures:

@@ -9,7 +9,9 @@ Layers:
                     lockstep realignment (DESIGN.md §8)
   * ``api``       — drop-in submit / deliver / recover (paper Fig. 4)
   * ``log``       — replicated log, gaps, quorum trim
+  * ``snapshot``  — sealed snapshot store + ring reclamation (DESIGN.md §9)
   * ``failover``  — coordinator takeover (safe Phase-1 variant of §3.1)
+                    and acceptor restore from snapshot + live suffix
   * ``network``   — seeded lossy message fabric (UDP loss model)
   * ``baseline``  — libpaxos-like software deployment (comparison baseline)
 """
@@ -35,3 +37,8 @@ from .plan import (  # noqa: F401
 from .baseline import SoftwarePaxos  # noqa: F401
 from .log import ReplicatedLog  # noqa: F401
 from .network import FaultSpec, SimNet  # noqa: F401
+from .snapshot import (  # noqa: F401
+    GroupSnapshot,
+    RingOverflowError,
+    SnapshotStore,
+)

@@ -30,6 +30,7 @@ from . import plan as plan_mod
 from .network import SimNet
 from .paxos import Coordinator as SoftCoordinator
 from .plan import NO_ROUND, NOP_SENTINEL
+from .snapshot import GroupSnapshot, RingOverflowError, SnapshotStore
 from .types import (
     MSG_NOP,
     MSG_P1A,
@@ -98,6 +99,11 @@ class HardwareDataplane:
         # host mirror of the sequencer watermark — lets the kernel path check
         # its block-alignment invariant without a device sync
         self._next_inst_host = 0
+        # ring reclamation (DESIGN.md §9): when enabled, only instances in
+        # [reclaimed, reclaimed + N) may sequence — the door raises
+        # RingOverflowError past the boundary and the device-side permit gate
+        # enforces the same limit.  None = legacy silent overwrite-on-wrap.
+        self.reclaimed_host: Optional[int] = None
         self._seq_base: Optional[int] = None        # provenance hint for vote()
         if use_kernels:
             from repro.kernels import ops as kops
@@ -120,6 +126,34 @@ class HardwareDataplane:
     def _window_aligned(self, base: int, b: int) -> bool:
         return _wire_window_aligned(self.cfg, base, b)
 
+    # -- ring reclamation (DESIGN.md §9) -------------------------------------
+    def enable_reclamation(self) -> None:
+        """Switch from silent overwrite-on-wrap to watermark-gated rings:
+        sequencing past ``reclaimed + N`` raises at the door (and the device
+        permit gate refuses the lanes) until a snapshot drain advances the
+        watermark via ``set_reclaimed``."""
+        if self.reclaimed_host is None:
+            self.reclaimed_host = 0
+
+    def set_reclaimed(self, upto: int) -> None:
+        """Advance the reclamation watermark: instances below ``upto`` have
+        been drained to a snapshot and their ring slots may be re-used."""
+        if self.reclaimed_host is None:
+            raise ValueError("reclamation is not enabled on this dataplane")
+        if not self.reclaimed_host <= upto <= self._next_inst_host:
+            raise ValueError(
+                f"reclaim watermark {upto} outside "
+                f"[{self.reclaimed_host}, {self._next_inst_host}]"
+            )
+        self.reclaimed_host = upto
+
+    def _guard_capacity(self, base: int, b: int) -> None:
+        if self.reclaimed_host is None:
+            return
+        boundary = self.reclaimed_host + self.cfg.n_instances
+        if base + b > boundary:
+            raise RingOverflowError(0, base, b, boundary)
+
     # -- fused fast path: whole Phase-2 round in ONE device program ----------
     def pipeline(self, values: np.ndarray, active: np.ndarray):
         """One dispatch: sequence + all acceptor votes + quorum + dedup.
@@ -129,9 +163,10 @@ class HardwareDataplane:
         value)`` where ``fresh`` masks non-duplicate deliveries.
         """
         b = values.shape[0]
+        self._guard_capacity(self._next_inst_host, b)
         use_k = self.use_kernels and self._window_aligned(self._next_inst_host, b)
         fn = self._fused_k if use_k else self._fused
-        self.cstate, self.stack, self.lstate, fresh, inst, _win, value = fn(
+        args = [
             self.cstate,
             self.stack,
             self.lstate,
@@ -139,6 +174,13 @@ class HardwareDataplane:
             jnp.asarray(active),
             self.alive_mask,
             self.cfg.quorum,
+        ]
+        if self.reclaimed_host is not None:
+            args.append(
+                jnp.int32(self.reclaimed_host + self.cfg.n_instances)
+            )
+        self.cstate, self.stack, self.lstate, fresh, inst, _win, value = fn(
+            *args
         )
         self._next_inst_host += b
         return np.asarray(fresh), np.asarray(inst), np.asarray(value)
@@ -151,8 +193,19 @@ class HardwareDataplane:
         self.alive[aid] = True
         self.alive_mask = self.alive_mask.at[aid].set(True)
 
+    def wipe_acceptor(self, aid: int) -> None:
+        """Model a crash WITH state loss: zero the acceptor's register file
+        (its BRAM), unlike ``kill_acceptor`` which freezes it intact.  The
+        revival path rebuilds from snapshot + live ring suffix
+        (``core.failover.restore_acceptor``, DESIGN.md §9)."""
+        fresh = AcceptorState.init(self.cfg.n_instances, self.cfg.value_words)
+        self.stack = jax.tree_util.tree_map(
+            lambda s, f: s.at[aid].set(f), self.stack, fresh
+        )
+
     # -- staged path (votes surface as messages) -----------------------------
     def sequence(self, values: np.ndarray, active: np.ndarray) -> MsgBatch:
+        self._guard_capacity(self._next_inst_host, values.shape[0])
         self._seq_base = self._next_inst_host
         self.cstate, p2a = self._seq(
             self.cstate, jnp.asarray(values), jnp.asarray(active)
@@ -290,6 +343,9 @@ class MultiGroupDataplane:
         # kernel path's alignment/lockstep decisions cost no device sync
         self.next_inst_host: List[int] = [0] * g
         self.crnd_host: List[int] = [0] * g
+        # per-group ring reclamation watermarks (DESIGN.md §9);
+        # None = legacy silent overwrite-on-wrap
+        self.reclaimed_host: Optional[List[int]] = None
         self.last_gb: Optional[int] = None   # fold width of the last dispatch
         if use_kernels:
             from repro.kernels import ops as kops
@@ -316,6 +372,45 @@ class MultiGroupDataplane:
 
     def _window_aligned(self, base: int, b: int) -> bool:
         return _wire_window_aligned(self.cfg, base, b)
+
+    # -- ring reclamation (DESIGN.md §9) -------------------------------------
+    def enable_reclamation(self) -> None:
+        """Per-group watermark-gated rings (see ``HardwareDataplane``)."""
+        if self.reclaimed_host is None:
+            self.reclaimed_host = [0] * self.cfg.n_groups
+
+    def set_reclaimed(self, gid: int, upto: int) -> None:
+        """Advance group ``gid``'s reclamation watermark after a snapshot
+        drain of instances below ``upto``."""
+        self._check_gid(gid)
+        if self.reclaimed_host is None:
+            raise ValueError("reclamation is not enabled on this dataplane")
+        if not self.reclaimed_host[gid] <= upto <= self.next_inst_host[gid]:
+            raise ValueError(
+                f"reclaim watermark {upto} outside "
+                f"[{self.reclaimed_host[gid]}, {self.next_inst_host[gid]}] "
+                f"(group {gid})"
+            )
+        self.reclaimed_host[gid] = upto
+
+    def _reclaim_limits(self) -> Optional[jax.Array]:
+        """int32[G] first-refused-instance vector, or None when disabled."""
+        if self.reclaimed_host is None:
+            return None
+        return jnp.asarray(
+            np.asarray(self.reclaimed_host, np.int32) + self.cfg.n_instances
+        )
+
+    def _guard_capacity(self, gids, b: int) -> None:
+        if self.reclaimed_host is None:
+            return
+        n = self.cfg.n_instances
+        for gid in gids:
+            boundary = self.reclaimed_host[gid] + n
+            if self.next_inst_host[gid] + b > boundary:
+                raise RingOverflowError(
+                    gid, self.next_inst_host[gid], b, boundary
+                )
 
     # -- shared pre-dispatch plan (the parity contract between this class
     # and its sharded subclass: both MUST resolve a round identically) ------
@@ -386,6 +481,10 @@ class MultiGroupDataplane:
         enabled, use_k, gb = self._plan_round(b, enabled)
         if not any(enabled):
             return self._empty_round(g, b)
+        self._guard_capacity(
+            [gid for gid in range(g) if enabled[gid]], b
+        )
+        lim = self._reclaim_limits()
         en = jnp.asarray(enabled)
         if use_k:
             # the kernel takes the membership mask itself (enabled-mask
@@ -395,7 +494,10 @@ class MultiGroupDataplane:
                 self._fused_k,
                 group_block=gb,
                 enabled=en.astype(jnp.int32),
+                reclaim_limit=lim,
             )
+        elif lim is not None:
+            fn = functools.partial(self._fused, reclaim_limit=lim)
         else:
             fn = self._fused
         cs = self.cstate
@@ -464,6 +566,8 @@ class MultiGroupDataplane:
         gids, member, use_k, inst = self._cohort_prologue(gids, values)
         g = self.cfg.n_groups
         be = values.shape[1]
+        self._guard_capacity(gids, be)
+        lim = self._reclaim_limits()
         marks = self.next_inst_host
         # the compact mapping is the dispatch plan whether or not the
         # kernel executes it; last_gb reports its fold width on both
@@ -494,6 +598,7 @@ class MultiGroupDataplane:
                 self.cfg.quorum,
                 jnp.asarray(kvals),
                 en,
+                reclaim_limit=lim,
                 group_block=gb,
             )
             kfresh, kvalue = np.asarray(kfresh), np.asarray(kvalue)
@@ -518,6 +623,7 @@ class MultiGroupDataplane:
                 jnp.asarray(act_f),
                 self.alive_mask,
                 self.cfg.quorum,
+                reclaim_limit=lim,
             )
             ffresh, fvalue = np.asarray(ffresh), np.asarray(fvalue)
             fresh, value = ffresh[gids], fvalue[gids]
@@ -565,6 +671,16 @@ class MultiGroupDataplane:
         self._check_gid(gid)
         self.alive[gid][aid] = True
         self.alive_mask = self.alive_mask.at[gid, aid].set(True)
+
+    def wipe_acceptor(self, gid: int, aid: int) -> None:
+        """Crash WITH state loss: zero one acceptor's register rows of one
+        group (its BRAM); revival rebuilds from snapshot + live ring suffix
+        (``core.failover.restore_acceptor``, DESIGN.md §9)."""
+        self._check_gid(gid)
+        fresh = AcceptorState.init(self.cfg.n_instances, self.cfg.value_words)
+        self.stack = jax.tree_util.tree_map(
+            lambda s, f: s.at[gid, aid].set(f), self.stack, fresh
+        )
 
     def freeze_group(self, gid: int) -> None:
         """Park a group's hardware round at NO_ROUND while a software
@@ -650,6 +766,28 @@ class MultiGroupDataplane:
         # fresh sequencer: watermark 0, round 0 (restore_group also resyncs
         # the device/host scalar mirrors, polymorphically per subclass)
         self.restore_group(gid, 0, 0)
+        if self.reclaimed_host is not None:
+            self.reclaimed_host[gid] = 0
+        return gid
+
+    def adopt_group(self, watermark: int) -> int:
+        """Claim a free slot for a tenant bootstrapping from a transferred
+        snapshot (vertical-Paxos state transfer, DESIGN.md §9): the slot's
+        rings are zeroed and both the sequencer watermark and the
+        reclamation watermark start at the snapshot's — the history below
+        it lives in the ``SnapshotStore``; instances below the watermark
+        are never proposed again.  Requires reclamation to be enabled
+        (without it a wrapped snapshot watermark has no meaning).  Returns
+        the claimed gid.  On the kernel path the sequencer realigns up to
+        the next block boundary — the gap instances are permanent NOP
+        holes, exactly as in ``restore_group``."""
+        if self.reclaimed_host is None:
+            raise ValueError("adopt_group requires reclamation enabled")
+        if watermark < 0:
+            raise ValueError(f"negative snapshot watermark {watermark}")
+        gid = self.create_group()
+        self.restore_group(gid, watermark, 0)
+        self.reclaimed_host[gid] = watermark
         return gid
 
     def retire_group(self, gid: int) -> List[Tuple[int, bytes]]:
@@ -738,6 +876,15 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         # 1-device mesh this is the parent's full-service fold
         return self.groups_per_shard
 
+    def _reclaim_limits_np(self) -> Optional[np.ndarray]:
+        # host-authoritative scalar control state, replicated into the
+        # sharded dispatch like the watermark/round vectors (DESIGN.md §9)
+        if self.reclaimed_host is None:
+            return None
+        return (
+            np.asarray(self.reclaimed_host, np.int32) + self.cfg.n_instances
+        )
+
     # -- placement introspection (consumed by serve.ConsensusService) --------
     def shard_of_group(self, gid: int) -> int:
         """Mesh shard owning group ``gid`` (contiguous-slab placement)."""
@@ -788,6 +935,9 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         enabled, use_k, gb = self._plan_round(b, enabled)
         if not any(enabled):
             return self._empty_round(g, b)
+        self._guard_capacity(
+            [gid for gid in range(g) if enabled[gid]], b
+        )
         plan_gb = gb               # reported engine-agnostically (last_gb)
         if not use_k:
             gb = 1
@@ -807,6 +957,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
             self.lstate,
             jnp.asarray(values),
             jnp.asarray(active),
+            reclaim_limit=self._reclaim_limits_np(),
         )
         for gid in range(g):
             if enabled[gid]:
@@ -833,6 +984,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         gids, member, use_k, inst = self._cohort_prologue(gids, values)
         g = self.cfg.n_groups
         be = values.shape[1]
+        self._guard_capacity(gids, be)
         marks = self.next_inst_host
         # full-width fold over the per-shard slab is this dataplane's
         # dispatch plan; reported on both engines (the jnp branch ignores
@@ -857,6 +1009,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
             self.lstate,
             jnp.asarray(vals_f),
             jnp.asarray(act_f),
+            reclaim_limit=self._reclaim_limits_np(),
         )
         fresh, value = np.asarray(fresh)[gids], np.asarray(value)[gids]
         for gid in gids:
@@ -923,6 +1076,7 @@ class PaxosContext:
         n_learners: int = 1,
         fused: bool = False,
         mesh=None,
+        snapshots: bool = False,
     ):
         self.cfg = cfg or PaxosConfig()
         self.deliver_cb = deliver
@@ -998,6 +1152,22 @@ class PaxosContext:
         self._next_client_seq_g = [0] * self.n_groups
         self._next_epoch = 1                      # round-allocator epochs
         self._softco: Optional[SoftCoordinator] = None  # failover coordinator
+        # snapshot/compaction subsystem (DESIGN.md §9): when enabled the
+        # rings are watermark-gated (no silent overwrite-on-wrap) and
+        # ``snapshot_group`` drains the delivered prefix into the store;
+        # ``full_group_log`` stitches store prefix + live log uniformly
+        self.snapshots: Optional[SnapshotStore] = None
+        if snapshots:
+            if not self.fused:
+                # the drain source is the device learner ring, which only the
+                # fused wire path maintains; the staged path's software
+                # learners have no ring to reclaim
+                raise ValueError(
+                    "snapshots require the fused wire path "
+                    "(fused=True, or any grouped context)"
+                )
+            self.snapshots = SnapshotStore()
+            self.hw.enable_reclamation()
         self.stats = {"submitted": 0, "delivered": 0, "retransmits": 0}
 
     # -- paper API -----------------------------------------------------------
@@ -1323,6 +1493,123 @@ class PaxosContext:
         head = np.array([seq, len(payload)], np.int32).tobytes()
         return np.frombuffer((head + payload).ljust(nbytes, b"\x00"), "<i4").copy()
 
+    # -- snapshot / compaction (DESIGN.md §9) --------------------------------
+    def _require_snapshots(self) -> SnapshotStore:
+        if self.snapshots is None:
+            raise ValueError(
+                "snapshots are not enabled on this context "
+                "(construct with snapshots=True)"
+            )
+        return self.snapshots
+
+    def full_group_log(self, gid: int = 0) -> List[Tuple[int, bytes]]:
+        """The group's complete delivery history: compacted snapshot prefix
+        (if any) stitched before the live ``group_log`` — the ONE read that
+        is uniform in steady state, at retirement, and after restore."""
+        if self.snapshots is None:
+            return self.group_log[gid]
+        return self.snapshots.log_prefix(gid) + self.group_log[gid]
+
+    def snapshot_group(
+        self, gid: int = 0, upto: Optional[int] = None
+    ) -> GroupSnapshot:
+        """Drain group ``gid``'s decided ring prefix below ``upto`` (default:
+        its sequencer watermark — everything) into the ``SnapshotStore``,
+        seal it, move the host-log prefix into the store (compaction), and
+        advance the reclamation watermark so the drained ring slots may be
+        re-sequenced.  Returns the group's sealed ``GroupSnapshot``.
+        """
+        store = self._require_snapshots()
+        self._check_group(gid)
+        hw = self.hw
+        if self.grouped:
+            seq_mark = hw.next_inst_host[gid]
+            ld = np.asarray(hw.lstate.delivered[gid])
+            li = np.asarray(hw.lstate.inst[gid])
+            lv = np.asarray(hw.lstate.value[gid])
+        else:
+            seq_mark = hw._next_inst_host
+            ld = np.asarray(hw.lstate.delivered)
+            li = np.asarray(hw.lstate.inst)
+            lv = np.asarray(hw.lstate.value)
+        upto = seq_mark if upto is None else upto
+        wm = store.watermark(gid)
+        if not wm <= upto <= seq_mark:
+            raise ValueError(
+                f"snapshot upto={upto} outside [{wm}, {seq_mark}] "
+                f"(group {gid})"
+            )
+        # decided entries in [wm, upto), ascending by instance — the raw
+        # ring words (NOP fillers included: the seal covers device history)
+        slots = np.nonzero((ld != 0) & (li >= wm) & (li < upto))[0]
+        order = slots[np.argsort(li[slots], kind="stable")]
+        store.absorb(gid, li[order], lv[order], upto)
+        # compaction: move the host log's leading run below the watermark
+        # into the store (list order preserved exactly — stitched reads are
+        # bit-identical to the unsplit log)
+        log = self.group_log[gid]
+        cut = 0
+        while cut < len(log) and log[cut][0] < upto:
+            cut += 1
+        store.absorb_log(gid, log[:cut])
+        self.group_log[gid] = log[cut:]
+        if self.grouped:
+            hw.set_reclaimed(gid, upto)
+        else:
+            hw.set_reclaimed(upto)
+        return store.snapshot(gid)
+
+    def crash_acceptor(self, aid: int, group: int = 0) -> None:
+        """Crash one group member WITH state loss: liveness drops AND its
+        acceptor register file (BRAM) is zeroed — unlike ``kill_acceptor``,
+        which models a frozen-but-intact switch.  Revive with
+        ``restore_acceptor`` (snapshot + live ring suffix bootstrap)."""
+        self._check_group(group)
+        if self.grouped:
+            self.hw.kill_acceptor(group, aid)
+            self.hw.wipe_acceptor(group, aid)
+        else:
+            self.hw.kill_acceptor(aid)
+            self.hw.wipe_acceptor(aid)
+
+    def restore_acceptor(self, aid: int, group: int = 0) -> int:
+        """Revive a crashed group member by state transfer (DESIGN.md §9):
+        instances below the snapshot watermark are covered by the sealed
+        snapshot (never re-proposed), and the live ring suffix's decided
+        instances are adopted from the learner ring — they are decided, so
+        claiming votes for them at the current round is safe (the vertical-
+        Paxos transfer NetChain motivates).  Returns the number of adopted
+        ring slots."""
+        from .failover import restore_acceptor as _restore
+
+        self._check_group(group)
+        wm = self.snapshots.watermark(group) if self.snapshots else 0
+        if self.grouped:
+            return _restore(self.hw, aid, gid=group, watermark=wm)
+        return _restore(self.hw, aid, watermark=wm)
+
+    def adopt_group(
+        self,
+        snap: GroupSnapshot,
+        log_prefix: Optional[List[Tuple[int, bytes]]] = None,
+    ) -> int:
+        """Admit a tenant bootstrapping from a transferred snapshot: claims
+        a free slot whose sequencer and reclamation watermarks start at
+        ``snap.watermark``, and seeds the ``SnapshotStore`` from the
+        transfer — verifying its seal (divergence/corruption check) before
+        trusting it.  ``log_prefix`` seeds the stitched ``delivered()``
+        history.  Returns the new group id."""
+        self._require_grouped()
+        store = self._require_snapshots()
+        gid = self.hw.adopt_group(int(snap.watermark))
+        self.learned_g[gid] = {}
+        self._partial_g[gid] = {}
+        self.group_log[gid] = []
+        self._next_client_seq_g[gid] = 0
+        store.reset_group(gid)
+        store.seed(gid, snap, log_prefix)
+        return gid
+
     # -- dynamic membership (DESIGN.md §7) -----------------------------------
     def _require_grouped(self) -> None:
         if not self.grouped:
@@ -1348,6 +1635,8 @@ class PaxosContext:
         self._partial_g[gid] = {}
         self.group_log[gid] = []
         self._next_client_seq_g[gid] = 0
+        if self.snapshots is not None:
+            self.snapshots.reset_group(gid)
         return gid
 
     def retire_group(self, gid: int) -> List[Tuple[int, bytes]]:
@@ -1358,7 +1647,9 @@ class PaxosContext:
         with the tenant gone there is no group to decide them — and their
         dedup keys are purged so a future tenant reusing the slot starts
         from a clean (group, seq) space.  Host scalars only: no other
-        group's state is touched."""
+        group's state is touched.  With snapshots enabled the returned log
+        is the STITCHED history (compacted prefix + live log) — retirement
+        and steady state read the same way."""
         self._require_grouped()
         self.hw.retire_group(gid)          # raises unless live
         self._softco_g.pop(gid, None)
@@ -1381,7 +1672,7 @@ class PaxosContext:
             for k in self._delivered_seqs
             if not (isinstance(k, tuple) and k[0] == gid)
         }
-        return self.group_log[gid]
+        return self.full_group_log(gid)
 
     # -- failover ------------------------------------------------------------
     def fail_coordinator(

@@ -348,6 +348,7 @@ def fused_round(
     active: jax.Array,    # bool[B]
     alive: jax.Array,     # bool[A]
     quorum: int | jax.Array,
+    reclaim_limit: jax.Array | None = None,  # int32[]; None = no reclamation
 ) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
            jax.Array, jax.Array, jax.Array, jax.Array]:
     """The CAANS wire path as one jnp program: coordinator sequencing, the
@@ -356,10 +357,16 @@ def fused_round(
 
     This is the semantic oracle (and CPU fallback) for the Pallas megakernel
     ``repro.kernels.wirepath.wirepath_round``; the two must agree bit-for-bit
-    (DESIGN.md §3).  Returns
+    (DESIGN.md §3).  ``reclaim_limit`` is the first instance the ring may NOT
+    sequence into (snapshot watermark + N, DESIGN.md §9): lanes at or past it
+    are presented at NO_ROUND so every acceptor rejects them — the oracle of
+    the kernel's reclamation permit gate.  Returns
     ``(cstate', stack', lstate', fresh[B], inst[B], win_vrnd[B], value[B,V])``.
     """
     cstate, p2a = coordinator_sequence(cstate, values, active)
+    if reclaim_limit is not None:
+        permit = p2a.inst < jnp.asarray(reclaim_limit, jnp.int32)
+        p2a = p2a.replace(rnd=jnp.where(permit, p2a.rnd, NO_ROUND))
     stack, votes = acceptor_phase2_all(stack, p2a, alive)
     deliver, inst, win, value = learner_quorum(
         votes.msgtype, votes.inst, votes.vrnd, votes.value, quorum
@@ -379,6 +386,7 @@ def multigroup_fused_round(
     active: jax.Array,          # bool[G, B]
     alive: jax.Array,           # bool[G, A]
     quorum: int | jax.Array,
+    reclaim_limit: jax.Array | None = None,  # int32[G]; None = no reclamation
 ) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
            jax.Array, jax.Array, jax.Array, jax.Array]:
     """``fused_round`` vmapped over a leading group axis: G device-resident
@@ -389,10 +397,16 @@ def multigroup_fused_round(
     this is bit-identical to running ``fused_round`` per group in a loop.
     It is the semantic oracle (and CPU fallback) for the Pallas megakernel
     ``repro.kernels.wirepath.multigroup_wirepath_round`` (DESIGN.md §5).
+    ``reclaim_limit`` carries each group's reclamation limit (DESIGN.md §9).
     Returns the ``fused_round`` tuple with every output grown a (G,) axis.
     """
-    return jax.vmap(fused_round, in_axes=(0, 0, 0, 0, 0, 0, None))(
-        cstate, stack, lstate, values, active, alive, quorum
+    if reclaim_limit is None:
+        return jax.vmap(fused_round, in_axes=(0, 0, 0, 0, 0, 0, None))(
+            cstate, stack, lstate, values, active, alive, quorum
+        )
+    return jax.vmap(fused_round, in_axes=(0, 0, 0, 0, 0, 0, None, 0))(
+        cstate, stack, lstate, values, active, alive, quorum,
+        jnp.asarray(reclaim_limit, jnp.int32),
     )
 
 

@@ -214,10 +214,10 @@ def make_sharded_multigroup_round(
     offsets = jnp.arange(n_sh, dtype=jnp.int32) * gl
     q = quorum
 
-    def local(ni, cr, en, alive, off, stack, lstate, values, active):
+    def local(ni, cr, en, alive, lim, off, stack, lstate, values, active):
         # off is this shard's (1,)-slice of the offset vector: the global id
-        # of the slab's first group.  Scalar vectors stay global; slabs are
-        # local.
+        # of the slab's first group.  Scalar vectors stay global (including
+        # the replicated reclaim-limit vector, DESIGN.md §9); slabs are local.
         ni_l = jax.lax.dynamic_slice(ni, (off[0],), (gl,))
         if use_kernels:
             from repro.kernels import ops as kops
@@ -227,7 +227,7 @@ def make_sharded_multigroup_round(
             outs = kwp.shard_slab_round(
                 off[0], ni, cr, jnp.int32(q), alive,
                 stack.rnd, stack.vrnd, stack.value,
-                lstate.delivered, lstate.inst, lstate.value, values, en,
+                lstate.delivered, lstate.inst, lstate.value, values, en, lim,
                 group_block=group_block, interpret=kops.INTERPRET,
             )
             stack = AcceptorState(*outs[:3])
@@ -240,10 +240,11 @@ def make_sharded_multigroup_round(
             al_l = jax.lax.dynamic_slice(
                 alive, (off[0], 0), (gl, alive.shape[1])
             )
+            lim_l = jax.lax.dynamic_slice(lim, (off[0],), (gl,))
             cs = CoordinatorState(next_inst=ni_l, crnd=cr_l)
             _c, stack, lstate, fresh, _i, win, value = (
                 batched.multigroup_fused_round(
-                    cs, stack, lstate, values, active, al_l != 0, q
+                    cs, stack, lstate, values, active, al_l != 0, q, lim_l
                 )
             )
         b = values.shape[1]
@@ -259,6 +260,7 @@ def make_sharded_multigroup_round(
             P(),                                   # crnd (replicated)
             P(),                                   # enabled (replicated)
             P(),                                   # alive (replicated)
+            P(),                                   # reclaim limit (replicated)
             sheet,                                 # offsets
             AcceptorState(sheet, sheet, sheet),    # acceptor slabs
             batched.LearnerState(sheet, sheet, sheet),  # learner slabs
@@ -275,12 +277,20 @@ def make_sharded_multigroup_round(
         ),
     )
 
-    def step(next_inst, crnd, enabled, alive, stack, lstate, values, active):
+    def step(next_inst, crnd, enabled, alive, stack, lstate, values, active,
+             reclaim_limit=None):
+        if reclaim_limit is None:
+            # full permit: int32.max is unreachable, every lane passes the
+            # reclamation gate (legacy overwrite-on-wrap mode)
+            lim = jnp.full((n_groups,), jnp.iinfo(jnp.int32).max, jnp.int32)
+        else:
+            lim = jnp.asarray(reclaim_limit, jnp.int32).reshape((n_groups,))
         return fn(
             jnp.asarray(next_inst, jnp.int32).reshape((n_groups,)),
             jnp.asarray(crnd, jnp.int32).reshape((n_groups,)),
             jnp.asarray(enabled, jnp.int32).reshape((n_groups,)),
             jnp.asarray(alive, jnp.int32),
+            lim,
             offsets,
             stack,
             lstate,

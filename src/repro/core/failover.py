@@ -1,4 +1,4 @@
-"""Coordinator failover (paper §3.1 + §6.4).
+"""Coordinator failover (paper §3.1 + §6.4) and acceptor state restore.
 
 When the hardware coordinator fails, a software coordinator takes over.  The
 paper's procedure: the replacement needs only an *estimate* of the last
@@ -12,16 +12,23 @@ over the uncertainty window.  Any instance found voted is re-proposed with
 its discovered value (Paxos's value-choice rule); untouched instances become
 available for fresh proposals.  This both "catches up" the sequencer and
 preserves agreement for already-decided instances.
+
+``restore_acceptor`` is the complementary *acceptor*-side recovery
+(DESIGN.md §9): a group member that crashed WITH state loss (its register
+file / BRAM wiped) is rebuilt from snapshot + live ring suffix before
+rejoining the quorum — the vertical-Paxos-style state transfer NetChain
+pairs with in-network consensus.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .types import MSG_NOP, MSG_P1A, MSG_P2A, MsgBatch
+from .types import MSG_NOP, MSG_P1A, MSG_P2A, AcceptorState, MsgBatch
 
 NO_ROUND = -1
 
@@ -161,3 +168,86 @@ def takeover_group(
         window=window,
         quorum=quorum,
     )
+
+
+# -- acceptor state restore (snapshot + live ring suffix, DESIGN.md §9) ------
+
+def rebuild_acceptor_rows(
+    ld: np.ndarray,
+    li: np.ndarray,
+    lv: np.ndarray,
+    crnd: int,
+    lo: int,
+    hi: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Reconstruct one acceptor's ``(rnd, vrnd, value)`` register rows from
+    the learner ring's decided live suffix.
+
+    Every decided instance in ``[lo, hi)`` is adopted as a vote at the
+    current round (decided values are frozen by quorum, so re-voting them at
+    any round is safe — the vertical-Paxos state-transfer argument); every
+    other slot is reborn fresh-zero.  Instances below ``lo`` live in the
+    snapshot and their ring slots are reclaimable, so the rebuilt acceptor
+    never needs them.
+    """
+    n = ld.shape[0]
+    vwords = lv.shape[1]
+    adopt_rnd = max(int(crnd), 0)
+    rnd = np.zeros((n,), np.int32)
+    vrnd = np.full((n,), NO_ROUND, np.int32)
+    val = np.zeros((n, vwords), np.int32)
+    sel = (ld != 0) & (li >= lo) & (li < hi)
+    slots = np.nonzero(sel)[0]
+    rnd[slots] = adopt_rnd
+    vrnd[slots] = adopt_rnd
+    val[slots] = lv[slots]
+    return rnd, vrnd, val
+
+
+def restore_acceptor(
+    hw,                      # HardwareDataplane or MultiGroupDataplane
+    aid: int,
+    *,
+    gid: Optional[int] = None,
+    watermark: int = 0,
+) -> int:
+    """Rebuild a wiped acceptor from snapshot watermark + live ring suffix
+    and rejoin it to the quorum.
+
+    The snapshot covers everything below ``watermark`` (those ring slots are
+    reclaimed and must stay untouched on the rebuilt acceptor too — fresh
+    zeros, exactly like a new ring generation).  The live suffix
+    ``[watermark, next_inst)`` is adopted from the *learner* ring: only
+    decided instances are transferred, undecided in-flight slots come back
+    fresh and are re-decided by the surviving quorum's normal protocol.
+    Returns the number of adopted (decided) instances.
+    """
+    if gid is not None:
+        ld = np.asarray(hw.lstate.delivered[gid])
+        li = np.asarray(hw.lstate.inst[gid])
+        lv = np.asarray(hw.lstate.value[gid])
+        crnd = int(hw.crnd_host[gid])
+        hi = int(hw.next_inst_host[gid])
+        rnd, vrnd, val = rebuild_acceptor_rows(ld, li, lv, crnd, watermark, hi)
+        row = AcceptorState(
+            rnd=jnp.asarray(rnd), vrnd=jnp.asarray(vrnd), value=jnp.asarray(val)
+        )
+        hw.stack = jax.tree_util.tree_map(
+            lambda s, r: s.at[gid, aid].set(r), hw.stack, row
+        )
+        hw.revive_acceptor(gid, aid)
+    else:
+        ld = np.asarray(hw.lstate.delivered)
+        li = np.asarray(hw.lstate.inst)
+        lv = np.asarray(hw.lstate.value)
+        crnd = int(jax.device_get(jnp.asarray(hw.cstate.crnd)))
+        hi = int(hw._next_inst_host)
+        rnd, vrnd, val = rebuild_acceptor_rows(ld, li, lv, crnd, watermark, hi)
+        row = AcceptorState(
+            rnd=jnp.asarray(rnd), vrnd=jnp.asarray(vrnd), value=jnp.asarray(val)
+        )
+        hw.stack = jax.tree_util.tree_map(
+            lambda s, r: s.at[aid].set(r), hw.stack, row
+        )
+        hw.revive_acceptor(aid)
+    return int((vrnd != NO_ROUND).sum())

@@ -101,6 +101,7 @@ def fused_round(
     active: jax.Array,
     alive: jax.Array,
     quorum: int | jax.Array,
+    reclaim_limit: jax.Array | None = None,
 ) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
            jax.Array, jax.Array, jax.Array, jax.Array]:
     """Kernel-backed drop-in for ``batched.fused_round`` — the whole Phase-2
@@ -111,6 +112,8 @@ def fused_round(
     active mask only matters to the application layer (which discards fillers
     by value).  Precondition: ``cstate.next_inst`` is block-aligned — the
     invariant ``HardwareDataplane`` maintains (and checks host-side).
+    ``reclaim_limit`` is the first instance the ring may NOT sequence into
+    (snapshot watermark + N, DESIGN.md §9); ``None`` = no reclamation.
     """
     del active  # sequenced fillers vote like P2As; see docstring
     b = values.shape[0]
@@ -127,6 +130,7 @@ def fused_round(
             lstate.inst,
             lstate.value,
             values,
+            reclaim_limit,
             interpret=INTERPRET,
         )
     )
@@ -154,6 +158,7 @@ def multigroup_fused_round(
     alive: jax.Array,           # bool[G, A]
     quorum: int | jax.Array,
     enabled: jax.Array | None = None,
+    reclaim_limit: jax.Array | None = None,  # int32[G]; None = no reclamation
     *,
     group_block: int = 1,
 ) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
@@ -186,6 +191,7 @@ def multigroup_fused_round(
             lstate.value,
             values,
             None if enabled is None else jnp.asarray(enabled, jnp.int32),
+            reclaim_limit,
             group_block=group_block,
             interpret=INTERPRET,
         )
@@ -215,6 +221,7 @@ def cohort_fused_round(
     quorum: int | jax.Array,
     values: jax.Array,          # int32[NB*GB, B, V]  compact cohort burst
     enabled: jax.Array,         # int32[G]  cohort membership mask
+    reclaim_limit: jax.Array | None = None,  # int32[G]; None = no reclamation
     *,
     group_block: int = 1,
 ) -> Tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
@@ -242,6 +249,7 @@ def cohort_fused_round(
             lstate.value,
             values,
             jnp.asarray(enabled, jnp.int32),
+            reclaim_limit,
             group_block=group_block,
             interpret=INTERPRET,
         )

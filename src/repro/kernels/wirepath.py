@@ -103,6 +103,7 @@ def _mg_wirepath_kernel(
     crnd_ref,       # int32[G]     per-group coordinator round
     q_ref,          # int32[1]     quorum (f+1)
     alive_ref,      # int32[G, A]  per-group runtime liveness mask
+    lim_ref,        # int32[G]     per-group reclaim limit (first refused inst)
     # inputs (VMEM tiles)
     values_ref,     # int32[GB, BB, V]     burst values
     st_rnd_ref,     # int32[GB, A, BB]     acceptor ring blocks (aliased out)
@@ -114,6 +115,7 @@ def _mg_wirepath_kernel(
     niv_ref,        # int32[GB]     VMEM mirror of ni_ref's block
     crndv_ref,      # int32[GB]     VMEM mirror of crnd_ref's block
     alivev_ref,     # int32[GB, A]  VMEM mirror of alive_ref's block
+    limv_ref,       # int32[GB]     VMEM mirror of lim_ref's block
     # outputs
     o_rnd_ref,      # int32[GB, A, BB]
     o_vrnd_ref,     # int32[GB, A, BB]
@@ -125,22 +127,34 @@ def _mg_wirepath_kernel(
     win_ref,        # int32[GB, BB]  out: winning vrnd (NO_ROUND if none)
     value_ref,      # int32[GB, BB, V]  out: decided value
 ):
-    del ni_ref, crnd_ref, alive_ref  # index-map inputs; body uses the mirrors
+    # index-map inputs; body uses the mirrors
+    del ni_ref, crnd_ref, alive_ref, lim_ref
     i = pl.program_id(1)
     _gb, _a, bb = st_rnd_ref.shape
 
     ni_g = niv_ref[...]                                            # (GB,)
     crnd_g = crndv_ref[...]                                        # (GB,)
     alive = alivev_ref[...] != 0                                   # (GB, A)
+    lim_g = limv_ref[...]                                          # (GB,)
 
     crnd = crnd_g[:, None, None]                                   # (GB, 1, 1)
     mval = values_ref[...]                                         # (GB, BB, V)
+
+    # Reclamation permit (DESIGN.md §9): a lane at or past the group's
+    # reclaim limit (snapshot watermark + N) would land in a ring slot whose
+    # decision has not been drained yet — acceptors refuse it wholesale, so
+    # the slot survives bit-unchanged and the host sees backpressure instead
+    # of a silent dedup-state overwrite.
+    inst = ni_g[:, None] + i * bb + _lane_iota(bb)[None, :]        # (GB, BB)
+    permit = inst < lim_g[:, None]                                 # (GB, BB)
 
     # -- every group's acceptor array votes (Phase 2A -> 2B), all at once ----
     cur_rnd = st_rnd_ref[...]                                      # (GB, A, BB)
     cur_vrnd = st_vrnd_ref[...]
     cur_val = st_val_ref[...]
-    accept = alive[:, :, None] & (crnd >= cur_rnd)                 # (GB, A, BB)
+    accept = (
+        alive[:, :, None] & (crnd >= cur_rnd) & permit[:, None, :]
+    )                                                              # (GB, A, BB)
 
     o_rnd_ref[...] = jnp.where(accept, crnd, cur_rnd)
     o_vrnd_ref[...] = jnp.where(accept, crnd, cur_vrnd)
@@ -158,7 +172,6 @@ def _mg_wirepath_kernel(
     value = jnp.sum(first.astype(jnp.int32)[..., None] * vote_val, axis=1)
 
     # -- ring dedup (LearnerState), in place, per group ----------------------
-    inst = ni_g[:, None] + i * bb + _lane_iota(bb)[None, :]        # (GB, BB)
     dup = (ldel_ref[...] != 0) & (linst_ref[...] == inst)
     fresh = deliver & ~dup
     o_ldel_ref[...] = ldel_ref[...] | deliver.astype(jnp.int32)
@@ -194,6 +207,7 @@ def cohort_wirepath_round(
     lval: jax.Array,        # int32[G, N, V]
     values: jax.Array,      # int32[NB*GB, B, V]  cohort burst values, compact
     enabled: Optional[jax.Array] = None,  # int32[G] (0/1); None = all enabled
+    limit: Optional[jax.Array] = None,    # int32[G]; None = no reclamation
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
@@ -216,6 +230,13 @@ def cohort_wirepath_round(
     ``enabled`` marks the cohort: non-members inside a selected block ride
     inert — round forced to NO_ROUND, watermark substituted with the
     block's enabled-lockstep base — and are written back bit-unchanged.
+
+    ``limit`` is the per-group reclamation limit (DESIGN.md §9): the first
+    instance the group may NOT sequence into — its snapshot watermark plus
+    the ring capacity N.  Lanes at or past the limit are refused by every
+    acceptor (state written back unchanged, no delivery), surfacing ring
+    exhaustion as backpressure instead of silently overwriting undrained
+    slots.  ``None`` grants a full permit (legacy overwrite-on-wrap mode).
 
     Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
     fresh[NB*GB, B], win_vrnd[NB*GB, B], value[NB*GB, B, V])`` with the
@@ -267,7 +288,7 @@ def cohort_wirepath_round(
         return (gsel_ref[gi], 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
+        num_scalar_prefetch=6,
         grid=grid,
         in_specs=[
             pl.BlockSpec((gb, bb, v), batch3),       # values (compact)
@@ -280,6 +301,7 @@ def cohort_wirepath_round(
             pl.BlockSpec((gb,), group1),             # ni (VMEM mirror)
             pl.BlockSpec((gb,), group1),             # crnd (VMEM mirror)
             pl.BlockSpec((gb, a), group2),           # alive (VMEM mirror)
+            pl.BlockSpec((gb,), group1),             # limit (VMEM mirror)
         ],
         out_specs=[
             pl.BlockSpec((gb, a, bb), stack3),       # st_rnd'
@@ -308,9 +330,9 @@ def cohort_wirepath_round(
         _cohort_wirepath_kernel,
         grid_spec=grid_spec,
         out_shape=out_shapes,
-        # all five state arrays update in place: inputs 6..11 (after the 5
+        # all five state arrays update in place: inputs 7..12 (after the 6
         # scalar-prefetch args) alias outputs 0..5 — device-resident state
-        input_output_aliases={6: 0, 7: 1, 8: 2, 9: 3, 10: 4, 11: 5},
+        input_output_aliases={7: 0, 8: 1, 9: 2, 10: 3, 11: 4, 12: 5},
         interpret=interpret,
     )
     ni = jnp.asarray(next_inst, jnp.int32).reshape((g,))
@@ -335,9 +357,15 @@ def cohort_wirepath_round(
     q = jnp.asarray(quorum, jnp.int32).reshape((1,))
     al = jnp.asarray(alive, jnp.int32).reshape((g, a))
     gs = jnp.asarray(gsel, jnp.int32).reshape((nb,))
+    if limit is None:
+        # full permit: int32.max is an unreachable instance, so every lane
+        # passes the gate (never add N to a watermark here — it overflows)
+        lim = jnp.full((g,), jnp.iinfo(jnp.int32).max, jnp.int32)
+    else:
+        lim = jnp.asarray(limit, jnp.int32).reshape((g,))
     return tuple(
-        fn(gs, ni, cr, q, al, values, st_rnd, st_vrnd, st_val, ldel, linst,
-           lval, ni, cr, al)
+        fn(gs, ni, cr, q, al, lim, values, st_rnd, st_vrnd, st_val, ldel,
+           linst, lval, ni, cr, al, lim)
     )
 
 
@@ -357,6 +385,7 @@ def multigroup_wirepath_round(
     lval: jax.Array,        # int32[G, N, V]
     values: jax.Array,      # int32[G, B, V]   per-group burst values
     enabled: Optional[jax.Array] = None,  # int32[G] (0/1); None = all enabled
+    limit: Optional[jax.Array] = None,    # int32[G]; None = no reclamation
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
@@ -383,7 +412,7 @@ def multigroup_wirepath_round(
     gsel = jnp.arange(g // group_block, dtype=jnp.int32)
     return cohort_wirepath_round(
         gsel, next_inst, crnd, quorum, alive,
-        st_rnd, st_vrnd, st_val, ldel, linst, lval, values, enabled,
+        st_rnd, st_vrnd, st_val, ldel, linst, lval, values, enabled, limit,
         block_b=block_b, group_block=group_block, interpret=interpret,
     )
 
@@ -402,6 +431,7 @@ def shard_slab_round(
     lval: jax.Array,          # int32[Gl, N, V]
     values: jax.Array,        # int32[Gl, B, V]   this shard's burst slab
     enabled: Optional[jax.Array] = None,  # int32[G_global] (0/1) replicated
+    limit: Optional[jax.Array] = None,    # int32[G_global] replicated
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
@@ -436,9 +466,14 @@ def shard_slab_round(
         en = jax.lax.dynamic_slice(
             jnp.asarray(enabled, jnp.int32).reshape((-1,)), (off,), (gl,)
         )
+    lim = None
+    if limit is not None:
+        lim = jax.lax.dynamic_slice(
+            jnp.asarray(limit, jnp.int32).reshape((-1,)), (off,), (gl,)
+        )
     return multigroup_wirepath_round(
         ni, cr, quorum, al,
-        st_rnd, st_vrnd, st_val, ldel, linst, lval, values, en,
+        st_rnd, st_vrnd, st_val, ldel, linst, lval, values, en, lim,
         block_b=block_b, group_block=group_block, interpret=interpret,
     )
 
@@ -456,6 +491,7 @@ def wirepath_round(
     linst: jax.Array,       # int32[N]
     lval: jax.Array,        # int32[N, V]
     values: jax.Array,      # int32[B, V]   burst values
+    limit: Optional[jax.Array] = None,  # int32[]; None = no reclamation
     *,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
@@ -478,6 +514,8 @@ def wirepath_round(
         linst[None],
         lval[None],
         values[None],
+        None,
+        None if limit is None else jnp.asarray(limit, jnp.int32).reshape((1,)),
         block_b=block_b,
         interpret=interpret,
     )

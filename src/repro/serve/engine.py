@@ -247,7 +247,10 @@ class ConsensusService:
         epochs the view is *stitched*: for every distinct (group,
         generation) the session was routed to, the archived pre-retirement
         log (retired generations) or the live group log (the current one),
-        concatenated in epoch order.
+        concatenated in epoch order.  With snapshots enabled the live read
+        is itself stitched — compacted snapshot prefix + live log
+        (``PaxosContext.full_group_log``) — so compaction is invisible to
+        sessions in steady state, not just at retirement.
         """
         seen: set = set()
         out: List[Tuple[int, bytes]] = []
@@ -262,7 +265,7 @@ class ConsensusService:
             if key in self._archived:
                 out.extend(self._archived[key])
             elif gens[gid] == self._gen[gid]:
-                out.extend(self.ctx.group_log[gid])
+                out.extend(self.ctx.full_group_log(gid))
         return out
 
     def group_loads(self) -> List[int]:

@@ -33,6 +33,7 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 from repro.core import PaxosConfig, PaxosContext
+from repro.core.network import FaultSpec, SimNet
 from repro.launch.mesh import make_group_mesh
 
 pytestmark = pytest.mark.slow    # chaos suite: skipped in the fast CI lane
@@ -354,6 +355,266 @@ def test_skewed_load_unsharded(seed, use_kernels):
 @pytest.mark.parametrize("seed", [2, 3])
 def test_skewed_load_sharded(seed, use_kernels):
     run_skewed(seed, g=2, use_kernels=use_kernels, sharded=True, waves=6)
+
+
+# ---------------------------------------------------------------------------
+# Lossy fabric (DESIGN.md §9): keyed faults + membership + snapshot/restore
+# ---------------------------------------------------------------------------
+def _msg_key(dst, msg):
+    """Keyed-fault identity for a fabric message, EXCLUDING the group tag:
+    the multi-group fabric tags submits with the gid while a single-group
+    twin tags 0, so the tag must not reach the fault hash — payloads embed
+    the gid, keeping keys distinct across groups either way."""
+    return tuple(msg[:3])
+
+
+LOSSY = FaultSpec(drop=0.1, dup=0.1, reorder=0.15)
+
+
+def _lossy_schedule(seed: int, g: int, steps: int):
+    """Like ``_schedule`` but with crash (state-loss), acceptor restore and
+    snapshot events mixed in.  Crashed members are distinct from merely
+    dead ones: they come back only via ``restore_acceptor`` (snapshot +
+    live-suffix rebuild), never plain revive."""
+    rng = np.random.default_rng(seed)
+    alive = [[True] * A for _ in range(g)]
+    wiped = [[False] * A for _ in range(g)]
+    live = [True] * g
+    free: list = []
+    ops = []
+    for _ in range(steps):
+        r = rng.random()
+        gid = int(rng.integers(g))
+        if r < 0.36:
+            if live[gid]:
+                ops.append(("submit", gid))
+        elif r < 0.60:
+            ops.append(("pump",))
+        elif r < 0.68:
+            # crash WITH state loss — keep a quorum standing
+            aid = int(rng.integers(A))
+            if live[gid] and alive[gid][aid] and sum(alive[gid]) > QUORUM:
+                alive[gid][aid] = False
+                wiped[gid][aid] = True
+                ops.append(("crash", gid, aid))
+        elif r < 0.78:
+            crashed = [a for a in range(A) if wiped[gid][a]]
+            if live[gid] and crashed:
+                aid = crashed[int(rng.integers(len(crashed)))]
+                alive[gid][aid] = True
+                wiped[gid][aid] = False
+                ops.append(("restoreacc", gid, aid))
+        elif r < 0.88:
+            if live[gid]:
+                ops.append(("snapshot", gid))
+        elif r < 0.94:
+            if live[gid] and sum(live) > 1:
+                live[gid] = False
+                alive[gid] = [True] * A
+                wiped[gid] = [False] * A
+                free.append(gid)
+                ops.append(("retire", gid))
+        else:
+            if free:
+                ngid = min(free)
+                free.remove(ngid)
+                live[ngid] = True
+                ops.append(("create", ngid))
+    for gid in range(g):
+        if not live[gid]:
+            continue
+        for aid in range(A):
+            if wiped[gid][aid]:
+                ops.append(("restoreacc", gid, aid))
+    return ops
+
+
+def run_lossy(
+    seed: int,
+    g: int = 3,
+    use_kernels: bool = False,
+    sharded: bool = False,
+    steps: int = 30,
+) -> None:
+    """A lossy fabric (keyed drop/dup/reorder) under membership churn,
+    acceptor crash/restore and snapshot compaction: the multi-group context
+    must still match G independent twins bit-for-bit.  Keyed fault
+    decisions are a pure function of (seed, message, occurrence), so the
+    same logical submit suffers the same fate on the shared fabric and on
+    its twin's private one, regardless of interleaving.  The ring is sized
+    so dup/retransmit inflation never hits the reclamation boundary — the
+    snapshot events exercise drain/compaction under loss, not capacity."""
+    cfg = PaxosConfig(n_acceptors=A, n_instances=256, batch=8, n_groups=g)
+    cfg1 = PaxosConfig(n_acceptors=A, n_instances=256, batch=8)
+    mesh = make_group_mesh() if sharded else None
+
+    def _net():
+        return SimNet(LOSSY, seed=seed, key_fn=_msg_key)
+
+    def _twin():
+        return PaxosContext(
+            cfg1, use_kernels=use_kernels, fused=True, net=_net(),
+            snapshots=True,
+        )
+
+    mg = PaxosContext(
+        cfg, use_kernels=use_kernels, mesh=mesh, net=_net(), snapshots=True
+    )
+    singles = [_twin() for _ in range(g)]
+    sent = [[] for _ in range(g)]
+    retired = [0] * g
+    for op in _lossy_schedule(seed, g, steps):
+        kind = op[0]
+        if kind == "submit":
+            gid = op[1]
+            p = f"s{len(sent[gid])}g{gid}r{retired[gid]}".encode()
+            sent[gid].append(p)
+            mg.submit(p, group=gid)
+            singles[gid].submit(p)
+        elif kind == "pump":
+            mg.pump()
+            for s in singles:
+                if s is not None:
+                    s.pump()
+        elif kind == "crash":
+            _, gid, aid = op
+            mg.crash_acceptor(aid, group=gid)
+            singles[gid].crash_acceptor(aid)
+        elif kind == "restoreacc":
+            _, gid, aid = op
+            # identical watermarks + identical decided suffixes ⇒ the
+            # rebuilt register rows adopt the same instance set
+            assert mg.restore_acceptor(aid, group=gid) == singles[
+                gid
+            ].restore_acceptor(aid), (seed, gid, aid)
+        elif kind == "snapshot":
+            gid = op[1]
+            snap = mg.snapshot_group(gid)
+            twin_snap = singles[gid].snapshot_group()
+            # equal watermarks must give equal seals (divergence check)
+            assert snap.watermark == twin_snap.watermark, (seed, gid)
+            assert snap.seal == twin_snap.seal, (seed, gid)
+        elif kind == "retire":
+            gid = op[1]
+            log = mg.retire_group(gid)
+            assert log == singles[gid].delivered_log, (seed, gid)
+            singles[gid] = None
+            sent[gid] = []
+            retired[gid] += 1
+        elif kind == "create":
+            gid = op[1]
+            assert mg.create_group() == gid, (seed, gid)
+            singles[gid] = _twin()
+    for _ in range(40):                # outlast retransmit cycles
+        mg.pump()
+        for s in singles:
+            if s is not None:
+                s.pump()
+    for gid in range(g):
+        if singles[gid] is None:
+            assert not mg.hw.live_host[gid]
+            continue
+        assert mg.full_group_log(gid) == singles[gid].delivered_log, (
+            seed, gid,
+        )
+        got = [p for _inst, p in mg.full_group_log(gid)]
+        assert len(got) == len(set(got)), (seed, gid)          # exactly once
+        assert sorted(got) == sorted(sent[gid]), (seed, gid)   # all delivered
+    assert not mg._pending
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_lossy_chaos_deterministic(seed, use_kernels):
+    run_lossy(seed, g=3, use_kernels=use_kernels, steps=30)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("seed", [3, 4])
+def test_lossy_chaos_sharded(seed, use_kernels):
+    run_lossy(seed, g=2, use_kernels=use_kernels, sharded=True, steps=24)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(4, 36))
+def test_lossy_chaos_property_jnp(seed, steps):
+    run_lossy(seed, g=3, use_kernels=False, steps=steps)
+
+
+# ---------------------------------------------------------------------------
+# Unbounded-uptime acceptance (DESIGN.md §9): ≥8 ring generations vs an
+# unbounded-log oracle, with a mid-schedule crash + snapshot-restore
+# ---------------------------------------------------------------------------
+def run_wrap_generations(
+    use_kernels: bool, sharded: bool, g: int = 2, waves: int = 66
+) -> None:
+    """Drive every learner ring through ≥8 generations (N=64, 8 instances
+    per wave) with periodic snapshot/reclamation, crash one group member
+    WITH state loss mid-schedule and restore it from snapshot + live
+    suffix.  The stitched ``delivered()`` logs must be bit-identical to
+    twins whose rings never wrap (the unbounded-log oracle), and equal
+    watermarks must seal to equal digests on every backend."""
+    n = 64
+    cfg = PaxosConfig(n_acceptors=A, n_instances=n, batch=8, n_groups=g)
+    cfg1 = PaxosConfig(n_acceptors=A, n_instances=1024, batch=8)
+    mesh = make_group_mesh() if sharded else None
+    mg = PaxosContext(cfg, use_kernels=use_kernels, mesh=mesh, snapshots=True)
+    twins = [
+        PaxosContext(cfg1, use_kernels=use_kernels, fused=True, snapshots=True)
+        for _ in range(g)
+    ]
+    sent = [[] for _ in range(g)]
+    crash_wave, restore_wave = waves // 2, waves // 2 + 3
+    for w in range(waves):
+        if w == crash_wave:
+            mg.crash_acceptor(2, group=0)
+            twins[0].crash_acceptor(2)
+        if w == restore_wave:
+            # a snapshot advanced the watermark since the crash: the rebuild
+            # really is snapshot + live suffix, not a full-history replay
+            assert mg.snapshots.watermark(0) > 0
+            assert mg.restore_acceptor(2, group=0) == twins[
+                0
+            ].restore_acceptor(2)
+        for gid in range(g):
+            for j in range(8):
+                p = f"w{w}g{gid}j{j}".encode()
+                sent[gid].append(p)
+                mg.submit(p, group=gid)
+                twins[gid].submit(p)
+        mg.pump()
+        for t in twins:
+            t.pump()
+        if (w + 1) % 6 == 0:           # reclaim well before the boundary
+            for gid in range(g):
+                snap = mg.snapshot_group(gid)
+                tsnap = twins[gid].snapshot_group()
+                assert snap.watermark == tsnap.watermark, (w, gid)
+                assert snap.seal == tsnap.seal, (w, gid)
+    for _ in range(10):
+        mg.pump()
+        for t in twins:
+            t.pump()
+    for gid in range(g):
+        # every ring wrapped ≥ 8 generations
+        assert mg.hw.next_inst_host[gid] >= 8 * n, gid
+        final = mg.snapshot_group(gid)
+        tfinal = twins[gid].snapshot_group()
+        assert final.seal == tfinal.seal != 0, gid
+        assert mg.full_group_log(gid) == twins[gid].full_group_log(), gid
+        got = [p for _i, p in mg.full_group_log(gid)]
+        assert got == sent[gid], gid   # exactly once, in submit order
+    assert not mg._pending
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_wrap_generations_unsharded(use_kernels):
+    run_wrap_generations(use_kernels, sharded=False)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_wrap_generations_sharded(use_kernels):
+    run_wrap_generations(use_kernels, sharded=True)
 
 
 @pytest.mark.parametrize("use_kernels", [False, True])

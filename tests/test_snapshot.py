@@ -1,0 +1,300 @@
+"""Snapshot / compaction / reclamation subsystem (DESIGN.md §9) — fast lane.
+
+Covers the host store (chunk-invariant seals, seal-verified transfer), the
+ring-overflow door guard on both dataplanes (explicit backpressure with the
+boundary instance pinned — the regression test for the historical silent
+overwrite-on-wrap), the context lifecycle (snapshot → crash → restore,
+ring-wrap vs. an unbounded twin, stitched ``delivered()`` through the
+serving tier), and snapshot-seeded group adoption.  The long multi-
+generation wrap schedules live in the slow chaos suite
+(``test_chaos_schedules.py``).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import PaxosConfig, PaxosContext
+from repro.core.api import HardwareDataplane, MultiGroupDataplane
+from repro.core.network import FaultSpec
+from repro.core.snapshot import GroupSnapshot, RingOverflowError, SnapshotStore
+
+A = 3
+
+
+def _ctx(n_instances=16, snapshots=True, **kw):
+    cfg = PaxosConfig(n_acceptors=A, n_instances=n_instances, batch=8)
+    return PaxosContext(cfg, fused=True, snapshots=snapshots, **kw)
+
+
+def _feed(ctx, lo, hi, group=None):
+    for i in range(lo, hi):
+        if group is None:
+            ctx.submit(f"m{i}".encode())
+        else:
+            ctx.submit(f"m{i}g{group}".encode(), group=group)
+    ctx.run_until_quiescent()
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec validation (satellite: reject nonsense probabilities on entry)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "bad", [{"drop": -0.1}, {"dup": 1.0001}, {"reorder": 17}, {"drop": -1e-9}]
+)
+def test_faultspec_rejects_out_of_range(bad):
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec(**bad)
+
+
+def test_faultspec_accepts_boundaries():
+    FaultSpec(drop=0.0, dup=1.0, reorder=0.5)   # endpoints are legal
+
+
+# ---------------------------------------------------------------------------
+# SnapshotStore: chunk-invariant seals, watermark discipline, sealed transfer
+# ---------------------------------------------------------------------------
+def test_store_seal_is_chunk_invariant():
+    insts = np.arange(12, dtype=np.int32)
+    values = np.arange(24, dtype=np.int32).reshape(12, 2)
+    one = SnapshotStore()
+    one.absorb(0, insts, values, 12)
+    two = SnapshotStore()
+    two.absorb(0, insts[:5], values[:5], 5)
+    two.absorb(0, insts[5:], values[5:], 12)
+    assert one.seal(0) == two.seal(0) != 0
+    assert one.watermark(0) == two.watermark(0) == 12
+    np.testing.assert_array_equal(one.entries(0)[0], two.entries(0)[0])
+    np.testing.assert_array_equal(one.entries(0)[1], two.entries(0)[1])
+
+
+def test_store_watermark_discipline():
+    s = SnapshotStore()
+    s.absorb(0, np.array([0, 1], np.int32), np.zeros((2, 1), np.int32), 4)
+    with pytest.raises(ValueError, match="move back"):
+        s.absorb(0, np.zeros((0,), np.int32), np.zeros((0, 1), np.int32), 2)
+    with pytest.raises(ValueError, match="ascending"):
+        s.absorb(0, np.array([6, 5], np.int32), np.zeros((2, 1), np.int32), 8)
+    with pytest.raises(ValueError, match="outside the window"):
+        s.absorb(0, np.array([2], np.int32), np.zeros((1, 1), np.int32), 8)
+    # gaps are legal: undecided instances below the watermark are holes
+    s.absorb(0, np.array([5, 7], np.int32), np.zeros((2, 1), np.int32), 8)
+    assert s.watermark(0) == 8
+
+
+def test_store_seed_verifies_seal():
+    src = SnapshotStore()
+    src.absorb(0, np.arange(4, dtype=np.int32), np.ones((4, 2), np.int32), 4)
+    snap = src.snapshot(0)
+    dst = SnapshotStore()
+    dst.seed(1, snap, log_prefix=[(0, b"x")])
+    assert dst.seal(1) == snap.seal
+    assert dst.log_prefix(1) == [(0, b"x")]
+    tampered = GroupSnapshot(
+        watermark=snap.watermark,
+        insts=snap.insts,
+        values=snap.values + 1,       # corrupt the transfer
+        seal=snap.seal,
+    )
+    with pytest.raises(ValueError, match="seal mismatch"):
+        SnapshotStore().seed(2, tampered)
+    with pytest.raises(ValueError, match="already has"):
+        dst.seed(1, snap)
+
+
+# ---------------------------------------------------------------------------
+# Ring-overflow door guard (the silent-overwrite regression test)
+# ---------------------------------------------------------------------------
+def test_overflow_guard_single_dataplane():
+    cfg = PaxosConfig(n_acceptors=A, n_instances=16, batch=8)
+    hw = HardwareDataplane(cfg)
+    hw.enable_reclamation()
+    vals = np.zeros((8, cfg.value_words), np.int32)
+    act = np.ones((8,), np.int32)
+    hw.pipeline(vals, act)
+    hw.pipeline(vals, act)            # exact fit: instances [0, 16)
+    with pytest.raises(RingOverflowError) as ei:
+        hw.pipeline(vals, act)
+    e = ei.value
+    # the boundary instance is pinned: with nothing reclaimed the first
+    # un-holdable instance is exactly N
+    assert (e.base, e.burst, e.boundary) == (16, 8, 16)
+    assert e.attempted == 24
+    hw.set_reclaimed(8)               # snapshot advanced the watermark
+    hw.pipeline(vals, act)            # [16, 24) now fits
+    with pytest.raises(RingOverflowError):
+        hw.pipeline(vals, act)        # [24, 32) passes boundary 8 + 16
+
+
+def test_overflow_guard_multigroup_names_group():
+    cfg = PaxosConfig(n_acceptors=A, n_instances=16, batch=8, n_groups=2)
+    hw = MultiGroupDataplane(cfg)
+    hw.enable_reclamation()
+    vals = np.zeros((2, 8, cfg.value_words), np.int32)
+    act = np.ones((2, 8), np.int32)
+    hw.pipeline(vals, act)
+    hw.pipeline(vals, act)
+    with pytest.raises(RingOverflowError) as ei:
+        hw.pipeline(vals, act)
+    assert ei.value.group == 0
+    assert ei.value.boundary == 16
+    hw.set_reclaimed(0, 16)           # group 0 drained, group 1 not
+    with pytest.raises(RingOverflowError) as ei:
+        hw.pipeline(vals, act)
+    assert ei.value.group == 1
+    hw.set_reclaimed(1, 16)
+    hw.pipeline(vals, act)
+
+
+def test_set_reclaimed_validates_window():
+    cfg = PaxosConfig(n_acceptors=A, n_instances=16, batch=8)
+    hw = HardwareDataplane(cfg)
+    hw.enable_reclamation()
+    with pytest.raises(ValueError):
+        hw.set_reclaimed(4)           # beyond the sequencer watermark
+    vals = np.zeros((8, cfg.value_words), np.int32)
+    hw.pipeline(vals, np.ones((8,), np.int32))
+    hw.set_reclaimed(8)
+    with pytest.raises(ValueError):
+        hw.set_reclaimed(4)           # watermark may not move back
+
+
+# ---------------------------------------------------------------------------
+# Context lifecycle: wrap vs unbounded twin, crash/restore, stitching
+# ---------------------------------------------------------------------------
+def test_wrap_smoke_matches_unbounded_twin():
+    """Three ring generations with periodic snapshots deliver the same
+    stitched log as a twin whose ring never wraps (the unbounded oracle),
+    and equal watermarks give equal seals."""
+    ctx = _ctx(n_instances=16)
+    twin = _ctx(n_instances=256)      # never wraps
+    for wave in range(6):
+        lo, hi = wave * 8, wave * 8 + 8
+        _feed(ctx, lo, hi)
+        _feed(twin, lo, hi)
+        ctx.snapshot_group()          # drain every generation boundary
+        twin.snapshot_group()
+    assert ctx.hw._next_inst_host == 48 > 2 * 16
+    assert ctx.full_group_log() == twin.full_group_log()
+    assert [p for _i, p in ctx.full_group_log()] == [
+        f"m{i}".encode() for i in range(48)
+    ]
+    assert ctx.snapshots.seal(0) == twin.snapshots.seal(0) != 0
+
+
+def test_unsnapshotted_wrap_is_refused_at_the_door():
+    ctx = _ctx(n_instances=16)
+    _feed(ctx, 0, 16)
+    ctx.submit(b"overflow")
+    with pytest.raises(RingOverflowError):
+        ctx.pump()
+    ctx.snapshot_group()              # drain → the same submit now lands
+    ctx.run_until_quiescent()
+    assert [p for _i, p in ctx.full_group_log()][-1] == b"overflow"
+
+
+def test_crash_restore_acceptor_single():
+    """Crash WITH state loss mid-run; restore rebuilds from snapshot
+    watermark + live ring suffix and the restored member then carries a
+    quorum (a different acceptor is killed afterwards)."""
+    ctx = _ctx(n_instances=64)
+    _feed(ctx, 0, 16)
+    ctx.snapshot_group(upto=8)
+    ctx.crash_acceptor(2)
+    _feed(ctx, 16, 24)                # decided by the surviving quorum
+    adopted = ctx.restore_acceptor(2)
+    assert adopted == 16              # decided suffix [8, 24)
+    ctx.hw.kill_acceptor(0)           # quorum now NEEDS the restored member
+    _feed(ctx, 24, 32)
+    got = [p for _i, p in ctx.full_group_log()]
+    assert got == [f"m{i}".encode() for i in range(32)]
+
+
+def test_crash_restore_acceptor_grouped():
+    cfg = PaxosConfig(n_acceptors=A, n_instances=64, batch=8, n_groups=2)
+    ctx = PaxosContext(cfg, snapshots=True)
+    _feed(ctx, 0, 8, group=0)
+    _feed(ctx, 0, 8, group=1)
+    ctx.snapshot_group(1, upto=4)
+    ctx.crash_acceptor(1, group=1)
+    _feed(ctx, 8, 16, group=1)
+    assert ctx.restore_acceptor(1, group=1) == 12   # decided [4, 16)
+    ctx.hw.kill_acceptor(1, 0)
+    _feed(ctx, 16, 24, group=1)
+    got = [p for _i, p in ctx.full_group_log(1)]
+    assert got == [f"m{i}g1".encode() for i in range(24)]
+    # group 0 never snapshotted: its log is untouched by group 1's lifecycle
+    assert [p for _i, p in ctx.full_group_log(0)] == [
+        f"m{i}g0".encode() for i in range(8)
+    ]
+
+
+def test_delivered_stitches_through_the_service():
+    """ConsensusService.delivered() is compaction-blind: the session's view
+    is identical before and after the prefix moves into the store."""
+    from repro.serve.engine import ConsensusService
+
+    cfg = PaxosConfig(n_acceptors=A, n_instances=16, batch=8, n_groups=1)
+    ctx = PaxosContext(cfg, fused=True, snapshots=True)
+    svc = ConsensusService(ctx)
+    sid = "session-0"
+    for i in range(16):
+        svc.submit(sid, f"v{i}".encode())
+    svc.run_until_quiescent()
+    before = svc.delivered(sid)
+    assert [p for _i, p in before] == [f"v{i}".encode() for i in range(16)]
+    ctx.snapshot_group(0)
+    assert ctx.group_log[0] == []     # live log fully compacted away
+    assert svc.delivered(sid) == before
+    for i in range(16, 24):           # ring wraps into reclaimed slots
+        svc.submit(sid, f"v{i}".encode())
+    svc.run_until_quiescent()
+    assert [p for _i, p in svc.delivered(sid)] == [
+        f"v{i}".encode() for i in range(24)
+    ]
+
+
+def test_adopt_group_bootstraps_from_snapshot():
+    """Retire a tenant, move its sealed snapshot + compacted log to a fresh
+    slot via ``adopt_group``: the adopted group's stitched history equals
+    the original's, and it keeps deciding from the watermark."""
+    cfg = PaxosConfig(n_acceptors=A, n_instances=16, batch=8, n_groups=2)
+    ctx = PaxosContext(cfg, snapshots=True)
+    _feed(ctx, 0, 16, group=1)
+    snap = ctx.snapshot_group(1)
+    prefix = ctx.snapshots.log_prefix(1)
+    history = ctx.full_group_log(1)
+    assert ctx.retire_group(1) == history    # stitched return at retirement
+    gid = ctx.adopt_group(snap, log_prefix=list(prefix))
+    assert gid == 1                          # lowest free slot
+    assert ctx.full_group_log(gid) == history
+    assert ctx.snapshots.seal(gid) == snap.seal
+    # the adopted group continues at the watermark: new decisions append
+    _feed(ctx, 16, 24, group=gid)
+    got = [p for _i, p in ctx.full_group_log(gid)]
+    assert got == [f"m{i}g1".encode() for i in range(24)]
+    # and its ring is watermark-gated like any other group's
+    inst = ctx.hw.next_inst_host[gid]
+    assert inst >= snap.watermark
+
+
+def test_adopt_group_rejects_diverged_snapshot():
+    cfg = PaxosConfig(n_acceptors=A, n_instances=16, batch=8, n_groups=2)
+    ctx = PaxosContext(cfg, snapshots=True)
+    _feed(ctx, 0, 8, group=1)
+    snap = ctx.snapshot_group(1)
+    ctx.retire_group(1)
+    bad = GroupSnapshot(
+        watermark=snap.watermark,
+        insts=snap.insts,
+        values=snap.values ^ 1,
+        seal=snap.seal,
+    )
+    with pytest.raises(ValueError, match="seal mismatch"):
+        ctx.adopt_group(bad)
+
+
+def test_snapshots_require_the_fused_wire_path():
+    cfg = PaxosConfig(n_acceptors=A, n_instances=16, batch=8)
+    with pytest.raises(ValueError, match="fused wire path"):
+        PaxosContext(cfg, fused=False, snapshots=True)
