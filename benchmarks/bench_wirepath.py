@@ -708,6 +708,79 @@ def run_multigroup(groups=MG_GROUPS) -> None:
             )
 
 
+# -- path: KV tier — consensus write round-trips vs consensus-free reads -----
+# The DESIGN.md §10 economics: a ``put`` pays one full wire-path round trip
+# (submit -> fused Phase-2 -> deliver -> host apply) while a leased ``get``
+# never leaves the host (replica lookup behind the read watermark).  The
+# gated ``kv_read_write_ratio`` row is write-us / read-us — the NetChain
+# claim that consensus-free reads are >= 10x cheaper than write round-trips.
+KV_BURST = 128       # puts per timed schedule, one round-trip each
+KV_READS = 4096      # leased gets per timed schedule, pure host path
+
+
+def run_kv() -> None:
+    from repro.core.api import PaxosContext
+    from repro.core.types import PaxosConfig
+    from repro.serve.engine import ConsensusService
+    from repro.serve.kv import ReplicatedKV
+
+    cfg = PaxosConfig(
+        n_acceptors=A, n_instances=N, batch=KV_BURST, value_words=V,
+        n_groups=2,
+    )
+    svc = ConsensusService(PaxosContext(cfg, use_kernels=True))
+    kv = ReplicatedKV(svc)
+    s = kv.session("bench")
+    tick = [0]
+
+    def write_burst():
+        t = tick[0]
+        tick[0] += 1
+        for j in range(KV_BURST):
+            s.put(f"k{j & 63}".encode(), f"t{t}j{j}".encode())
+        svc.run_until_quiescent()
+        kv.refresh()
+
+    us_w = time_fn(write_burst, iters=3, stat="min") / KV_BURST
+    emit(
+        f"wirepath/kv_put_pallas/burst={KV_BURST}",
+        us_w,
+        f"{1e6 / us_w:.0f} write round-trips/s",
+        path="kv_put_pallas",
+        burst=KV_BURST,
+        us_per_op=us_w,
+        msgs_per_s=1e6 / us_w,
+    )
+
+    assert s.get(b"k1") is not None    # settle: lease validated
+    d0 = svc.ctx.hw.dispatch_count
+
+    def read_burst():
+        for _ in range(KV_READS):
+            s.get(b"k1")
+
+    us_r = time_fn(read_burst, iters=3, stat="min") / KV_READS
+    # the economics only count if the reads really were consensus-free
+    assert svc.ctx.hw.dispatch_count == d0, "leased reads dispatched!"
+    emit(
+        f"wirepath/kv_read_leased/burst={KV_READS}",
+        us_r,
+        f"{1e6 / us_r:.0f} leased reads/s, zero dispatches",
+        path="kv_read_leased",
+        burst=KV_READS,
+        us_per_op=us_r,
+        msgs_per_s=1e6 / us_r,
+    )
+    ratio = us_w / us_r
+    emit(
+        f"wirepath/kv_read_write_ratio/burst={KV_BURST}",
+        0.0,
+        f"leased reads {ratio:.0f}x cheaper than write round-trips",
+        burst=KV_BURST,
+        kv_ratio=ratio,
+    )
+
+
 def run(bursts=BURSTS, out: Optional[str] = None) -> None:
     full_sweep = tuple(bursts) == BURSTS
     per_path = {}
@@ -746,6 +819,7 @@ def run(bursts=BURSTS, out: Optional[str] = None) -> None:
     run_sharded()
     run_skewed()
     run_sustained()
+    run_kv()
     if full_sweep:
         write_json(
             JSON_PATH,

@@ -25,8 +25,11 @@ REQUIRED_HEADLINES = (
     "wirepath/sharded_scaling_pallas/",
     "wirepath/skew_speedup_twotier/",
     "wirepath/sustained_ratio/",
+    "wirepath/kv_read_write_ratio/",
 )
-RATIO_FIELDS = ("speedup", "scaling", "skew_speedup", "sustained_ratio")
+RATIO_FIELDS = (
+    "speedup", "scaling", "skew_speedup", "sustained_ratio", "kv_ratio",
+)
 
 
 def _finite_positive(x) -> bool:

@@ -24,7 +24,12 @@ committed perf-trajectory artifact and fails on:
     between generations, vs the same ring wrapping silently — DESIGN.md §9)
     regressing by more than ``--sustained-tolerance`` (default 50%)
     relative to the committed ratio — the reclamation tax a forever-running
-    service pays must stay bounded.
+    service pays must stay bounded;
+  * the KV read:write economics (``kv_read_write_ratio``: write round-trip
+    us / leased-read us — DESIGN.md §10) dropping below the absolute
+    ``--min-kv-ratio`` floor (default 10x, the consensus-free-read claim)
+    in the fresh run, or regressing by more than ``--kv-tolerance``
+    (default 50%) relative to the committed ratio.
 
     PYTHONPATH=src python -m benchmarks.check_wirepath_regression \
         BENCH_wirepath.json /tmp/fresh.json
@@ -87,6 +92,14 @@ def main(argv=None) -> int:
                     help="allowed fractional regression of the sustained-"
                          "uptime throughput ratio (sustained_ratio) vs the "
                          "committed artifact (default 0.50)")
+    ap.add_argument("--kv-tolerance", type=float, default=0.50,
+                    help="allowed fractional regression of the KV "
+                         "read:write cost ratio (kv_read_write_ratio) vs "
+                         "the committed artifact (default 0.50)")
+    ap.add_argument("--min-kv-ratio", type=float, default=10.0,
+                    help="absolute floor on the fresh KV read:write ratio — "
+                         "leased reads must stay at least this much cheaper "
+                         "than write round-trips (default 10.0)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -193,6 +206,30 @@ def main(argv=None) -> int:
             failures.append(
                 f"sustained ratio regressed >{args.sustained_tolerance:.0%}: "
                 f"{fresh_su:.2f}x < floor {floor:.2f}x"
+            )
+
+    base_kv = _row_metric(base, "kv_read_write_ratio", "kv_ratio")
+    fresh_kv = _row_metric(fresh, "kv_read_write_ratio", "kv_ratio")
+    if base_kv is None:
+        # pre-§10 artifact: nothing committed to gate against
+        print("kv read:write ratio: no committed row, gate skipped")
+    elif fresh_kv is None:
+        failures.append("fresh run has no kv_read_write_ratio row")
+    else:
+        floor = max(base_kv * (1.0 - args.kv_tolerance), args.min_kv_ratio)
+        status = "OK" if fresh_kv >= floor else "REGRESSION"
+        print(
+            f"kv leased-read vs write-round-trip ratio: fresh "
+            f"{fresh_kv:.0f}x vs committed {base_kv:.0f}x "
+            f"(floor {floor:.0f}x, absolute min {args.min_kv_ratio:.0f}x) "
+            f"-> {status}"
+        )
+        if fresh_kv < floor:
+            failures.append(
+                f"kv read:write ratio {fresh_kv:.1f}x below floor "
+                f"{floor:.1f}x (committed {base_kv:.1f}x, tolerance "
+                f"{args.kv_tolerance:.0%}, absolute min "
+                f"{args.min_kv_ratio:.1f}x)"
             )
 
     if failures:

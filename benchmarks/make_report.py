@@ -113,7 +113,7 @@ def wirepath_table() -> None:
         if r.get("skipped"):
             print(f"| {r['path']} | {r['burst']} | — | skipped |")
             continue
-        if "msgs_per_s" not in r:
+        if "msgs_per_s" not in r or "us_per_round" not in r:
             continue
         print(f"| {r['path']} | {r['burst']} | {r['us_per_round']:.0f} "
               f"| {r['msgs_per_s']:,.0f} |")
@@ -140,6 +140,22 @@ def wirepath_table() -> None:
                 for r in scalings
             )
             print(f"\nAggregate scaling G=8 vs G=1: {line}")
+        print()
+
+    kv = [r for r in doc.get("rows", []) if "us_per_op" in r]
+    if kv:
+        print("### Replicated KV tier (DESIGN.md §10)\n")
+        print("| path | burst | us/op | ops/s |")
+        print("|---|---|---|---|")
+        for r in kv:
+            print(f"| {r['path']} | {r['burst']} | {r['us_per_op']:.1f} "
+                  f"| {r['msgs_per_s']:,.0f} |")
+        ratio = next(
+            (r for r in doc.get("rows", []) if "kv_ratio" in r), None
+        )
+        if ratio:
+            print(f"\nLeased reads vs write round-trips: "
+                  f"{ratio['kv_ratio']:.0f}x cheaper")
         print()
 
 

@@ -1,77 +1,61 @@
-"""Replicated key-value store — the paper's LevelDB case study (§5).
+"""Replicated key-value store — the paper's LevelDB case study (§5), served
+by the KV tier (DESIGN.md §10).
 
     PYTHONPATH=src python examples/replicated_kv.py
 
-Three replicas each hold an independent store; clients submit serialized
-get/put/delete ops through the unchanged submit/deliver API; CAANS makes the
-replicas consistent.  "No code from LevelDB needed to be modified" — here the
-store is a dict behind the same boundary.
+Clients speak the typed session API: ``put`` / ``cas`` / ``delete`` ride the
+consensus wire path exactly once, while ``get`` is **consensus-free** under
+the session's read-your-writes lease — NetChain's read-path economics on
+this dataplane.  When membership churn moves a session between groups, its
+lease goes stale and ONE serialized read-index op re-validates it; the
+session's view stitches seamlessly across the generations it spanned.
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import PaxosConfig, PaxosContext, ReplicatedLog
-
-
-class Replica:
-    """A storage server: applies the decided log in order."""
-
-    def __init__(self, rid: int):
-        self.rid = rid
-        self.store = {}
-        self.log = ReplicatedLog(quorum=2)
-        self.log.on_apply = self._apply
-
-    def _apply(self, inst: int, op: bytes) -> None:
-        kind, _, rest = op.partition(b":")
-        if kind == b"put":
-            k, _, v = rest.partition(b"=")
-            self.store[k.decode()] = v.decode()
-        elif kind == b"del":
-            self.store.pop(rest.decode(), None)
-
-    def offer(self, inst: int, op: bytes) -> None:
-        self.log.offer(inst, op)
+from repro.core import PaxosConfig, PaxosContext
+from repro.serve import ConsensusService, ReplicatedKV
 
 
 def main() -> None:
-    replicas = [Replica(i) for i in range(3)]
+    cfg = PaxosConfig(n_acceptors=3, n_instances=256, batch=16, n_groups=2)
+    svc = ConsensusService(PaxosContext(cfg))
+    kv = ReplicatedKV(svc)
 
-    def deliver(value, size, inst):
-        for r in replicas:
-            r.offer(inst, bytes(value))
+    # -- writes ride consensus ----------------------------------------------
+    alice = kv.session("alice")
+    alice.put(b"user", b"alice")
+    alice.put(b"city", b"lugano")
+    alice.put(b"user", b"bob")           # overwrite decided later wins
+    alice.delete(b"city")
+    alice.cas(b"paper", None, b"caans")  # create iff absent
+    svc.run_until_quiescent()
 
-    ctx = PaxosContext(
-        PaxosConfig(n_acceptors=3, n_instances=4096, batch=16),
-        deliver=deliver,
-        fused=True,
-    )
+    # -- leased reads never touch the wire path -----------------------------
+    before = svc.ctx.hw.dispatch_count
+    assert alice.get(b"user") == b"bob"
+    assert alice.get(b"city") is None    # tombstoned
+    assert alice.get(b"paper") == b"caans"
+    assert svc.ctx.hw.dispatch_count == before, "leased get dispatched!"
+    print(f"3 leased gets, {svc.ctx.hw.dispatch_count - before} wire-path "
+          f"dispatches — reads are consensus-free under the lease")
 
-    ops = [
-        b"put:user=alice",
-        b"put:city=lugano",
-        b"put:user=bob",       # overwrite decided later than the first put
-        b"del:city",
-        b"put:paper=caans",
-    ]
-    for op in ops:
-        ctx.submit(op)
-    ctx.run_until_quiescent()
+    # -- cas semantics ------------------------------------------------------
+    alice.cas(b"paper", b"caans", b"netchain")   # matches: applies
+    alice.cas(b"paper", b"caans", b"stale")      # stale expect: no-op
+    svc.run_until_quiescent()
+    assert alice.get(b"paper") == b"netchain"
+    print(f"cas applied once: paper={alice.get(b'paper').decode()}")
 
-    expect = {"user": "bob", "paper": "caans"}
-    for r in replicas:
-        assert r.store == expect, (r.rid, r.store)
-        assert r.log.apply_watermark == len(ops)
-    print(f"3 replicas consistent after {len(ops)} ops: {replicas[0].store}")
-
-    # checkpoint + trim (paper §3.1 memory-limitation protocol): f+1 learners
-    # ack the watermark, acceptor log below it becomes reclaimable
-    wm = replicas[0].log.apply_watermark
-    replicas[0].log.ack_trim(0, wm)
-    replicas[0].log.ack_trim(1, wm)
-    assert replicas[0].log.trim_watermark == wm
-    print(f"log trimmed to instance {wm} after quorum checkpoint ack")
+    # -- churn: the lease breaks, the read-index heals it -------------------
+    svc.retire_group(svc.group_of("alice"))      # alice's group retires
+    value = alice.get(b"user")                   # stale lease -> read-index
+    assert value == b"bob"                       # stitched across generations
+    assert alice.lease_valid                     # re-validated, leased again
+    print(f"after membership churn: user={value.decode()} "
+          f"(read-index fallbacks: {kv.stats['read_index_gets']}, "
+          f"leased gets: {kv.stats['leased_gets']})")
 
 
 if __name__ == "__main__":

@@ -30,7 +30,7 @@ from . import plan as plan_mod
 from .network import SimNet
 from .paxos import Coordinator as SoftCoordinator
 from .plan import NO_ROUND, NOP_SENTINEL
-from .snapshot import GroupSnapshot, RingOverflowError, SnapshotStore
+from .snapshot import GroupSnapshot, RingReclamationMixin, SnapshotStore
 from .types import (
     MSG_NOP,
     MSG_P1A,
@@ -62,7 +62,7 @@ class _Pending:
     group: int = 0
 
 
-class HardwareDataplane:
+class HardwareDataplane(RingReclamationMixin):
     """The coordinator + acceptor array + learner dedup memory, executing as
     single-dispatch device programs.
 
@@ -99,11 +99,9 @@ class HardwareDataplane:
         # host mirror of the sequencer watermark — lets the kernel path check
         # its block-alignment invariant without a device sync
         self._next_inst_host = 0
-        # ring reclamation (DESIGN.md §9): when enabled, only instances in
-        # [reclaimed, reclaimed + N) may sequence — the door raises
-        # RingOverflowError past the boundary and the device-side permit gate
-        # enforces the same limit.  None = legacy silent overwrite-on-wrap.
-        self.reclaimed_host: Optional[int] = None
+        # monotone count of device program launches (wire-path dispatches);
+        # the KV tier pins its consensus-free read claim on this staying flat
+        self.dispatch_count = 0
         self._seq_base: Optional[int] = None        # provenance hint for vote()
         if use_kernels:
             from repro.kernels import ops as kops
@@ -126,33 +124,24 @@ class HardwareDataplane:
     def _window_aligned(self, base: int, b: int) -> bool:
         return _wire_window_aligned(self.cfg, base, b)
 
-    # -- ring reclamation (DESIGN.md §9) -------------------------------------
-    def enable_reclamation(self) -> None:
-        """Switch from silent overwrite-on-wrap to watermark-gated rings:
-        sequencing past ``reclaimed + N`` raises at the door (and the device
-        permit gate refuses the lanes) until a snapshot drain advances the
-        watermark via ``set_reclaimed``."""
-        if self.reclaimed_host is None:
-            self.reclaimed_host = 0
+    # -- ring reclamation: RingReclamationMixin at G == 1 (DESIGN.md §9) -----
+    def _seq_marks(self) -> List[int]:
+        return [self._next_inst_host]
+
+    @property
+    def reclaimed_host(self) -> Optional[int]:
+        """Scalar view of the single group's reclamation watermark (None
+        while reclamation is disabled) — the historical public surface."""
+        marks = self._reclaim_marks
+        return None if marks is None else marks[0]
 
     def set_reclaimed(self, upto: int) -> None:
         """Advance the reclamation watermark: instances below ``upto`` have
         been drained to a snapshot and their ring slots may be re-used."""
-        if self.reclaimed_host is None:
-            raise ValueError("reclamation is not enabled on this dataplane")
-        if not self.reclaimed_host <= upto <= self._next_inst_host:
-            raise ValueError(
-                f"reclaim watermark {upto} outside "
-                f"[{self.reclaimed_host}, {self._next_inst_host}]"
-            )
-        self.reclaimed_host = upto
+        self._reclaim_set(0, upto)
 
     def _guard_capacity(self, base: int, b: int) -> None:
-        if self.reclaimed_host is None:
-            return
-        boundary = self.reclaimed_host + self.cfg.n_instances
-        if base + b > boundary:
-            raise RingOverflowError(0, base, b, boundary)
+        self._reclaim_guard(0, base, b)
 
     # -- fused fast path: whole Phase-2 round in ONE device program ----------
     def pipeline(self, values: np.ndarray, active: np.ndarray):
@@ -179,6 +168,7 @@ class HardwareDataplane:
             args.append(
                 jnp.int32(self.reclaimed_host + self.cfg.n_instances)
             )
+        self.dispatch_count += 1
         self.cstate, self.stack, self.lstate, fresh, inst, _win, value = fn(
             *args
         )
@@ -207,6 +197,7 @@ class HardwareDataplane:
     def sequence(self, values: np.ndarray, active: np.ndarray) -> MsgBatch:
         self._guard_capacity(self._next_inst_host, values.shape[0])
         self._seq_base = self._next_inst_host
+        self.dispatch_count += 1
         self.cstate, p2a = self._seq(
             self.cstate, jnp.asarray(values), jnp.asarray(active)
         )
@@ -230,10 +221,12 @@ class HardwareDataplane:
             and self._window_aligned(base, b)
         )
         fn = self._vote_all_k if use_k else self._vote_all
+        self.dispatch_count += 1
         self.stack, votes = fn(self.stack, p2a, self.alive_mask)
         return self._split(votes)
 
     def prepare(self, p1a: MsgBatch) -> List[Optional[MsgBatch]]:
+        self.dispatch_count += 1
         self.stack, outs = self._prep_all(self.stack, p1a, self.alive_mask)
         return self._split(outs)
 
@@ -268,6 +261,7 @@ class _GroupView:
 
     def vote(self, p2a: MsgBatch) -> List[Optional[MsgBatch]]:
         mg, gid = self.mg, self.gid
+        mg.dispatch_count += 1
         st = jax.tree_util.tree_map(lambda x: x[gid], mg.stack)
         st, votes = mg._vote_all(st, p2a, mg.alive_mask[gid])
         mg.stack = jax.tree_util.tree_map(
@@ -277,6 +271,7 @@ class _GroupView:
 
     def prepare(self, p1a: MsgBatch) -> List[Optional[MsgBatch]]:
         mg, gid = self.mg, self.gid
+        mg.dispatch_count += 1
         st = jax.tree_util.tree_map(lambda x: x[gid], mg.stack)
         st, outs = mg._prep_all(st, p1a, mg.alive_mask[gid])
         mg.stack = jax.tree_util.tree_map(
@@ -296,7 +291,7 @@ class _GroupView:
         ]
 
 
-class MultiGroupDataplane:
+class MultiGroupDataplane(RingReclamationMixin):
     """G device-resident Paxos groups sharing one fused dispatch per round —
     consensus as a service, the NetChain-style generalization of
     ``HardwareDataplane`` (DESIGN.md §5).
@@ -343,9 +338,8 @@ class MultiGroupDataplane:
         # kernel path's alignment/lockstep decisions cost no device sync
         self.next_inst_host: List[int] = [0] * g
         self.crnd_host: List[int] = [0] * g
-        # per-group ring reclamation watermarks (DESIGN.md §9);
-        # None = legacy silent overwrite-on-wrap
-        self.reclaimed_host: Optional[List[int]] = None
+        # monotone device-program-launch counter (see HardwareDataplane)
+        self.dispatch_count = 0
         self.last_gb: Optional[int] = None   # fold width of the last dispatch
         if use_kernels:
             from repro.kernels import ops as kops
@@ -373,44 +367,31 @@ class MultiGroupDataplane:
     def _window_aligned(self, base: int, b: int) -> bool:
         return _wire_window_aligned(self.cfg, base, b)
 
-    # -- ring reclamation (DESIGN.md §9) -------------------------------------
-    def enable_reclamation(self) -> None:
-        """Per-group watermark-gated rings (see ``HardwareDataplane``)."""
-        if self.reclaimed_host is None:
-            self.reclaimed_host = [0] * self.cfg.n_groups
+    # -- ring reclamation: RingReclamationMixin per group (DESIGN.md §9) -----
+    def _seq_marks(self) -> List[int]:
+        return self.next_inst_host
+
+    @property
+    def reclaimed_host(self) -> Optional[List[int]]:
+        """Per-group watermark vector (None while disabled).  The list IS
+        the mixin's live state: membership paths (``create_group``/
+        ``adopt_group``) reset their slot in place."""
+        return self._reclaim_marks
 
     def set_reclaimed(self, gid: int, upto: int) -> None:
         """Advance group ``gid``'s reclamation watermark after a snapshot
         drain of instances below ``upto``."""
         self._check_gid(gid)
-        if self.reclaimed_host is None:
-            raise ValueError("reclamation is not enabled on this dataplane")
-        if not self.reclaimed_host[gid] <= upto <= self.next_inst_host[gid]:
-            raise ValueError(
-                f"reclaim watermark {upto} outside "
-                f"[{self.reclaimed_host[gid]}, {self.next_inst_host[gid]}] "
-                f"(group {gid})"
-            )
-        self.reclaimed_host[gid] = upto
+        self._reclaim_set(gid, upto)
 
     def _reclaim_limits(self) -> Optional[jax.Array]:
-        """int32[G] first-refused-instance vector, or None when disabled."""
-        if self.reclaimed_host is None:
-            return None
-        return jnp.asarray(
-            np.asarray(self.reclaimed_host, np.int32) + self.cfg.n_instances
-        )
+        """Device form of the mixin's first-refused-instance vector."""
+        lim = self._reclaim_limits_np()
+        return None if lim is None else jnp.asarray(lim)
 
     def _guard_capacity(self, gids, b: int) -> None:
-        if self.reclaimed_host is None:
-            return
-        n = self.cfg.n_instances
         for gid in gids:
-            boundary = self.reclaimed_host[gid] + n
-            if self.next_inst_host[gid] + b > boundary:
-                raise RingOverflowError(
-                    gid, self.next_inst_host[gid], b, boundary
-                )
+            self._reclaim_guard(gid, self.next_inst_host[gid], b)
 
     # -- shared pre-dispatch plan (the parity contract between this class
     # and its sharded subclass: both MUST resolve a round identically) ------
@@ -504,6 +485,7 @@ class MultiGroupDataplane:
         eff = CoordinatorState(
             next_inst=cs.next_inst, crnd=jnp.where(en, cs.crnd, NO_ROUND)
         )
+        self.dispatch_count += 1
         new_c, self.stack, self.lstate, fresh, inst, _win, value = fn(
             eff,
             self.stack,
@@ -574,6 +556,7 @@ class MultiGroupDataplane:
         # engines, so introspection never depends on engine choice
         gb, blocks = plan_mod.cohort_blocks(gids, marks, self._fold_width())
         self.last_gb = gb
+        self.dispatch_count += 1
         en = jnp.asarray(member)
         if use_k:
             # compact kernel layout: row j*gb + k <-> group blocks[j]*gb + k
@@ -876,15 +859,6 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         # 1-device mesh this is the parent's full-service fold
         return self.groups_per_shard
 
-    def _reclaim_limits_np(self) -> Optional[np.ndarray]:
-        # host-authoritative scalar control state, replicated into the
-        # sharded dispatch like the watermark/round vectors (DESIGN.md §9)
-        if self.reclaimed_host is None:
-            return None
-        return (
-            np.asarray(self.reclaimed_host, np.int32) + self.cfg.n_instances
-        )
-
     # -- placement introspection (consumed by serve.ConsensusService) --------
     def shard_of_group(self, gid: int) -> int:
         """Mesh shard owning group ``gid`` (contiguous-slab placement)."""
@@ -948,6 +922,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
             en != 0, np.asarray(self.crnd_host, np.int32), NO_ROUND
         ).astype(np.int32)
         fn = self._dispatch(use_k, gb)
+        self.dispatch_count += 1
         self.stack, self.lstate, fresh, inst, _win, value = fn(
             ni,
             eff_crnd,
@@ -1000,6 +975,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
             member != 0, np.asarray(self.crnd_host, np.int32), NO_ROUND
         ).astype(np.int32)
         fn = self._dispatch(use_k, gb)
+        self.dispatch_count += 1
         self.stack, self.lstate, fresh, _inst_d, _win, value = fn(
             ni,
             eff_crnd,
@@ -1180,8 +1156,21 @@ class PaxosContext:
     def submit(self, payload: bytes, group: int = 0) -> int:
         """paxos_submit(ctx, value, size) — ``group`` selects which of the
         device-resident consensus groups sequences the value (0 is the only
-        group of a single-group context)."""
+        group of a single-group context).
+
+        Oversized payloads are a client error and fail HERE, at the door,
+        with the limit named — not downstream at pack time mid-pump, where
+        the raise would abort a whole wave of other sessions' traffic."""
         self._check_group(group)
+        limit = self.cfg.max_payload_bytes
+        if len(payload) > limit:
+            raise ValueError(
+                f"payload is {len(payload)} bytes but value_words="
+                f"{self.cfg.value_words} carries at most {limit} payload "
+                f"bytes per value ({self.cfg.value_words * 4}-byte value "
+                f"minus the 8-byte seq/len header) — raise "
+                f"PaxosConfig.value_words"
+            )
         if self.grouped:
             seq = self._next_client_seq_g[group]
             self._next_client_seq_g[group] += 1

@@ -41,7 +41,9 @@ class RingOverflowError(RuntimeError):
 
     ``boundary`` is the first instance the ring cannot hold
     (``reclaimed + N``); ``attempted`` is one past the last instance of the
-    refused burst.
+    refused burst.  ``context`` carries the same facts as a machine-readable
+    dict so schedulers can react (snapshot-and-retry, shed the group, alert)
+    without parsing the message.
     """
 
     def __init__(self, group: int, base: int, burst: int, boundary: int):
@@ -50,11 +52,81 @@ class RingOverflowError(RuntimeError):
         self.burst = burst
         self.boundary = boundary
         self.attempted = base + burst
+        self.context = {
+            "group": group,
+            "base": base,
+            "burst": burst,
+            "boundary": boundary,
+            "attempted": base + burst,
+        }
         super().__init__(
             f"ring overflow: group {group} burst [{base}, {base + burst}) "
             f"passes the reclaim boundary {boundary} — snapshot the "
             f"delivered prefix to advance the watermark"
         )
+
+
+class RingReclamationMixin:
+    """Watermark-gated ring reclamation: the ONE door-guard contract every
+    dataplane shares (DESIGN.md §9).
+
+    Contract:
+
+    * Disabled by default (``_reclaim_marks is None``): rings silently
+      overwrite on wrap — the legacy mode unbounded-twin oracles rely on.
+    * ``enable_reclamation()`` arms one watermark per group at 0.  From
+      then on only instances in ``[mark, mark + N)`` may sequence; a burst
+      whose window crosses ``mark + N`` raises :class:`RingOverflowError`
+      at the host door *before* any device dispatch, and the reclamation-
+      limit vector threaded through the kernels refuses the same lanes
+      (defense in depth).
+    * ``_reclaim_set`` advances a group's mark after a snapshot drain.
+      Marks are monotone and can never pass the group's sequencer
+      watermark; both violations raise ``ValueError``.
+
+    A single-group dataplane is the G == 1 degenerate case (group id 0)
+    whose public scalar surface adapts onto this vector core.  Subclasses
+    provide ``cfg`` and ``_seq_marks()`` — the per-group sequencer
+    watermark host mirrors the window validation reads.
+    """
+
+    _reclaim_marks: Optional[List[int]] = None
+
+    def _seq_marks(self) -> List[int]:
+        raise NotImplementedError
+
+    @property
+    def reclamation_enabled(self) -> bool:
+        return self._reclaim_marks is not None
+
+    def enable_reclamation(self) -> None:
+        """Switch from silent overwrite-on-wrap to watermark-gated rings."""
+        if self._reclaim_marks is None:
+            self._reclaim_marks = [0] * len(self._seq_marks())
+
+    def _reclaim_set(self, gid: int, upto: int) -> None:
+        if self._reclaim_marks is None:
+            raise ValueError("reclamation is not enabled on this dataplane")
+        lo, hi = self._reclaim_marks[gid], self._seq_marks()[gid]
+        if not lo <= upto <= hi:
+            raise ValueError(
+                f"reclaim watermark {upto} outside [{lo}, {hi}] (group {gid})"
+            )
+        self._reclaim_marks[gid] = upto
+
+    def _reclaim_guard(self, gid: int, base: int, burst: int) -> None:
+        if self._reclaim_marks is None:
+            return
+        boundary = self._reclaim_marks[gid] + self.cfg.n_instances
+        if base + burst > boundary:
+            raise RingOverflowError(gid, base, burst, boundary)
+
+    def _reclaim_limits_np(self) -> Optional[np.ndarray]:
+        """int32[G] first-refused-instance vector, or None when disabled —
+        the host-authoritative form every dispatch threads to its engine."""
+        if self._reclaim_marks is None:
+            return None
+        return np.asarray(self._reclaim_marks, np.int32) + self.cfg.n_instances
 
 
 @dataclasses.dataclass

@@ -67,6 +67,13 @@ class PaxosConfig:
     def quorum(self) -> int:
         return self.f + 1
 
+    @property
+    def max_payload_bytes(self) -> int:
+        """Widest application payload one consensus value can carry: the
+        ``value_words * 4``-byte value minus the 8-byte (seq, len) framing
+        header ``PaxosContext`` packs in front of every payload."""
+        return self.value_words * 4 - 8
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass

@@ -1,1 +1,23 @@
-from .engine import Request, ServeLoop, make_prefill_step, make_serve_step  # noqa: F401
+from .engine import (  # noqa: F401
+    ConsensusService,
+    Request,
+    ServeLoop,
+    Session,
+    Ticket,
+    make_prefill_step,
+    make_serve_step,
+    session_hash,
+)
+from .kv import (  # noqa: F401
+    OP_CAS,
+    OP_DELETE,
+    OP_GET,
+    OP_PUT,
+    GroupReplica,
+    KvCodecError,
+    KvOp,
+    KVSession,
+    ReplicatedKV,
+    decode_op,
+    encode_op,
+)

@@ -16,7 +16,8 @@ order within its group.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -111,13 +112,77 @@ def session_group_live(session_id, live_groups: List[int], capacity: int) -> int
     return live_groups[h % len(live_groups)]
 
 
+class Ticket(NamedTuple):
+    """Structured submit receipt: the group that sequences the value and
+    the client sequence within that group's space.  A ``NamedTuple`` so the
+    historical ``gid, seq = service.submit(...)`` unpacking keeps working
+    while new code reads ``ticket.group`` / ``ticket.seq``."""
+
+    group: int
+    seq: int
+
+
+class Session:
+    """Typed per-session client handle — the session-scoped surface of
+    ``ConsensusService``, replacing the loose ``(session_id, payload)``
+    calling convention.
+
+    Handles are stateless and constructed on demand (``service.session(id)``):
+    routing is re-resolved per call, so a handle is always epoch-aware, and
+    no per-session host memory accretes in the serving tier — a session
+    universe of millions costs nothing here.  Stateful clients (leases,
+    counters) layer above; see ``serve.kv.KVSession``.
+    """
+
+    __slots__ = ("service", "id")
+
+    def __init__(self, service: "ConsensusService", session_id):
+        self.service = service
+        self.id = session_id
+
+    @property
+    def group(self) -> int:
+        """The session's current group (epoch-aware routing)."""
+        return self.service.group_of(self.id)
+
+    def submit(self, payload: bytes) -> Ticket:
+        """Route one value to the session's group; returns a :class:`Ticket`.
+
+        The value-width door guard runs here as well as in
+        ``PaxosContext.submit``: an oversized payload must fail at whichever
+        front door the client used, with the limit named."""
+        svc = self.service
+        limit = svc.ctx.cfg.max_payload_bytes
+        if len(payload) > limit:
+            raise ValueError(
+                f"payload is {len(payload)} bytes; this service carries at "
+                f"most {limit} payload bytes per value "
+                f"(PaxosConfig.value_words={svc.ctx.cfg.value_words})"
+            )
+        gid = svc.group_of(self.id)
+        seq = svc.ctx.submit(payload, group=gid)
+        svc.stats["submitted"] += 1
+        svc.submits_per_group[gid] += 1
+        return Ticket(gid, seq)
+
+    def delivered(self) -> List[Tuple[int, bytes]]:
+        """The stitched ``(inst, payload)`` log this session observes."""
+        return self.service._delivered(self.id)
+
+    def read(self) -> List[bytes]:
+        """Delivered payloads only, in decided order — the common
+        application-level read."""
+        return [p for _inst, p in self.service._delivered(self.id)]
+
+
 class ConsensusService:
     """Front door of the multi-group consensus dataplane.
 
-    Wraps a (multi-group) ``PaxosContext``: ``submit`` hash-routes a client
-    session's value to its group, ``pump``/``run_until_quiescent`` drive the
-    shared fused dispatch, and ``delivered`` reads a session's group log —
-    the per-group total order every session in that group observes.
+    Wraps a (multi-group) ``PaxosContext``: ``session(id)`` hands out the
+    typed per-session handle (submit hash-routes the session's values to
+    its group), ``pump``/``run_until_quiescent`` drive the shared fused
+    dispatch, and ``Session.delivered`` reads the session's group log — the
+    per-group total order every session in that group observes.
 
     **Routing epochs (dynamic membership, DESIGN.md §7).**  ``cfg.n_groups``
     is a capacity; the routing domain is the *live* group set.  Every
@@ -179,6 +244,17 @@ class ConsensusService:
         self._archived[(gid, self._gen[gid])] = list(log)
         self._bump_epoch()
 
+    def adopt_group(self, snap, log_prefix=None) -> int:
+        """Admit a tenant bootstrapping from a transferred snapshot
+        (vertical-Paxos state transfer, DESIGN.md §9) *through the serving
+        tier*: generation and routing-epoch bookkeeping exactly as
+        ``create_group``, with the context seeding its ``SnapshotStore``
+        from the sealed transfer.  Returns the new group id."""
+        gid = self.ctx.adopt_group(snap, log_prefix)
+        self._gen[gid] += 1
+        self._bump_epoch()
+        return gid
+
     def group_of(self, session_id) -> int:
         """Epoch-aware session -> group routing over the live set."""
         live, _gens = self._epochs[-1]
@@ -205,13 +281,23 @@ class ConsensusService:
             return hw.shard_of_group(gid)
         return 0
 
-    def submit(self, session_id, payload: bytes) -> Tuple[int, int]:
-        """Route one value; returns ``(group, client_seq)``."""
-        gid = self.group_of(session_id)
-        seq = self.ctx.submit(payload, group=gid)
-        self.stats["submitted"] += 1
-        self.submits_per_group[gid] += 1
-        return gid, seq
+    # -- the typed session surface -------------------------------------------
+    def session(self, session_id) -> Session:
+        """The typed per-session handle (see :class:`Session`)."""
+        return Session(self, session_id)
+
+    def submit(self, session_id, payload: bytes) -> Ticket:
+        """Deprecated: use ``service.session(session_id).submit(payload)``.
+
+        Thin shim over the typed surface; the ``Ticket`` it returns unpacks
+        exactly like the historical ``(group, client_seq)`` tuple."""
+        warnings.warn(
+            "ConsensusService.submit(session_id, payload) is deprecated; "
+            "use service.session(session_id).submit(payload)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return Session(self, session_id).submit(payload)
 
     def pump(self, rounds: int = 1) -> None:
         """Drive the shared dispatch.  The serving tier feeds the dispatch
@@ -239,6 +325,57 @@ class ConsensusService:
         return planner.report()
 
     def delivered(self, session_id) -> List[Tuple[int, bytes]]:
+        """Deprecated: use ``service.session(session_id).delivered()``."""
+        warnings.warn(
+            "ConsensusService.delivered(session_id) is deprecated; "
+            "use service.session(session_id).delivered()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._delivered(session_id)
+
+    def session_chain(self, session_id) -> List[Tuple[int, int]]:
+        """The distinct ``(group, generation)`` segments a session's history
+        spans, in epoch order — the stitching skeleton ``Session.delivered``
+        reads through, exposed so state-machine tiers (``serve.kv``) can
+        keep one incremental replica per segment instead of re-reading
+        concatenated logs."""
+        seen: set = set()
+        chain: List[Tuple[int, int]] = []
+        for live, gens in self._epochs:
+            if not live:
+                continue
+            gid = session_group_live(session_id, live, self.n_groups)
+            key = (gid, gens[gid])
+            if key not in seen:
+                seen.add(key)
+                chain.append(key)
+        return chain
+
+    def group_generation(self, gid: int) -> int:
+        """Current generation (``create_group`` count) of capacity slot
+        ``gid`` — the second half of a segment key."""
+        return self._gen[gid]
+
+    def log_segment(self, gid: int, gen: int) -> List[Tuple[int, bytes]]:
+        """One ``(group, generation)`` segment of the stitched history: the
+        archived log for retired generations, the live stitched log
+        (snapshot prefix + group log, ``PaxosContext.full_group_log``) for
+        the current one, empty for a generation this service never saw
+        decide."""
+        key = (gid, gen)
+        if key in self._archived:
+            return self._archived[key]
+        if gen == self._gen[gid]:
+            return self.ctx.full_group_log(gid)
+        return []
+
+    def archived_segments(self) -> Dict[Tuple[int, int], List[Tuple[int, bytes]]]:
+        """Read-only view of the retirement archive: ``(gid, generation) ->
+        drained log``.  Apply loops use it to finalize retired segments."""
+        return dict(self._archived)
+
+    def _delivered(self, session_id) -> List[Tuple[int, bytes]]:
         """The (inst, payload) log the session observes, in decided order.
 
         Uniform group-log read — no G == 1 special case (a service can pass
@@ -252,20 +389,9 @@ class ConsensusService:
         (``PaxosContext.full_group_log``) — so compaction is invisible to
         sessions in steady state, not just at retirement.
         """
-        seen: set = set()
         out: List[Tuple[int, bytes]] = []
-        for live, gens in self._epochs:
-            if not live:
-                continue
-            gid = session_group_live(session_id, live, self.n_groups)
-            key = (gid, gens[gid])
-            if key in seen:
-                continue
-            seen.add(key)
-            if key in self._archived:
-                out.extend(self._archived[key])
-            elif gens[gid] == self._gen[gid]:
-                out.extend(self.ctx.full_group_log(gid))
+        for key in self.session_chain(session_id):
+            out.extend(self.log_segment(*key))
         return out
 
     def group_loads(self) -> List[int]:

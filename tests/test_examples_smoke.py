@@ -1,0 +1,19 @@
+"""Fast-lane smoke runs of the headline examples.
+
+The examples are executable documentation; CI runs them in the fast lane so
+an API change that breaks the documented surface fails before the slow
+matrix.  ``runpy`` executes each file exactly as ``python examples/x.py``
+would (the scripts assert their own invariants and raise on violation).
+"""
+import pathlib
+import runpy
+
+import pytest
+
+EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+
+@pytest.mark.parametrize("name", ["quickstart.py", "replicated_kv.py"])
+def test_example_runs(name, capsys):
+    runpy.run_path(str(EXAMPLES / name), run_name="__main__")
+    assert capsys.readouterr().out.strip()    # each example reports progress

@@ -299,14 +299,14 @@ def test_consensus_service_routes_and_delivers():
     routed = {}
     for k in range(3):
         for s in sessions:
-            gid, _seq = svc.submit(s, f"{s}:op{k}".encode())
-            assert routed.setdefault(s, gid) == gid  # stable affinity
+            ticket = svc.session(s).submit(f"{s}:op{k}".encode())
+            assert routed.setdefault(s, ticket.group) == ticket.group
     svc.run_until_quiescent()
 
     assert svc.ctx.stats["delivered"] == 3 * len(sessions)
     assert sum(svc.group_loads()) == 3 * len(sessions)
     for s in sessions:
-        log = svc.delivered(s)
+        log = svc.session(s).delivered()
         mine = [p for _inst, p in log if p.startswith(f"{s}:".encode())]
         # the session observes its own ops in submission order, totally
         # ordered within its group

@@ -224,11 +224,11 @@ def test_consensus_service_routing_stable_under_sharding():
     sids = [f"u{i}" for i in range(6)]
     for k in range(2):
         for s in sids:
-            sharded.submit(s, f"{s}:op{k}".encode())
+            sharded.session(s).submit(f"{s}:op{k}".encode())
     sharded.run_until_quiescent()
     for s in sids:
         mine = [
-            p for _i, p in sharded.delivered(s)
+            p for p in sharded.session(s).read()
             if p.startswith(f"{s}:".encode())
         ]
         assert mine == [f"{s}:op{k}".encode() for k in range(2)]
@@ -247,10 +247,11 @@ def test_delivered_uniform_group_log_g1():
         PaxosContext(cfg1, mesh=make_group_mesh()),          # grouped G=1
     ):
         svc = ConsensusService(ctx)
+        sess = svc.session("sess")
         for k in range(3):
-            svc.submit("sess", f"op{k}".encode())
+            sess.submit(f"op{k}".encode())
         svc.run_until_quiescent()
-        log = svc.delivered("sess")
+        log = sess.delivered()
         assert [p for _i, p in log] == [f"op{k}".encode() for k in range(3)]
         # the uniform path and the historical delivered_log read agree
         assert log == list(ctx.delivered_log)
@@ -268,7 +269,7 @@ def test_routing_epoch_reroutes_and_stitches():
     victim = base_route[sids[0]]
     victims = [s for s in sids if base_route[s] == victim]
     for s in sids:
-        svc.submit(s, f"{s}:op0".encode())
+        svc.session(s).submit(f"{s}:op0".encode())
     svc.run_until_quiescent()
     epoch0 = svc.routing_epoch
 
@@ -284,10 +285,10 @@ def test_routing_epoch_reroutes_and_stitches():
     assert [svc.group_of(s) for s in sids] == [svc.group_of(s) for s in sids]
 
     for s in sids:
-        svc.submit(s, f"{s}:op1".encode())
+        svc.session(s).submit(f"{s}:op1".encode())
     svc.run_until_quiescent()
     for s in victims:
-        log = [p for _i, p in svc.delivered(s)]
+        log = svc.session(s).read()
         # pre-retirement log of the dead group stitched before the live log
         assert f"{s}:op0".encode() in log and f"{s}:op1".encode() in log
         assert log.index(f"{s}:op0".encode()) < log.index(f"{s}:op1".encode())
@@ -301,10 +302,10 @@ def test_routing_epoch_reroutes_and_stitches():
     # a victim session now routes back to the recycled slot; its view still
     # stitches generation 0's archive, the interim group, then the fresh log
     for s in victims:
-        svc.submit(s, f"{s}:op2".encode())
+        svc.session(s).submit(f"{s}:op2".encode())
     svc.run_until_quiescent()
     for s in victims:
-        log = [p for _i, p in svc.delivered(s)]
+        log = svc.session(s).read()
         ops = [
             log.index(f"{s}:op{k}".encode()) for k in range(3)
         ]

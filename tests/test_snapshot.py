@@ -237,21 +237,19 @@ def test_delivered_stitches_through_the_service():
     cfg = PaxosConfig(n_acceptors=A, n_instances=16, batch=8, n_groups=1)
     ctx = PaxosContext(cfg, fused=True, snapshots=True)
     svc = ConsensusService(ctx)
-    sid = "session-0"
+    sess = svc.session("session-0")
     for i in range(16):
-        svc.submit(sid, f"v{i}".encode())
+        sess.submit(f"v{i}".encode())
     svc.run_until_quiescent()
-    before = svc.delivered(sid)
+    before = sess.delivered()
     assert [p for _i, p in before] == [f"v{i}".encode() for i in range(16)]
     ctx.snapshot_group(0)
     assert ctx.group_log[0] == []     # live log fully compacted away
-    assert svc.delivered(sid) == before
+    assert sess.delivered() == before
     for i in range(16, 24):           # ring wraps into reclaimed slots
-        svc.submit(sid, f"v{i}".encode())
+        sess.submit(f"v{i}".encode())
     svc.run_until_quiescent()
-    assert [p for _i, p in svc.delivered(sid)] == [
-        f"v{i}".encode() for i in range(24)
-    ]
+    assert sess.read() == [f"v{i}".encode() for i in range(24)]
 
 
 def test_adopt_group_bootstraps_from_snapshot():
