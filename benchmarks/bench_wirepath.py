@@ -781,6 +781,173 @@ def run_kv() -> None:
     )
 
 
+# -- path: persistent K-round waves (DESIGN.md §11) --------------------------
+# Two questions, two gated headline ratios:
+#
+#   * ``persistent_speedup`` — the engine contest at matched wave shape:
+#     the persistent Pallas kernel vs the K-unrolled jnp oracle, both
+#     running one K=4 wave of burst-8192 rounds per dispatch with donated
+#     state and one host upload/readback per WAVE.
+#   * ``trickle_persistent_ratio`` — the dispatch-amortization claim on the
+#     trickle schedule where the per-round pump is dispatch-bound: one
+#     K=16 wave of burst-64 rounds vs 16 sequential single-round
+#     dispatches, the baseline paying the honest per-round pump cost
+#     (values upload + fresh/value readback every round, exactly what
+#     ``pipeline_cohort`` costs the pump).
+#
+# The ungated ``persistent_amortization`` row tracks the same ratio at a
+# mid curve point (K=16, burst=256).  Interpret-mode caveat (module
+# docstring "Ring sizing"): the CPU interpreter copies the aliased state
+# per grid step, so persistent waves under-read here relative to real TPU
+# execution — the ratios below are conservative.
+PERS_BIG = dict(k=4, b=8192, n=1 << 15)      # engine contest, matched shape
+PERS_MID = dict(k=16, b=256, n=1 << 12)      # amortization curve point
+PERS_TRICKLE = dict(k=16, b=64, n=1 << 10)   # dispatch-bound regime
+
+
+def _pers_values(k: int, b: int) -> np.ndarray:
+    rng = np.random.default_rng(5)
+    return rng.integers(1, 1 << 20, size=(k, 1, b, V)).astype(np.int32)
+
+
+def bench_persistent_pallas(k: int, b: int, n: int) -> float:
+    """One K-round wave per dispatch: upload once, read back once."""
+    from repro.kernels import ops as kops
+
+    persist = jax.jit(
+        kops.persistent_cohort_rounds,
+        donate_argnums=(0, 1),
+        static_argnames=("group_block", "block_b"),
+    )
+    _, stack, lstate = batched.init_multigroup_state(1, A, n, V)
+    st = {"stack": stack, "lstate": lstate, "base": 0}
+    gsel = jnp.zeros((1,), jnp.int32)
+    crnd = jnp.zeros((1,), jnp.int32)
+    alive = jnp.ones((1, A), jnp.int32)
+    npv = _pers_values(k, b)
+    steps = np.arange(k, dtype=np.int32)[:, None] * b
+
+    def wave():
+        wni = (st["base"] + steps).astype(np.int32)
+        st["stack"], st["lstate"], fresh, _w, val = persist(
+            st["stack"], st["lstate"], gsel, jnp.asarray(wni),
+            jnp.ones((k, 1), jnp.int32), crnd, alive, QUORUM,
+            jnp.asarray(npv), group_block=1, block_b=b,
+        )
+        st["base"] += k * b          # ring wraps silently (no reclamation)
+        np.asarray(fresh), np.asarray(val)   # once-per-wave host sync
+
+    return time_fn(wave, stat="min")
+
+
+def bench_persistent_jnp(k: int, b: int, n: int) -> float:
+    """The K-unrolled oracle at the same wave shape and sync contract."""
+    persist = jax.jit(
+        batched.persistent_multigroup_rounds, donate_argnums=(1, 2)
+    )
+    cstate, stack, lstate = batched.init_multigroup_state(1, A, n, V)
+    st = {"c": cstate, "stack": stack, "lstate": lstate}
+    npv = _pers_values(k, b)
+    act = np.ones((k, 1, b), bool)
+    alive = jnp.ones((1, A), bool)
+
+    def wave():
+        st["c"], st["stack"], st["lstate"], fresh, _i, _w, val = persist(
+            st["c"], st["stack"], st["lstate"], jnp.asarray(npv),
+            jnp.asarray(act), alive, QUORUM,
+        )
+        np.asarray(fresh), np.asarray(val)
+
+    return time_fn(wave, stat="min")
+
+
+def bench_persistent_k1(k: int, b: int, n: int) -> float:
+    """The pre-§11 pump model: K sequential single-round dispatches, each
+    paying the per-round host boundary (values upload + readback) that
+    ``pipeline_cohort`` pays — the honest baseline a persistent wave
+    replaces.  Same kernel, K=1, matched block size."""
+    from repro.kernels import ops as kops
+
+    persist = jax.jit(
+        kops.persistent_cohort_rounds,
+        donate_argnums=(0, 1),
+        static_argnames=("group_block", "block_b"),
+    )
+    _, stack, lstate = batched.init_multigroup_state(1, A, n, V)
+    st = {"stack": stack, "lstate": lstate, "base": 0}
+    gsel = jnp.zeros((1,), jnp.int32)
+    crnd = jnp.zeros((1,), jnp.int32)
+    alive = jnp.ones((1, A), jnp.int32)
+    wen1 = jnp.ones((1, 1), jnp.int32)
+    npv = _pers_values(k, b)
+
+    def wave():
+        for r in range(k):
+            wni = np.asarray([[st["base"]]], np.int32)
+            st["stack"], st["lstate"], fresh, _w, val = persist(
+                st["stack"], st["lstate"], gsel, jnp.asarray(wni), wen1,
+                crnd, alive, QUORUM, jnp.asarray(npv[r : r + 1]),
+                group_block=1, block_b=b,
+            )
+            st["base"] += b
+            np.asarray(fresh), np.asarray(val)   # per-ROUND host sync
+
+    return time_fn(wave, stat="min")
+
+
+def run_persistent() -> None:
+    rows = {}
+    for path, fn, shape in (
+        ("persistent_pallas_k4", bench_persistent_pallas, PERS_BIG),
+        ("persistent_jnp_k4", bench_persistent_jnp, PERS_BIG),
+        ("persistent_pallas_k16", bench_persistent_pallas, PERS_MID),
+        ("persistent_pallas_k1", bench_persistent_k1, PERS_MID),
+        ("trickle_persistent_pallas", bench_persistent_pallas, PERS_TRICKLE),
+        ("trickle_pallas_k1", bench_persistent_k1, PERS_TRICKLE),
+    ):
+        us = fn(**shape)
+        msgs = shape["k"] * shape["b"] / us * 1e6
+        rows[path] = msgs
+        emit(
+            f"wirepath/{path}/burst={shape['b']}",
+            us,
+            f"{msgs:.0f} msg/s per {shape['k']}-round wave",
+            path=path,
+            burst=shape["b"],
+            rounds=shape["k"],
+            ring=shape["n"],
+            msgs_per_s=msgs,
+            us_per_wave=us,
+        )
+    speed = rows["persistent_pallas_k4"] / rows["persistent_jnp_k4"]
+    emit(
+        f"wirepath/persistent_speedup/burst={PERS_BIG['b']}",
+        0.0,
+        f"{speed:.2f}x pallas wave vs jnp K-unrolled oracle",
+        burst=PERS_BIG["b"],
+        rounds=PERS_BIG["k"],
+        persistent_speedup=speed,
+    )
+    amort = rows["persistent_pallas_k16"] / rows["persistent_pallas_k1"]
+    emit(
+        f"wirepath/persistent_amortization/burst={PERS_MID['b']}",
+        0.0,
+        f"{amort:.2f}x vs {PERS_MID['k']} per-round dispatches",
+        burst=PERS_MID["b"],
+        rounds=PERS_MID["k"],
+        persistent_amortization=amort,
+    )
+    ratio = rows["trickle_persistent_pallas"] / rows["trickle_pallas_k1"]
+    emit(
+        f"wirepath/trickle_persistent_ratio/burst={PERS_TRICKLE['b']}",
+        0.0,
+        f"{ratio:.2f}x useful msg/s vs the per-round pump",
+        burst=PERS_TRICKLE["b"],
+        rounds=PERS_TRICKLE["k"],
+        trickle_persistent_ratio=ratio,
+    )
+
+
 def run(bursts=BURSTS, out: Optional[str] = None) -> None:
     full_sweep = tuple(bursts) == BURSTS
     per_path = {}
@@ -820,6 +987,7 @@ def run(bursts=BURSTS, out: Optional[str] = None) -> None:
     run_skewed()
     run_sustained()
     run_kv()
+    run_persistent()
     if full_sweep:
         write_json(
             JSON_PATH,

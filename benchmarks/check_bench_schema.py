@@ -26,9 +26,13 @@ REQUIRED_HEADLINES = (
     "wirepath/skew_speedup_twotier/",
     "wirepath/sustained_ratio/",
     "wirepath/kv_read_write_ratio/",
+    "wirepath/persistent_speedup/",
+    "wirepath/trickle_persistent_ratio/",
 )
 RATIO_FIELDS = (
     "speedup", "scaling", "skew_speedup", "sustained_ratio", "kv_ratio",
+    "persistent_speedup", "trickle_persistent_ratio",
+    "persistent_amortization",
 )
 
 

@@ -62,6 +62,37 @@ class _Pending:
     group: int = 0
 
 
+class _DeferredRound:
+    """Handle for a dispatched wave whose host read-back is deferred
+    (DESIGN.md §11): the dispatch is in flight (or complete) device-side,
+    and ``resolve()`` performs the device->host transfer plus the cohort
+    row selection.  The double-buffered pump dispatches wave N+1 before
+    resolving wave N, overlapping host planning/packing with device
+    execution; host watermark mirrors were already advanced at dispatch
+    time, so planning never waits on a resolve."""
+
+    def __init__(self, fresh, value, inst, rows=None, axis=0):
+        self._fresh = fresh     # device (or host) array, pre-selection
+        self._value = value
+        self._inst = inst       # host instance windows, already selected
+        self._rows = None if rows is None else list(rows)
+        self._axis = axis       # cohort-row axis of fresh/value
+
+    @classmethod
+    def resolved(cls, fresh, value, inst):
+        """An already-host-side result wrapped for interface uniformity
+        (the sharded dataplane reads back eagerly)."""
+        return cls(fresh, value, inst, rows=None)
+
+    def resolve(self):
+        fresh = np.asarray(self._fresh)
+        value = np.asarray(self._value)
+        if self._rows is not None:
+            fresh = np.take(fresh, self._rows, axis=self._axis)
+            value = np.take(value, self._rows, axis=self._axis)
+        return fresh, self._inst, value
+
+
 class HardwareDataplane(RingReclamationMixin):
     """The coordinator + acceptor array + learner dedup memory, executing as
     single-dispatch device programs.
@@ -354,8 +385,16 @@ class MultiGroupDataplane(RingReclamationMixin):
                 donate_argnums=(0, 1),
                 static_argnames=("group_block",),
             )
+            self._persist_k = jax.jit(
+                kops.persistent_cohort_rounds,
+                donate_argnums=(0, 1),
+                static_argnames=("group_block", "block_b"),
+            )
         self._fused = jax.jit(
             batched.multigroup_fused_round, donate_argnums=(1, 2)
+        )
+        self._persist_j = jax.jit(
+            batched.persistent_multigroup_rounds, donate_argnums=(1, 2)
         )
         self._vote_all = jax.jit(batched.acceptor_phase2_all)
         self._prep_all = jax.jit(batched.acceptor_phase1_all)
@@ -531,7 +570,8 @@ class MultiGroupDataplane(RingReclamationMixin):
         return gids, member, use_k, inst
 
     def pipeline_cohort(
-        self, gids, values: np.ndarray, active: np.ndarray
+        self, gids, values: np.ndarray, active: np.ndarray,
+        defer: bool = False,
     ):
         """Advance exactly the cohort ``gids`` one ``BE``-sized round.
 
@@ -543,7 +583,10 @@ class MultiGroupDataplane(RingReclamationMixin):
         ``kernels.wirepath.cohort_wirepath_round``): only the group blocks
         containing members are visited, so a one-hot-group tier costs one
         group's work, not G's.  Returns host ``(fresh, inst, value)`` in
-        cohort row order.
+        cohort row order — or, with ``defer=True``, a ``_DeferredRound``
+        whose ``resolve()`` yields the same triple one wave later
+        (DESIGN.md §11); host watermark mirrors advance at dispatch time
+        either way.
         """
         gids, member, use_k, inst = self._cohort_prologue(gids, values)
         g = self.cfg.n_groups
@@ -584,9 +627,8 @@ class MultiGroupDataplane(RingReclamationMixin):
                 reclaim_limit=lim,
                 group_block=gb,
             )
-            kfresh, kvalue = np.asarray(kfresh), np.asarray(kvalue)
             rows = [rowof[gid] for gid in gids]
-            fresh, value = kfresh[rows], kvalue[rows]
+            dfresh, dvalue = kfresh, kvalue
         else:
             # jnp oracle: full-width dispatch with non-members held inert
             # (round presented as NO_ROUND) — bit-identical results
@@ -608,8 +650,8 @@ class MultiGroupDataplane(RingReclamationMixin):
                 self.cfg.quorum,
                 reclaim_limit=lim,
             )
-            ffresh, fvalue = np.asarray(ffresh), np.asarray(fvalue)
-            fresh, value = ffresh[gids], fvalue[gids]
+            rows = list(gids)
+            dfresh, dvalue = ffresh, fvalue
         memj = jnp.asarray(member != 0)
         self.cstate = CoordinatorState(
             next_inst=jnp.where(
@@ -619,7 +661,143 @@ class MultiGroupDataplane(RingReclamationMixin):
         )
         for gid in gids:
             self.next_inst_host[gid] += be
-        return fresh, inst, value
+        handle = _DeferredRound(dfresh, dvalue, inst, rows=rows, axis=0)
+        return handle if defer else handle.resolve()
+
+    def _wave_block(self, be: int, bases) -> int:
+        """Batch-block size for a persistent wave: upgrade to one grid step
+        per round (``bb = be``) when every member's base — and therefore
+        every subsequent window base, each round advancing by ``be`` —
+        is ``be``-aligned; else the ordinary wire block.  A perf-only
+        choice: block size never changes results."""
+        if (
+            self.cfg.n_instances % be == 0
+            and all(base % be == 0 for base in bases)
+        ):
+            return be
+        return self._block(be)
+
+    def pipeline_persistent(
+        self, gids, values: np.ndarray, active: np.ndarray,
+        defer: bool = False,
+    ):
+        """Advance the cohort ``gids`` K back-to-back full rounds in ONE
+        device dispatch (DESIGN.md §11): the wave descriptor (per-round
+        window bases + participation) rides scalar prefetch, the chunk
+        queue rides device-resident, and results sync back to host once
+        per wave instead of once per round.
+
+        ``values`` is ``(K, len(gids), BE, V)`` — round-major, row order =
+        cohort order — and ``active`` ``(K, len(gids), BE)``.  Every member
+        participates in every round (the planner only mints K > 1 when each
+        member has K full chunks queued), windows are consecutive
+        ``BE``-slices from each member's watermark, and delivery is
+        bit-identical to K sequential ``pipeline_cohort`` calls.  Returns
+        host ``(fresh[K, M, BE], inst[K, M, BE], value[K, M, BE, V])``, or
+        a ``_DeferredRound`` with ``defer=True``.
+        """
+        k, be = values.shape[0], values.shape[2]
+        if k * be > self.cfg.n_instances:
+            raise ValueError(
+                f"persistent wave of {k} x {be} instances would lap the "
+                f"{self.cfg.n_instances}-instance ring"
+            )
+        gids, member, use_k, _inst0 = self._cohort_prologue(gids, values[0])
+        g = self.cfg.n_groups
+        marks = self.next_inst_host
+        # guard the wave's LAST window up front: an over-watermark wave
+        # must fail before any state moves, never mid-wave
+        for gid in gids:
+            self._reclaim_guard(gid, marks[gid] + (k - 1) * be, be)
+        lim = self._reclaim_limits()
+        gb, blocks = plan_mod.cohort_blocks(gids, marks, self._fold_width())
+        self.last_gb = gb
+        self.dispatch_count += 1
+        # wave descriptor: cumulative window-base table + participation
+        # (rows for non-members are ignored — the kernel substitutes the
+        # folded block's lockstep base for them)
+        wni = np.zeros((k, g), np.int32)
+        wen = np.zeros((k, g), np.int32)
+        steps = np.arange(k, dtype=np.int32) * be
+        for gid in gids:
+            wni[:, gid] = marks[gid] + steps
+            wen[:, gid] = 1
+        inst = np.stack(
+            [
+                np.stack(
+                    [
+                        np.arange(w, w + be, dtype=np.int32)
+                        for w in wni[r, gids]
+                    ]
+                )
+                for r in range(k)
+            ]
+        )
+        if use_k:
+            rowof = {
+                blk * gb + kk: j * gb + kk
+                for j, blk in enumerate(blocks)
+                for kk in range(gb)
+            }
+            kvals = np.zeros(
+                (k, len(blocks) * gb, be, self.cfg.value_words), np.int32
+            )
+            kvals[:, :, :, 0] = NOP_SENTINEL
+            for row, gid in enumerate(gids):
+                kvals[:, rowof[gid]] = values[:, row]
+            self.stack, self.lstate, kfresh, _win, kvalue = self._persist_k(
+                self.stack,
+                self.lstate,
+                jnp.asarray(np.asarray(blocks, np.int32)),
+                jnp.asarray(wni),
+                jnp.asarray(wen),
+                self.cstate.crnd,
+                self.alive_mask,
+                self.cfg.quorum,
+                jnp.asarray(kvals),
+                reclaim_limit=lim,
+                group_block=gb,
+                block_b=self._wave_block(be, [marks[gid] for gid in gids]),
+            )
+            rows = [rowof[gid] for gid in gids]
+            dfresh, dvalue = kfresh, kvalue
+        else:
+            # jnp oracle: full-width scatter per round, K-unrolled under
+            # one jit — still one dispatch, bit-identical results
+            per_round = [
+                plan_mod.scatter_rows(
+                    gids, values[r], active[r], g, self.cfg.value_words
+                )
+                for r in range(k)
+            ]
+            vals_f = np.stack([v for v, _ in per_round])
+            act_f = np.stack([a for _, a in per_round])
+            _c, self.stack, self.lstate, pfresh, _pi, _pw, pvalue = (
+                self._persist_j(
+                    self.cstate,
+                    self.stack,
+                    self.lstate,
+                    jnp.asarray(vals_f),
+                    jnp.asarray(act_f),
+                    self.alive_mask,
+                    self.cfg.quorum,
+                    enabled_rounds=jnp.asarray(wen != 0),
+                    reclaim_limit=lim,
+                )
+            )
+            rows = list(gids)
+            dfresh, dvalue = pfresh, pvalue
+        memj = jnp.asarray(member != 0)
+        self.cstate = CoordinatorState(
+            next_inst=jnp.where(
+                memj, self.cstate.next_inst + k * be, self.cstate.next_inst
+            ),
+            crnd=self.cstate.crnd,
+        )
+        for gid in gids:
+            self.next_inst_host[gid] += k * be
+        handle = _DeferredRound(dfresh, dvalue, inst, rows=rows, axis=1)
+        return handle if defer else handle.resolve()
 
     def burn_forward(self, gid: int, target: int) -> None:
         """Advance a group's sequencer watermark to ``target`` without
@@ -943,7 +1121,8 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
 
     # -- cohort dispatch (DESIGN.md §8), sharded execution -------------------
     def pipeline_cohort(
-        self, gids, values: np.ndarray, active: np.ndarray
+        self, gids, values: np.ndarray, active: np.ndarray,
+        defer: bool = False,
     ):
         """Same contract (and bit-identical results) as the unsharded
         ``pipeline_cohort``, executed as one ``shard_map`` program.
@@ -992,6 +1171,41 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
             self.next_inst_host[gid] += be
         self._sync_cstate()
         self.last_gb = plan_gb
+        if defer:
+            return _DeferredRound.resolved(fresh, value, inst)
+        return fresh, inst, value
+
+    def pipeline_persistent(
+        self, gids, values: np.ndarray, active: np.ndarray,
+        defer: bool = False,
+    ):
+        """The documented K=1 fallback (DESIGN.md §11): shard_map needs
+        uniform per-shard shapes and host-authoritative control scalars
+        enter every dispatch, so the sharded engine executes a persistent
+        wave as K sequential cohort dispatches — delivery and numbering
+        stay bit-identical to the unsharded wave; only ``dispatch_count``
+        (K launches instead of one) and latency differ."""
+        k, be = values.shape[0], values.shape[2]
+        gids = list(gids)
+        if k * be > self.cfg.n_instances:
+            raise ValueError(
+                f"persistent wave of {k} x {be} instances would lap the "
+                f"{self.cfg.n_instances}-instance ring"
+            )
+        # same up-front whole-wave guard as the unsharded path: fail
+        # before any round of the wave mutates state
+        marks = self.next_inst_host
+        for gid in gids:
+            self._reclaim_guard(gid, marks[gid] + (k - 1) * be, be)
+        outs = [
+            self.pipeline_cohort(gids, values[r], active[r])
+            for r in range(k)
+        ]
+        fresh = np.stack([o[0] for o in outs])
+        inst = np.stack([o[1] for o in outs])
+        value = np.stack([o[2] for o in outs])
+        if defer:
+            return _DeferredRound.resolved(fresh, value, inst)
         return fresh, inst, value
 
     def burn_forward(self, gid: int, target: int) -> None:
@@ -1102,6 +1316,7 @@ class PaxosContext:
                 batch=self.cfg.batch,
                 n_instances=self.cfg.n_instances,
                 realign_after=self.cfg.realign_after,
+                persistent_rounds=self.cfg.persistent_rounds,
             )
             if self.grouped
             else None
@@ -1197,9 +1412,14 @@ class PaxosContext:
             self._pump_learners()
             self._retransmit()
 
+    def quiescent(self) -> bool:
+        """True when nothing is in flight: no pending client sequences and
+        no undelivered fabric traffic."""
+        return not self._pending and self.net.pending() == 0
+
     def run_until_quiescent(self, max_rounds: int = 64) -> None:
         for _ in range(max_rounds):
-            if not self._pending and self.net.pending() == 0:
+            if self.quiescent():
                 return
             self.pump()
 
@@ -1357,8 +1577,21 @@ class PaxosContext:
         # to not being pumped.  Burst sizes are engine-agnostic, so every
         # backend — and G independent per-group oracles — resolves the
         # wave identically.
+        # The wave loop is double-buffered (DESIGN.md §11) when
+        # ``cfg.async_pump``: wave N's host read-back is deferred until
+        # wave N+1 has been dispatched, so host planning/packing overlaps
+        # device execution.  Planning reads only host mirrors (advanced at
+        # dispatch time), never a resolve, and every in-flight wave is
+        # drained before pump() returns — the pump stays externally
+        # synchronous, with delivery order identical to the serial loop.
+        # A cohort planned as a K-round persistent wave consumes K - 1
+        # further batch-sized slices from its members' queues and rides
+        # ONE dispatch (``pipeline_persistent``).
         hw = self.hw
+        async_on = self.cfg.async_pump
+        in_flight: List[Tuple[Tuple[int, ...], Any]] = []
         while any(queues):
+            pending = [len(q) for q in queues]
             chunks = [q[:b] for q in queues]
             queues = [q[b:] for q in queues]
             rp = self.planner.plan_round(
@@ -1366,27 +1599,92 @@ class PaxosContext:
                 hw.next_inst_host,
                 hw.live_host,
                 hw.crnd_host,
+                pending=pending,
             )
             for gid, target in rp.realign:
                 hw.burn_forward(gid, target)
+            wave: List[Tuple[Tuple[int, ...], Any]] = []
             for cohort in rp.cohorts:
-                packed = [
-                    self._pack_chunk(chunks[gid], cohort.burst)
-                    for gid in cohort.gids
-                ]
-                vals = np.stack([v for v, _ in packed])
-                act = np.stack([a for _, a in packed])
-                fresh, inst, value = hw.pipeline_cohort(
-                    cohort.gids, vals, act
-                )
-                for row, gid in enumerate(cohort.gids):
-                    for j in range(fresh.shape[1]):
-                        if not fresh[row, j]:
-                            continue
-                        raw = value[row, j].tobytes()
-                        if int(inst[row, j]) not in self.learned_g[gid]:
-                            self.learned_g[gid][int(inst[row, j])] = raw
-                        self._deliver_group(gid, int(inst[row, j]), raw)
+                kk = self._wave_depth_clamped(cohort)
+                if kk > 1:
+                    rounds = [[chunks[gid] for gid in cohort.gids]]
+                    for _ in range(kk - 1):
+                        rounds.append(
+                            [queues[gid][:b] for gid in cohort.gids]
+                        )
+                        for gid in cohort.gids:
+                            queues[gid] = queues[gid][b:]
+                    packed = [
+                        [self._pack_chunk(c, cohort.burst) for c in row]
+                        for row in rounds
+                    ]
+                    vals = np.stack(
+                        [np.stack([v for v, _ in row]) for row in packed]
+                    )
+                    act = np.stack(
+                        [np.stack([a for _, a in row]) for row in packed]
+                    )
+                    handle = hw.pipeline_persistent(
+                        cohort.gids, vals, act, defer=True
+                    )
+                else:
+                    packed = [
+                        self._pack_chunk(chunks[gid], cohort.burst)
+                        for gid in cohort.gids
+                    ]
+                    vals = np.stack([v for v, _ in packed])
+                    act = np.stack([a for _, a in packed])
+                    handle = hw.pipeline_cohort(
+                        cohort.gids, vals, act, defer=True
+                    )
+                wave.append((cohort.gids, handle))
+            if async_on:
+                # this wave is in flight: resolve and deliver the PREVIOUS
+                # wave while the device works on this one
+                for gids_, handle in in_flight:
+                    self._resolve_wave(gids_, handle)
+                in_flight = wave
+            else:
+                for gids_, handle in wave:
+                    self._resolve_wave(gids_, handle)
+        for gids_, handle in in_flight:
+            self._resolve_wave(gids_, handle)
+
+    def _wave_depth_clamped(self, cohort: plan_mod.Cohort) -> int:
+        """The pump-side clamp on a cohort's planned wave depth: reclaim
+        headroom (instances until the first unreclaimed slot) may cap K
+        below the planner's choice.  Host-scalar arithmetic on mirrors that
+        are identical across backends, so every engine clamps identically;
+        chunks beyond the clamp simply stay queued for the next wave."""
+        kk = cohort.rounds
+        if kk <= 1:
+            return kk
+        lim = self.hw._reclaim_limits_np()
+        if lim is not None:
+            for gid in cohort.gids:
+                head = (
+                    int(lim[gid]) - self.hw.next_inst_host[gid]
+                ) // cohort.burst
+                kk = min(kk, head)
+        return max(1, kk)
+
+    def _resolve_wave(self, gids: Tuple[int, ...], handle: Any) -> None:
+        """Host read-back + delivery for one dispatched cohort wave.
+        Persistent waves deliver rounds-then-rows — exactly the order K
+        sequential single-round dispatches would have produced."""
+        fresh, inst, value = handle.resolve()
+        if fresh.ndim == 2:            # single-round wave: (M, BE)
+            fresh, inst, value = fresh[None], inst[None], value[None]
+        for r in range(fresh.shape[0]):
+            for row, gid in enumerate(gids):
+                for j in range(fresh.shape[2]):
+                    if not fresh[r, row, j]:
+                        continue
+                    raw = value[r, row, j].tobytes()
+                    ii = int(inst[r, row, j])
+                    if ii not in self.learned_g[gid]:
+                        self.learned_g[gid][ii] = raw
+                    self._deliver_group(gid, ii, raw)
 
     def _burst_size(self, longest: int) -> int:
         """Wire-burst sizing, engine-agnostic (``core.plan.quantize_burst``):

@@ -410,6 +410,72 @@ def multigroup_fused_round(
     )
 
 
+def persistent_multigroup_rounds(
+    cstate: CoordinatorState,   # leaves shaped (G,)
+    stack: AcceptorState,       # leaves shaped (G, A, N[, V])
+    lstate: LearnerState,       # leaves shaped (G, N[, V])
+    values: jax.Array,          # int32[K, G, B, V]
+    active: jax.Array,          # bool[K, G, B]
+    alive: jax.Array,           # bool[G, A]
+    quorum: int | jax.Array,
+    enabled_rounds: jax.Array | None = None,  # bool/int32[K, G]; None = all
+    reclaim_limit: jax.Array | None = None,   # int32[G]; None = no reclamation
+) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+           jax.Array, jax.Array, jax.Array, jax.Array]:
+    """K Phase-2 rounds unrolled in ONE jnp program: the bit-exact oracle of
+    the persistent wave kernel ``kernels.wirepath.persistent_wirepath_round``
+    (DESIGN.md §11).
+
+    Round ``k`` runs ``multigroup_fused_round`` on ``values[k]`` with the
+    per-round participation mask ``enabled_rounds[k]`` applied exactly as
+    the dataplane applies ``enabled`` to a single-round dispatch: a group
+    sitting the round out is presented at NO_ROUND (its acceptors reject
+    every slot) and its watermark does not advance — so the whole wave is
+    bit-identical to K sequential single-round dispatches by construction.
+    ``K`` is a trace-time constant (the leading axis of ``values``); the
+    Python loop unrolls under jit, so the wave still costs one dispatch.
+
+    Returns ``(cstate', stack', lstate', fresh[K, G, B], inst[K, G, B],
+    win_vrnd[K, G, B], value[K, G, B, V])``.
+    """
+    k = values.shape[0]
+    freshes, insts, wins, vals = [], [], [], []
+    for r in range(k):
+        if enabled_rounds is None:
+            en = None
+            eff = cstate
+        else:
+            en = jnp.asarray(enabled_rounds[r]) != 0
+            eff = CoordinatorState(
+                next_inst=cstate.next_inst,
+                crnd=jnp.where(en, cstate.crnd, NO_ROUND),
+            )
+        new_c, stack, lstate, fresh, inst, win, value = multigroup_fused_round(
+            eff, stack, lstate, values[r], active[r], alive, quorum,
+            reclaim_limit,
+        )
+        if en is None:
+            cstate = CoordinatorState(
+                next_inst=new_c.next_inst, crnd=cstate.crnd
+            )
+        else:
+            cstate = CoordinatorState(
+                next_inst=jnp.where(
+                    en, new_c.next_inst, cstate.next_inst
+                ),
+                crnd=cstate.crnd,
+            )
+        freshes.append(fresh)
+        insts.append(inst)
+        wins.append(win)
+        vals.append(value)
+    return (
+        cstate, stack, lstate,
+        jnp.stack(freshes), jnp.stack(insts), jnp.stack(wins),
+        jnp.stack(vals),
+    )
+
+
 def init_multigroup_state(
     n_groups: int, n_acceptors: int, n_instances: int, value_words: int
 ) -> Tuple[CoordinatorState, AcceptorState, LearnerState]:

@@ -144,7 +144,15 @@ def pack_rows(
     rows: Sequence[np.ndarray], be: int, value_words: int
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Pack encoded value rows into a ``(be, V)`` wire burst; unfilled
-    slots carry the NOP sentinel and are inactive."""
+    slots carry the NOP sentinel and are inactive.
+
+    Validated up front: an oversized chunk must fail *before* any wire
+    array is built, never mid-write — the historical unguarded loop raised
+    a bare ``IndexError`` after partially mutating the burst."""
+    if len(rows) > be:
+        raise ValueError(
+            f"chunk of {len(rows)} rows exceeds quantized burst {be}"
+        )
     vals = np.zeros((be, value_words), np.int32)
     active = np.zeros((be,), bool)
     vals[:, 0] = NOP_SENTINEL
@@ -181,10 +189,16 @@ class Cohort:
     """One dispatch of a round plan: the enabled groups sharing a quantized
     burst size.  ``gids`` may span several watermark classes — the dispatch
     folds block-wise where classes align and degrades to width-1 blocks
-    where they don't (``fold_width_full`` / ``cohort_blocks``)."""
+    where they don't (``fold_width_full`` / ``cohort_blocks``).
+
+    ``rounds`` > 1 marks a *persistent wave* (DESIGN.md §11): the dispatch
+    runs that many back-to-back full-batch Phase-2 rounds device-side,
+    consuming ``rounds`` burst-sized chunks per member, and syncs results
+    back to the host once."""
 
     gids: Tuple[int, ...]
     burst: int
+    rounds: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,10 +234,12 @@ class DispatchPlanner:
         batch: int,
         n_instances: int,
         realign_after: Optional[int] = None,
+        persistent_rounds: int = 1,
     ):
         self.batch = batch
         self.n_instances = n_instances
         self.realign_after = realign_after
+        self.persistent_rounds = max(1, int(persistent_rounds))
         self._fragmented_rounds = 0
         self.last_plan: Optional[RoundPlan] = None
         self.stats = {
@@ -231,6 +247,7 @@ class DispatchPlanner:
             "dispatches": 0,
             "full_fold_rounds": 0,
             "realignments": 0,
+            "persistent_waves": 0,
             "burst_shapes": set(),
             "service_loads": None,
         }
@@ -247,11 +264,40 @@ class DispatchPlanner:
         self.stats["service_loads"] = list(loads)
 
     def report(self) -> Dict:
+        # Snapshot-copy every mutable value: a report is an observation,
+        # not a window onto live planner state (callers mutating a report
+        # must not perturb planning, and later observe_service_loads calls
+        # must not rewrite already-returned reports).
         out = dict(self.stats)
         out["burst_shapes"] = sorted(self.stats["burst_shapes"])
+        loads = self.stats["service_loads"]
+        out["service_loads"] = None if loads is None else list(loads)
         out["fragmented_rounds"] = self._fragmented_rounds
         out["realign_after"] = self.realign_after
         return out
+
+    def _wave_depth(
+        self,
+        burst: int,
+        gids: Sequence[int],
+        pending: Optional[Sequence[int]],
+    ) -> int:
+        """Persistent-wave depth K for one cohort (DESIGN.md §11).
+
+        K > 1 only when the burst is the full batch — the wave's rounds are
+        consecutive batch-sized queue slices, so numbering is identical to
+        K single-round waves by construction — and every member has K full
+        chunks queued.  Clamped by the ``persistent_rounds`` policy knob and
+        by the ring (a wave may not lap itself: K * burst <= N)."""
+        if (
+            self.persistent_rounds <= 1
+            or pending is None
+            or burst != self.batch
+        ):
+            return 1
+        k = min(pending[i] // burst for i in gids)
+        k = min(k, self.persistent_rounds, self.n_instances // burst)
+        return max(1, k)
 
     # -- the planner ---------------------------------------------------------
     def plan_round(
@@ -260,6 +306,7 @@ class DispatchPlanner:
         marks: Sequence[int],
         live: Sequence[bool],
         crnd: Sequence[int],
+        pending: Optional[Sequence[int]] = None,
     ) -> RoundPlan:
         """Resolve one chunk wave: membership/frozen masking, the
         realignment sweep, and the hot->cold cohort tiering.
@@ -267,6 +314,12 @@ class DispatchPlanner:
         ``loads`` are this wave's per-group chunk lengths; ``marks`` the
         host watermark mirrors; ``live`` membership; ``crnd`` the host
         round mirrors (``NO_ROUND`` = frozen under a software coordinator).
+        ``pending`` gives per-group *total* queued lengths (first chunk
+        included); when provided and ``persistent_rounds`` > 1, a cohort
+        whose burst is the full batch and whose every member has K full
+        batch-sized chunks queued is planned as a K-round persistent wave
+        — burst quantization itself never changes, so engine-agnostic
+        numbering is preserved round for round.
         """
         g = len(loads)
         enabled = tuple(
@@ -316,9 +369,15 @@ class DispatchPlanner:
             tiers.setdefault(be, []).append(i)
             self.stats["burst_shapes"].add(be)
         cohorts = tuple(
-            Cohort(gids=tuple(gids), burst=be)
+            Cohort(
+                gids=tuple(gids),
+                burst=be,
+                rounds=self._wave_depth(be, gids, pending),
+            )
             for be, gids in sorted(tiers.items(), reverse=True)
         )
+        if any(c.rounds > 1 for c in cohorts):
+            self.stats["persistent_waves"] += 1
         fragmentation = len({marks[i] for i in en_gids})
         plan = RoundPlan(
             cohorts=cohorts,

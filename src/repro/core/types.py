@@ -58,6 +58,18 @@ class PaxosConfig:
     # (DESIGN.md §8).  None = never realign: instance numbering then stays
     # bit-identical to independent per-group deployments.
     realign_after: "int | None" = None
+    # Persistent-wave depth cap (DESIGN.md §11): a cohort with K full
+    # batch-sized chunks queued for every member runs up to K Phase-2
+    # rounds in ONE device dispatch, syncing results back once per wave.
+    # 1 = every round is its own dispatch (the pre-§11 behavior).  Delivery
+    # and numbering are bit-identical either way; only dispatch_count and
+    # latency differ.
+    persistent_rounds: int = 8
+    # Double-buffered pump (DESIGN.md §11): plan and pack wave N+1 on host
+    # while wave N executes, deferring each wave's host read-back by one
+    # wave.  pump() stays externally synchronous (all waves resolved before
+    # it returns) and delivery order is unchanged.
+    async_pump: bool = True
 
     @property
     def f(self) -> int:

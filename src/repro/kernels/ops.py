@@ -263,6 +263,61 @@ def cohort_fused_round(
     )
 
 
+def persistent_cohort_rounds(
+    stack: AcceptorState,       # leaves shaped (G, A, N[, V])
+    lstate: LearnerState,       # leaves shaped (G, N[, V])
+    gsel: jax.Array,            # int32[NB]  selected group-block indices
+    wni: jax.Array,             # int32[K, G]  per-round window bases
+    wen: jax.Array,             # int32[K, G]  per-round participation
+    crnd: jax.Array,            # int32[G]
+    alive: jax.Array,           # int32[G, A]
+    quorum: int | jax.Array,
+    values: jax.Array,          # int32[K, NB*GB, B, V]  compact wave values
+    reclaim_limit: jax.Array | None = None,  # int32[G]; None = no reclamation
+    *,
+    group_block: int = 1,
+    block_b: int | None = None,
+) -> Tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
+    """Persistent K-round wave dispatch (DESIGN.md §11): the whole chunk
+    wave stays device-resident and syncs back to host once per K rounds.
+    Coordinator-stateless like ``cohort_fused_round`` — the dataplane walks
+    its own watermark mirrors from the same ``wni``/``wen`` descriptor.
+
+    Returns ``(stack', lstate', fresh[K, C, B], win[K, C, B],
+    value[K, C, B, V])`` with ``C = NB * group_block`` compact rows.
+    """
+    if block_b is None:
+        block_b = _wirepath.DEFAULT_BLOCK_B
+    (st_rnd, st_vrnd, st_val, ldel, linst, lval, fresh, win, value) = (
+        _wirepath.persistent_wirepath_round(
+            jnp.asarray(gsel, jnp.int32),
+            jnp.asarray(wni, jnp.int32),
+            jnp.asarray(wen, jnp.int32),
+            crnd,
+            jnp.asarray(quorum, jnp.int32),
+            jnp.asarray(alive, jnp.int32),
+            stack.rnd,
+            stack.vrnd,
+            stack.value,
+            lstate.delivered,
+            lstate.inst,
+            lstate.value,
+            values,
+            reclaim_limit,
+            block_b=block_b,
+            group_block=group_block,
+            interpret=INTERPRET,
+        )
+    )
+    return (
+        AcceptorState(st_rnd, st_vrnd, st_val),
+        LearnerState(ldel, linst, lval),
+        fresh != 0,
+        win,
+        value,
+    )
+
+
 def acceptor_phase2_all(
     stack: AcceptorState, msgs: MsgBatch, alive: jax.Array
 ) -> Tuple[AcceptorState, MsgBatch]:

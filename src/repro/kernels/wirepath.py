@@ -95,6 +95,68 @@ def _alive_col(alive_ref, a: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 # The fused multi-group round megakernel
 # ---------------------------------------------------------------------------
+def _phase2_block(
+    inst,       # int32[GB, BB]  absolute instance numbers of this window
+    crnd_g,     # int32[GB]      per-group coordinator round (NO_ROUND = inert)
+    alive,      # bool[GB, A]
+    lim_g,      # int32[GB]      per-group reclaim limit (first refused inst)
+    quorum,     # int32[]
+    mval,       # int32[GB, BB, V]  burst values
+    cur_rnd,    # int32[GB, A, BB]  acceptor ring blocks
+    cur_vrnd,   # int32[GB, A, BB]
+    cur_val,    # int32[GB, A, BB, V]
+    ldel,       # int32[GB, BB]     learner ring blocks
+    linst,      # int32[GB, BB]
+    lval,       # int32[GB, BB, V]
+):
+    """One Phase-2 round over one ``(GB, BB)`` window: sequence -> all-
+    acceptor vote -> learner quorum -> ring dedup, as a pure function of the
+    loaded blocks.  Shared by the single-round and persistent kernel bodies
+    (identical arithmetic is what makes the K-round entry bit-exact against
+    K single rounds by construction).  Returns
+    ``(o_rnd, o_vrnd, o_val, o_ldel, o_linst, o_lval, fresh, win, value)``.
+    """
+    crnd = crnd_g[:, None, None]                                   # (GB, 1, 1)
+
+    # Reclamation permit (DESIGN.md §9): a lane at or past the group's
+    # reclaim limit (snapshot watermark + N) would land in a ring slot whose
+    # decision has not been drained yet — acceptors refuse it wholesale, so
+    # the slot survives bit-unchanged and the host sees backpressure instead
+    # of a silent dedup-state overwrite.
+    permit = inst < lim_g[:, None]                                 # (GB, BB)
+
+    # -- every group's acceptor array votes (Phase 2A -> 2B), all at once ----
+    accept = (
+        alive[:, :, None] & (crnd >= cur_rnd) & permit[:, None, :]
+    )                                                              # (GB, A, BB)
+
+    o_rnd = jnp.where(accept, crnd, cur_rnd)
+    o_vrnd = jnp.where(accept, crnd, cur_vrnd)
+    o_val = jnp.where(accept[..., None], mval[:, None], cur_val)
+
+    # -- learner quorum: reduce down the acceptor axis, per group ------------
+    vote_vrnd = jnp.where(accept, crnd, NO_ROUND)                  # (GB, A, BB)
+    win = jnp.max(vote_vrnd, axis=1)                               # (GB, BB)
+    agree = accept & (vote_vrnd == win[:, None, :])                # (GB, A, BB)
+    count = jnp.sum(agree.astype(jnp.int32), axis=1)               # (GB, BB)
+    deliver = count >= quorum
+    # decided value: first agreeing acceptor's vote, as a one-hot contraction
+    first = agree & (jnp.cumsum(agree.astype(jnp.int32), axis=1) == 1)
+    vote_val = jnp.where(accept[..., None], mval[:, None], 0)      # (GB,A,BB,V)
+    value = jnp.sum(first.astype(jnp.int32)[..., None] * vote_val, axis=1)
+
+    # -- ring dedup (LearnerState), in place, per group ----------------------
+    dup = (ldel != 0) & (linst == inst)
+    fresh = deliver & ~dup
+    o_ldel = ldel | deliver.astype(jnp.int32)
+    o_linst = jnp.where(fresh, inst, linst)
+    o_lval = jnp.where(fresh[..., None], value, lval)
+    return (
+        o_rnd, o_vrnd, o_val, o_ldel, o_linst, o_lval,
+        fresh.astype(jnp.int32), win, value,
+    )
+
+
 def _mg_wirepath_kernel(
     # scalar prefetch (SMEM) — consumed by the index maps; the kernel body
     # reads the same per-group values from the VMEM mirrors below, as vector
@@ -133,54 +195,25 @@ def _mg_wirepath_kernel(
     _gb, _a, bb = st_rnd_ref.shape
 
     ni_g = niv_ref[...]                                            # (GB,)
-    crnd_g = crndv_ref[...]                                        # (GB,)
-    alive = alivev_ref[...] != 0                                   # (GB, A)
-    lim_g = limv_ref[...]                                          # (GB,)
-
-    crnd = crnd_g[:, None, None]                                   # (GB, 1, 1)
-    mval = values_ref[...]                                         # (GB, BB, V)
-
-    # Reclamation permit (DESIGN.md §9): a lane at or past the group's
-    # reclaim limit (snapshot watermark + N) would land in a ring slot whose
-    # decision has not been drained yet — acceptors refuse it wholesale, so
-    # the slot survives bit-unchanged and the host sees backpressure instead
-    # of a silent dedup-state overwrite.
     inst = ni_g[:, None] + i * bb + _lane_iota(bb)[None, :]        # (GB, BB)
-    permit = inst < lim_g[:, None]                                 # (GB, BB)
-
-    # -- every group's acceptor array votes (Phase 2A -> 2B), all at once ----
-    cur_rnd = st_rnd_ref[...]                                      # (GB, A, BB)
-    cur_vrnd = st_vrnd_ref[...]
-    cur_val = st_val_ref[...]
-    accept = (
-        alive[:, :, None] & (crnd >= cur_rnd) & permit[:, None, :]
-    )                                                              # (GB, A, BB)
-
-    o_rnd_ref[...] = jnp.where(accept, crnd, cur_rnd)
-    o_vrnd_ref[...] = jnp.where(accept, crnd, cur_vrnd)
-    o_val_ref[...] = jnp.where(accept[..., None], mval[:, None], cur_val)
-
-    # -- learner quorum: reduce down the acceptor axis, per group ------------
-    vote_vrnd = jnp.where(accept, crnd, NO_ROUND)                  # (GB, A, BB)
-    win = jnp.max(vote_vrnd, axis=1)                               # (GB, BB)
-    agree = accept & (vote_vrnd == win[:, None, :])                # (GB, A, BB)
-    count = jnp.sum(agree.astype(jnp.int32), axis=1)               # (GB, BB)
-    deliver = count >= q_ref[0]
-    # decided value: first agreeing acceptor's vote, as a one-hot contraction
-    first = agree & (jnp.cumsum(agree.astype(jnp.int32), axis=1) == 1)
-    vote_val = jnp.where(accept[..., None], mval[:, None], 0)      # (GB,A,BB,V)
-    value = jnp.sum(first.astype(jnp.int32)[..., None] * vote_val, axis=1)
-
-    # -- ring dedup (LearnerState), in place, per group ----------------------
-    dup = (ldel_ref[...] != 0) & (linst_ref[...] == inst)
-    fresh = deliver & ~dup
-    o_ldel_ref[...] = ldel_ref[...] | deliver.astype(jnp.int32)
-    o_linst_ref[...] = jnp.where(fresh, inst, linst_ref[...])
-    o_lval_ref[...] = jnp.where(fresh[..., None], value, lval_ref[...])
-
-    fresh_ref[...] = fresh.astype(jnp.int32)
-    win_ref[...] = win
-    value_ref[...] = value
+    (
+        o_rnd_ref[...], o_vrnd_ref[...], o_val_ref[...],
+        o_ldel_ref[...], o_linst_ref[...], o_lval_ref[...],
+        fresh_ref[...], win_ref[...], value_ref[...],
+    ) = _phase2_block(
+        inst,
+        crndv_ref[...],
+        alivev_ref[...] != 0,
+        limv_ref[...],
+        q_ref[0],
+        values_ref[...],
+        st_rnd_ref[...],
+        st_vrnd_ref[...],
+        st_val_ref[...],
+        ldel_ref[...],
+        linst_ref[...],
+        lval_ref[...],
+    )
 
 
 def _cohort_wirepath_kernel(gsel_ref, *rest):
@@ -414,6 +447,260 @@ def multigroup_wirepath_round(
         gsel, next_inst, crnd, quorum, alive,
         st_rnd, st_vrnd, st_val, ldel, linst, lval, values, enabled, limit,
         block_b=block_b, group_block=group_block, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Persistent K-round entry: a whole wave of Phase-2 rounds per pallas_call
+# ---------------------------------------------------------------------------
+def _persistent_wirepath_kernel(
+    # scalar prefetch (SMEM) — consumed by the index maps; the body reads
+    # the same per-(round, group) values from the VMEM mirrors below
+    gsel_ref,       # int32[NB]    selected group-block indices (÷ GB)
+    wni_ref,        # int32[K, G]  wave descriptor: per-round window bases
+    crnd_ref,       # int32[G]     per-group coordinator round
+    q_ref,          # int32[1]     quorum (f+1)
+    alive_ref,      # int32[G, A]  per-group runtime liveness mask
+    lim_ref,        # int32[G]     per-group reclaim limit
+    wen_ref,        # int32[K, G]  wave descriptor: per-round enables
+    # inputs (VMEM tiles)
+    values_ref,     # int32[1, GB, BB, V]  round k's burst values
+    st_rnd_ref,     # int32[GB, A, BB]     acceptor ring blocks (aliased out)
+    st_vrnd_ref,    # int32[GB, A, BB]
+    st_val_ref,     # int32[GB, A, BB, V]
+    ldel_ref,       # int32[GB, BB]        learner ring blocks (aliased out)
+    linst_ref,      # int32[GB, BB]
+    lval_ref,       # int32[GB, BB, V]
+    wniv_ref,       # int32[1, GB]  VMEM mirror of wni_ref's (round, block)
+    wenv_ref,       # int32[1, GB]  VMEM mirror of wen_ref's (round, block)
+    crndv_ref,      # int32[GB]     VMEM mirror of crnd_ref's block
+    alivev_ref,     # int32[GB, A]  VMEM mirror of alive_ref's block
+    limv_ref,       # int32[GB]     VMEM mirror of lim_ref's block
+    # outputs
+    o_rnd_ref,      # int32[GB, A, BB]
+    o_vrnd_ref,     # int32[GB, A, BB]
+    o_val_ref,      # int32[GB, A, BB, V]
+    o_ldel_ref,     # int32[GB, BB]
+    o_linst_ref,    # int32[GB, BB]
+    o_lval_ref,     # int32[GB, BB, V]
+    fresh_ref,      # int32[1, GB, BB]
+    win_ref,        # int32[1, GB, BB]
+    value_ref,      # int32[1, GB, BB, V]
+):
+    # index-map inputs; body uses the mirrors
+    del gsel_ref, wni_ref, crnd_ref, alive_ref, lim_ref, wen_ref
+    i = pl.program_id(2)
+    _gb, _a, bb = st_rnd_ref.shape
+
+    ni_g = wniv_ref[0]                                             # (GB,)
+    # a group sitting out round k (wen == 0) rides the round inert: round
+    # presented as NO_ROUND so its acceptors reject every slot, its window
+    # (unchanged from its last enabled round) written back bit-identical
+    en_g = wenv_ref[0] != 0                                        # (GB,)
+    crnd_g = jnp.where(en_g, crndv_ref[...], jnp.int32(NO_ROUND))
+    inst = ni_g[:, None] + i * bb + _lane_iota(bb)[None, :]        # (GB, BB)
+    (
+        o_rnd_ref[...], o_vrnd_ref[...], o_val_ref[...],
+        o_ldel_ref[...], o_linst_ref[...], o_lval_ref[...],
+        fresh_ref[0], win_ref[0], value_ref[0],
+    ) = _phase2_block(
+        inst,
+        crnd_g,
+        alivev_ref[...] != 0,
+        limv_ref[...],
+        q_ref[0],
+        values_ref[0],
+        st_rnd_ref[...],
+        st_vrnd_ref[...],
+        st_val_ref[...],
+        ldel_ref[...],
+        linst_ref[...],
+        lval_ref[...],
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "group_block", "interpret")
+)
+def persistent_wirepath_round(
+    gsel: jax.Array,        # int32[NB]    selected group-block indices (÷ GB)
+    wni: jax.Array,         # int32[K, G]  per-round window bases (BB-aligned)
+    wen: jax.Array,         # int32[K, G]  per-round participation (0/1)
+    crnd: jax.Array,        # int32[G]     per-group coordinator round
+    quorum: jax.Array,      # int32[]
+    alive: jax.Array,       # int32[G, A] (0/1)
+    st_rnd: jax.Array,      # int32[G, A, N]   stacked acceptor rings
+    st_vrnd: jax.Array,     # int32[G, A, N]
+    st_val: jax.Array,      # int32[G, A, N, V]
+    ldel: jax.Array,        # int32[G, N]      learner rings
+    linst: jax.Array,       # int32[G, N]
+    lval: jax.Array,        # int32[G, N, V]
+    values: jax.Array,      # int32[K, NB*GB, B, V]  wave values, compact rows
+    limit: Optional[jax.Array] = None,    # int32[G]; None = no reclamation
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    group_block: int = 1,
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """K Phase-2 rounds in ONE ``pallas_call``: the persistent wire path.
+
+    The single-round dispatch pays a host round-trip per round, and on small
+    bursts that dispatch overhead — not consensus arithmetic — is the
+    throughput ceiling (the paper's host-boundary argument; BENCH_wirepath
+    rows ``trickle_*``).  Here the whole chunk *wave* is device-resident:
+    the grid grows a leading sequential round axis ``K``, each round k
+    re-runs sequence -> vote -> quorum -> learner dedup over its own ring
+    window, and host sync (watermarks, the ``fresh``/``value`` read-back)
+    happens once per K rounds instead of once per round.
+
+    The **wave descriptor** generalizes the cohort scalar-prefetch vectors
+    to a per-round table:
+
+      * ``wni[k, g]`` — group ``g``'s window base at round ``k``.  The host
+        precomputes the cumulative walk ``wni[k+1] = wni[k] + B·wen[k]``
+        (and applies the folded-block base substitution per round), so the
+        index maps stay pure lookups: block ``gi`` of round ``k`` maps its
+        rings at ``(wni[k, gsel[gi]·GB] // BB + i) % (N // BB)``.
+      * ``wen[k, g]`` — whether ``g`` participates in round ``k`` (the
+        per-round burst length, quantized: a group either rides a full
+        ``B``-slot window or sits the round out).  A non-participant is
+        presented at NO_ROUND with its window frozen, so it is written back
+        bit-unchanged — mid-wave freezes land exactly between rounds.
+      * ``gsel`` — the cohort group-block selection, shared by all K rounds
+        (one wave = one cohort).
+
+    Rounds are *sequential by construction*: round k+1's windows are
+    disjoint from round k's (enabled windows advance by B; ``K·B <= N``
+    keeps a wave from lapping the ring), and revisited blocks belong only
+    to non-participants whose writeback is bit-identical, so grid-step
+    pipelining can never read a stale block that matters.
+
+    Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
+    fresh[K, NB*GB, B], win_vrnd[K, NB*GB, B], value[K, NB*GB, B, V])`` —
+    per-round compact outputs, state aliased in place.
+    """
+    g, a, n = st_rnd.shape
+    k, c, b, v = values.shape
+    bb = min(block_b, b)
+    gb = group_block
+    nb = gsel.shape[0]
+    assert b % bb == 0, (b, bb)
+    assert n % bb == 0, (n, bb)
+    assert k * b <= n, "persistent wave may not lap the instance ring"
+    assert g % gb == 0, (g, gb)
+    assert c == nb * gb, (c, nb, gb)
+    assert wni.shape == (k, g), (wni.shape, k, g)
+    assert wen.shape == (k, g), (wen.shape, k, g)
+    nb_ring = n // bb
+    grid = (k, nb, b // bb)
+
+    def ring2(kk, gi, i, gsel_ref, wni_ref, *_):
+        gs = gsel_ref[gi]
+        return (gs, (wni_ref[kk, gs * gb] // bb + i) % nb_ring)
+
+    def ring3(kk, gi, i, gsel_ref, wni_ref, *_):
+        gs = gsel_ref[gi]
+        return (gs, (wni_ref[kk, gs * gb] // bb + i) % nb_ring, 0)
+
+    def stack3(kk, gi, i, gsel_ref, wni_ref, *_):
+        gs = gsel_ref[gi]
+        return (gs, 0, (wni_ref[kk, gs * gb] // bb + i) % nb_ring)
+
+    def stack4(kk, gi, i, gsel_ref, wni_ref, *_):
+        gs = gsel_ref[gi]
+        return (gs, 0, (wni_ref[kk, gs * gb] // bb + i) % nb_ring, 0)
+
+    def batch3(kk, gi, i, *_):
+        return (kk, gi, i)
+
+    def batch4(kk, gi, i, *_):
+        return (kk, gi, i, 0)
+
+    def wave2(kk, gi, i, gsel_ref, *_):
+        return (kk, gsel_ref[gi])
+
+    def group1(kk, gi, i, gsel_ref, *_):
+        return (gsel_ref[gi],)
+
+    def group2(kk, gi, i, gsel_ref, *_):
+        return (gsel_ref[gi], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, gb, bb, v), batch4),    # values (compact, per-k)
+            pl.BlockSpec((gb, a, bb), stack3),       # st_rnd
+            pl.BlockSpec((gb, a, bb), stack3),       # st_vrnd
+            pl.BlockSpec((gb, a, bb, v), stack4),    # st_val
+            pl.BlockSpec((gb, bb), ring2),           # ldel
+            pl.BlockSpec((gb, bb), ring2),           # linst
+            pl.BlockSpec((gb, bb, v), ring3),        # lval
+            pl.BlockSpec((1, gb), wave2),            # wni (VMEM mirror)
+            pl.BlockSpec((1, gb), wave2),            # wen (VMEM mirror)
+            pl.BlockSpec((gb,), group1),             # crnd (VMEM mirror)
+            pl.BlockSpec((gb, a), group2),           # alive (VMEM mirror)
+            pl.BlockSpec((gb,), group1),             # limit (VMEM mirror)
+        ],
+        out_specs=[
+            pl.BlockSpec((gb, a, bb), stack3),       # st_rnd'
+            pl.BlockSpec((gb, a, bb), stack3),       # st_vrnd'
+            pl.BlockSpec((gb, a, bb, v), stack4),    # st_val'
+            pl.BlockSpec((gb, bb), ring2),           # ldel'
+            pl.BlockSpec((gb, bb), ring2),           # linst'
+            pl.BlockSpec((gb, bb, v), ring3),        # lval'
+            pl.BlockSpec((1, gb, bb), batch3),       # fresh (compact, per-k)
+            pl.BlockSpec((1, gb, bb), batch3),       # win_vrnd
+            pl.BlockSpec((1, gb, bb, v), batch4),    # value
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((g, a, n), jnp.int32),
+        jax.ShapeDtypeStruct((g, a, n), jnp.int32),
+        jax.ShapeDtypeStruct((g, a, n, v), jnp.int32),
+        jax.ShapeDtypeStruct((g, n), jnp.int32),
+        jax.ShapeDtypeStruct((g, n), jnp.int32),
+        jax.ShapeDtypeStruct((g, n, v), jnp.int32),
+        jax.ShapeDtypeStruct((k, c, b), jnp.int32),
+        jax.ShapeDtypeStruct((k, c, b), jnp.int32),
+        jax.ShapeDtypeStruct((k, c, b, v), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        _persistent_wirepath_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        # state arrays update in place: inputs 8..13 (after the 7 scalar-
+        # prefetch args) alias outputs 0..5 — device-resident across rounds
+        input_output_aliases={8: 0, 9: 1, 10: 2, 11: 3, 12: 4, 13: 5},
+        interpret=interpret,
+    )
+    cr = jnp.asarray(crnd, jnp.int32).reshape((g,))
+    wenk = jnp.asarray(wen, jnp.int32).reshape((k, g)) != 0
+    wnik = jnp.asarray(wni, jnp.int32).reshape((k, g))
+    if gb > 1:
+        # per round, a folded block has ONE ring offset (its first group's
+        # window base); substitute that round's non-participants with the
+        # block's participating-lockstep base, exactly as the single-round
+        # cohort entry does — state-exact because non-participants are
+        # written back unchanged wherever their window lands
+        enb = wenk.reshape(k, g // gb, gb)
+        nib = wnik.reshape(k, g // gb, gb)
+        base = jnp.max(
+            jnp.where(enb, nib, jnp.iinfo(jnp.int32).min), axis=2
+        )
+        base = jnp.where(jnp.any(enb, axis=2), base, 0)
+        wnik = jnp.where(enb, nib, base[..., None]).reshape((k, g))
+    q = jnp.asarray(quorum, jnp.int32).reshape((1,))
+    al = jnp.asarray(alive, jnp.int32).reshape((g, a))
+    gs = jnp.asarray(gsel, jnp.int32).reshape((nb,))
+    wenk = wenk.astype(jnp.int32)
+    if limit is None:
+        lim = jnp.full((g,), jnp.iinfo(jnp.int32).max, jnp.int32)
+    else:
+        lim = jnp.asarray(limit, jnp.int32).reshape((g,))
+    return tuple(
+        fn(gs, wnik, cr, q, al, lim, wenk, values, st_rnd, st_vrnd, st_val,
+           ldel, linst, lval, wnik, wenk, cr, al, lim)
     )
 
 

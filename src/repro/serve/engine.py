@@ -310,10 +310,15 @@ class ConsensusService:
         self.ctx.pump(rounds)
 
     def run_until_quiescent(self, max_rounds: int = 64) -> None:
-        planner = getattr(self.ctx, "planner", None)
-        if planner is not None:
-            planner.observe_service_loads(self.group_loads())
-        self.ctx.run_until_quiescent(max_rounds)
+        """Pump until nothing is pending (or ``max_rounds``), refreshing
+        the planner's serving-tier load snapshot *per pumped round* — the
+        historical single pre-loop observation left multi-round quiescence
+        runs reporting stale load introspection (delivery callbacks can
+        change per-group loads between rounds)."""
+        for _ in range(max_rounds):
+            if self.ctx.quiescent():
+                return
+            self.pump()
 
     def plan_report(self) -> Dict:
         """The dispatch planner's introspection report (burst-shape

@@ -294,3 +294,66 @@ def test_burn_forward_is_monotone_and_plan_is_backend_agnostic():
     ctx.submit(b"x", group=1)
     ctx.run_until_quiescent()
     assert [(i, p) for i, p in ctx.group_log[1]] == [(32, b"x")]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-path hardening (DESIGN.md §11 ride-alongs)
+# ---------------------------------------------------------------------------
+def test_pack_rows_oversized_chunk_fails_up_front():
+    """An oversized chunk must fail before any wire array is built — the
+    historical loop raised a bare IndexError after partially writing the
+    burst — and the error must name both the chunk length and the burst."""
+    rows = [np.full((4,), 7, np.int32) for _ in range(9)]
+    with pytest.raises(ValueError) as ei:
+        plan_mod.pack_rows(rows, 8, 4)
+    assert "9" in str(ei.value) and "8" in str(ei.value)
+    # the boundary case still packs
+    vals, active = plan_mod.pack_rows(rows[:8], 8, 4)
+    assert active.all() and (vals == 7).all()
+
+
+def test_report_snapshots_service_loads_not_aliases():
+    """A report is an observation, not a window onto live planner state:
+    mutating a returned report must not perturb the planner, and later
+    load observations must not rewrite already-returned reports."""
+    p = DispatchPlanner(batch=32, n_instances=512)
+    p.observe_service_loads([3, 1, 4])
+    r1 = p.report()
+    r1["service_loads"].append(99)
+    r1["burst_shapes"].append(77)
+    assert p.stats["service_loads"] == [3, 1, 4]
+    assert p.report()["service_loads"] == [3, 1, 4]
+    r2 = p.report()
+    p.observe_service_loads([0, 0, 0])
+    assert r2["service_loads"] == [3, 1, 4]
+    assert p.report()["service_loads"] == [0, 0, 0]
+
+
+def test_wave_depth_policy_full_batch_and_covered_queues_only():
+    """The planner mints K > 1 only for full-batch cohorts whose every
+    member has K full chunks queued, clamped by the policy knob and the
+    ring (DESIGN.md §11)."""
+    p = DispatchPlanner(batch=32, n_instances=128, persistent_rounds=8)
+    rp = p.plan_round(
+        loads=[32, 32], marks=[0, 0], live=[True] * 2, crnd=[0, 0],
+        pending=[160, 96],
+    )
+    # min(160, 96) // 32 = 3 full chunks each; ring cap 128 // 32 = 4
+    assert rp.cohorts == (plan_mod.Cohort(gids=(0, 1), burst=32, rounds=3),)
+    assert p.stats["persistent_waves"] == 1
+    # a sub-batch burst never goes persistent (numbering would fork)
+    rp = p.plan_round(
+        loads=[8, 8], marks=[0, 0], live=[True] * 2, crnd=[0, 0],
+        pending=[64, 64],
+    )
+    assert all(c.rounds == 1 for c in rp.cohorts)
+    # no pending telemetry -> classic single-round planning
+    rp = p.plan_round(loads=[32, 32], marks=[0, 0], live=[True] * 2, crnd=[0, 0])
+    assert all(c.rounds == 1 for c in rp.cohorts)
+    # the knob off switches the feature off wholesale
+    p1 = DispatchPlanner(batch=32, n_instances=128, persistent_rounds=1)
+    rp = p1.plan_round(
+        loads=[32], marks=[0], live=[True], crnd=[0], pending=[320],
+    )
+    assert rp.cohorts[0].rounds == 1
+    assert p1.stats["persistent_waves"] == 0

@@ -334,3 +334,37 @@ def test_ring_cache_sliding_window_decode():
         outs.append(np.asarray(logits).reshape(B, -1))
     err = np.abs(np.stack(outs, 1) - np.asarray(ref_logits)).max()
     assert err < 5e-3, err
+
+
+def test_run_until_quiescent_refreshes_service_loads_per_round():
+    """The planner's serving-tier load snapshot must be observed per pumped
+    round, not once before the loop: delivery callbacks can submit fresh
+    traffic mid-quiescence-run, and the final ``plan_report`` must reflect
+    the loads as of the last pumped round (DESIGN.md §11 hardening)."""
+    cfg = PaxosConfig(
+        n_acceptors=3, n_instances=1 << 9, value_words=4, batch=16,
+        n_groups=2,
+    )
+    ctx = PaxosContext(cfg)
+    svc = ConsensusService(ctx)
+    first, second = "load-a", "load-b"
+    fired = []
+
+    def follow_up(payload, size, inst):
+        if not fired:
+            fired.append(inst)
+            for j in range(5):
+                svc.session(second).submit(f"follow-{j}".encode())
+
+    ctx.deliver_cb = follow_up
+    for i in range(24):
+        svc.session(first).submit(f"lead-{i}".encode())
+    loads_before = svc.group_loads()
+    svc.run_until_quiescent()
+    assert fired and ctx.quiescent()
+    report = svc.plan_report()
+    # freshness: the report carries the loads INCLUDING the mid-run
+    # follow-ups, exactly what group_loads() reads now
+    assert report["service_loads"] == svc.group_loads()
+    assert report["service_loads"] != loads_before
+    assert len(svc.session(second).delivered()) == 5
