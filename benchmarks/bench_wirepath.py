@@ -42,7 +42,6 @@ from __future__ import annotations
 
 import os
 import sys
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -114,11 +113,11 @@ def bench_per_acceptor(b: int) -> float:
         cstate, p2a = seq(cstate, values, active)
         votes = []
         for aid in range(A):
-            st = jax.tree_util.tree_map(lambda x: x[aid], stack)
+            st = jax.tree_util.tree_map(lambda x, aid=aid: x[aid], stack)
             st, v = vote(st, p2a, aid)
             # the historical full-stack rewrite, one copy per acceptor
             stack = jax.tree_util.tree_map(
-                lambda x, y: x.at[aid].set(y), stack, st
+                lambda x, y, aid=aid: x.at[aid].set(y), stack, st
             )
             # ...and the per-acceptor host transfer of the vote batch
             votes.append({
@@ -948,7 +947,7 @@ def run_persistent() -> None:
     )
 
 
-def run(bursts=BURSTS, out: Optional[str] = None) -> None:
+def run(bursts=BURSTS, out: str | None = None) -> None:
     full_sweep = tuple(bursts) == BURSTS
     per_path = {}
     for b in bursts:

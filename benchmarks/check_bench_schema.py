@@ -8,14 +8,22 @@ pure JSON validation: it runs in milliseconds, before any bench, and it is
 also exercised as a fast-lane unit test (``tests/test_bench_schema.py``)
 so a bad artifact fails the cheapest job first.
 
-    PYTHONPATH=src python -m benchmarks.check_bench_schema BENCH_wirepath.json
+With ``--ci path/to/ci.yml`` it additionally cross-checks the regression
+gate's CLI flags against the headline catalogue: every ``--*tolerance`` /
+``--min-*`` flag the workflow passes must key a required headline row, and
+every required headline must be gated by at least one flag — so a gate
+flag and its baseline row can never drift apart silently.
+
+    PYTHONPATH=src python -m benchmarks.check_bench_schema \\
+        BENCH_wirepath.json --ci .github/workflows/ci.yml
 """
 from __future__ import annotations
 
+import argparse
 import json
 import math
+import re
 import sys
-from typing import List
 
 # Headline rows the regression gate keys on: committing an artifact without
 # them would silently skip (or permanently fail) a gate.
@@ -35,14 +43,63 @@ RATIO_FIELDS = (
     "persistent_amortization",
 )
 
+# Regression-gate CLI flag -> the headline prefix it gates.  The CI
+# cross-check (--ci) fails on a flag with no headline (typo / stale gate)
+# and on a headline no flag gates (silently ungated metric).
+FLAG_HEADLINES = {
+    "--tolerance": "wirepath/speedup_pallas_vs_per_acceptor/",
+    "--min-mg-scaling": "wirepath/multigroup_scaling_pallas/",
+    "--sharded-tolerance": "wirepath/sharded_scaling_pallas/",
+    "--skew-tolerance": "wirepath/skew_speedup_twotier/",
+    "--sustained-tolerance": "wirepath/sustained_ratio/",
+    "--kv-tolerance": "wirepath/kv_read_write_ratio/",
+    "--min-kv-ratio": "wirepath/kv_read_write_ratio/",
+    "--persistent-tolerance": "wirepath/persistent_speedup/",
+    "--min-persistent-speedup": "wirepath/persistent_speedup/",
+    "--min-trickle-ratio": "wirepath/trickle_persistent_ratio/",
+}
+
+
+def check_ci_gate_flags(ci_text: str) -> list[str]:
+    """Cross-check the workflow's regression-gate invocation against the
+    headline catalogue (pure text scan — no yaml dependency)."""
+    errors: list[str] = []
+    # isolate the gate invocation: from the module name to the end of the
+    # backslash-continued command
+    m = re.search(
+        r"check_wirepath_regression(?:\s*\\\n|[^\n]|\n\s+-)*", ci_text
+    )
+    if m is None:
+        return ["ci workflow never invokes check_wirepath_regression"]
+    flags = re.findall(r"--[a-z][a-z-]*", m.group(0))
+    if not flags:
+        return ["regression gate invocation passes no --flags at all"]
+    gated = set()
+    for flag in flags:
+        prefix = FLAG_HEADLINES.get(flag)
+        if prefix is None:
+            errors.append(
+                f"gate flag {flag} has no headline mapping "
+                f"(typo, or FLAG_HEADLINES needs the new metric)"
+            )
+        else:
+            gated.add(prefix)
+    for prefix in REQUIRED_HEADLINES:
+        if prefix not in gated:
+            errors.append(
+                f"headline {prefix}* is required but no gate flag in "
+                f"ci.yml exercises it (ungated metric)"
+            )
+    return errors
+
 
 def _finite_positive(x) -> bool:
     return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
 
 
-def validate(doc: dict) -> List[str]:
+def validate(doc: dict) -> list[str]:
     """Returns a list of human-readable schema violations (empty = valid)."""
-    errors: List[str] = []
+    errors: list[str] = []
     meta = doc.get("meta")
     if not isinstance(meta, dict) or "backend" not in meta:
         errors.append("meta missing or has no 'backend' key")
@@ -73,20 +130,29 @@ def validate(doc: dict) -> List[str]:
         if not any(
             n.startswith(prefix)
             and any(f in r for f in RATIO_FIELDS)
-            for n, r in zip(names, rows)
+            for n, r in zip(names, rows, strict=True)
         ):
             errors.append(f"missing headline row {prefix}* (gate would skip)")
     return errors
 
 
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    if len(argv) != 1:
-        print(__doc__, file=sys.stderr)
-        return 2
-    with open(argv[0]) as f:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.check_bench_schema", description=__doc__
+    )
+    ap.add_argument("artifact", help="committed bench JSON to validate")
+    ap.add_argument(
+        "--ci",
+        default=None,
+        help="workflow yaml to cross-check gate flags against headlines",
+    )
+    ns = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    with open(ns.artifact) as f:
         doc = json.load(f)
     errors = validate(doc)
+    if ns.ci is not None:
+        with open(ns.ci) as f:
+            errors += check_ci_gate_flags(f.read())
     if errors:
         for e in errors:
             print(f"SCHEMA: {e}", file=sys.stderr)
@@ -94,6 +160,7 @@ def main(argv=None) -> int:
     print(
         f"bench schema OK: {len(doc['rows'])} rows, "
         f"backend={doc['meta'].get('backend')}"
+        + (", ci gate flags cross-checked" if ns.ci else "")
     )
     return 0
 

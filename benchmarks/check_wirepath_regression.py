@@ -53,14 +53,13 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import Dict, Optional, Tuple
 
 
-def _speedups(doc: dict) -> Dict[int, float]:
+def _speedups(doc: dict) -> dict[int, float]:
     """burst -> pallas_fused/per_acceptor speedup, from explicit speedup rows
     (preferred) or recomputed from msgs/s rows."""
-    out: Dict[int, float] = {}
-    msgs: Dict[Tuple[str, int], float] = {}
+    out: dict[int, float] = {}
+    msgs: dict[tuple[str, int], float] = {}
     for row in doc["rows"]:
         if "speedup" in row:
             out[row["burst"]] = row["speedup"]
@@ -74,11 +73,11 @@ def _speedups(doc: dict) -> Dict[int, float]:
     return out
 
 
-def _mg_scaling(doc: dict, path: str = "multigroup_scaling_pallas") -> Optional[float]:
+def _mg_scaling(doc: dict, path: str = "multigroup_scaling_pallas") -> float | None:
     return _row_metric(doc, path, "scaling")
 
 
-def _row_metric(doc: dict, path: str, field: str) -> Optional[float]:
+def _row_metric(doc: dict, path: str, field: str) -> float | None:
     for row in doc["rows"]:
         if row["name"].startswith(f"wirepath/{path}/") and field in row:
             return row[field]

@@ -4,10 +4,10 @@ from __future__ import annotations
 import json
 import platform
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from collections.abc import Callable
 
-ROWS: List[Tuple[str, float, str]] = []
-RECORDS: List[Dict] = []
+ROWS: list[tuple[str, float, str]] = []
+RECORDS: list[dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
@@ -22,8 +22,8 @@ def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
-def write_json(path: str, meta: Optional[Dict] = None,
-               prefix: Optional[str] = None) -> None:
+def write_json(path: str, meta: dict | None = None,
+               prefix: str | None = None) -> None:
     """Dump emitted records (optionally filtered by name prefix) as JSON.
 
     The file is the perf trajectory artifact (e.g. ``BENCH_wirepath.json``):

@@ -32,6 +32,7 @@ def run() -> None:
         emit(
             f"fig2/software_roles/learners={n_learners}",
             us_coord,
-            "shares coord={coordinator:.2f} acc={acceptor:.2f} "
-            "learn={learner:.2f} prop={proposer:.2f}".format(**shares),
+            f"shares coord={shares['coordinator']:.2f} "
+            f"acc={shares['acceptor']:.2f} "
+            f"learn={shares['learner']:.2f} prop={shares['proposer']:.2f}",
         )

@@ -10,7 +10,6 @@ max throughput (Table 4's predictability comparison).
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
 
 import numpy as np
 
@@ -22,9 +21,9 @@ CFG = PaxosConfig(n_acceptors=3, n_instances=1 << 14, batch=256)
 N_MSG = 4000
 
 
-def _drive(system, submit, pump, n: int, burst: int) -> Tuple[float, np.ndarray]:
+def _drive(system, submit, pump, n: int, burst: int) -> tuple[float, np.ndarray]:
     """Returns (throughput msg/s, latencies_us)."""
-    lat: List[float] = []
+    lat: list[float] = []
     t_submit = {}
     delivered = {0: 0}
 
@@ -90,7 +89,7 @@ def run() -> None:
     for name, rows in results.items():
         maxt = max(t for _, t, _ in rows)
         for frac in (0.25, 0.5, 0.75):
-            burst, tput, lat = min(rows, key=lambda r: abs(r[1] - frac * maxt))
+            burst, tput, lat = min(rows, key=lambda r, frac=frac: abs(r[1] - frac * maxt))
             if len(lat):
                 emit(
                     f"table4/{name}/load={int(frac*100)}%",

@@ -20,7 +20,6 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
@@ -52,7 +51,7 @@ def _attn_flops_per_layer(cfg: ModelConfig, s: int, window: int) -> float:
     return 2.0 * 2.0 * pairs * cfg.n_heads * cfg.hd
 
 
-def _layer_windows(cfg: ModelConfig) -> Tuple[int, int]:
+def _layer_windows(cfg: ModelConfig) -> tuple[int, int]:
     """(n_global_layers, n_local_layers)."""
     if cfg.local_window == 0:
         return cfg.n_layers, 0
@@ -145,7 +144,7 @@ def _cache_bytes(cfg: ModelConfig, batch: int, ctx: int) -> float:
 
 def analytic_terms(
     cfg: ModelConfig, shape: ShapeConfig, mesh: MeshInfo
-) -> Dict[str, float]:
+) -> dict[str, float]:
     """Returns per-device {flops, hbm_bytes, model_flops} for the step."""
     b, s = shape.global_batch, shape.seq_len
     n_active = float(cfg.n_active_params)

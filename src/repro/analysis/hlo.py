@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -66,7 +65,7 @@ def loop_bodies(hlo_text: str) -> set:
 
 def collective_bytes(
     hlo_text: str, loop_trip_hint: int = 1
-) -> Tuple[int, Dict[str, int], Dict[str, int]]:
+) -> tuple[int, dict[str, int], dict[str, int]]:
     """Returns (total_bytes, bytes_by_op, count_by_op) for the module.
 
     XLA emits each while-loop body ONCE in the module text, but its
@@ -80,8 +79,8 @@ def collective_bytes(
     noted in EXPERIMENTS.md.)
     """
     bodies = loop_bodies(hlo_text)
-    by_op: Dict[str, int] = defaultdict(int)
-    count: Dict[str, int] = defaultdict(int)
+    by_op: dict[str, int] = defaultdict(int)
+    count: dict[str, int] = defaultdict(int)
     current = ""
     for line in hlo_text.splitlines():
         if line and not line[0].isspace():
@@ -103,8 +102,8 @@ def collective_bytes(
     return sum(by_op.values()), dict(by_op), dict(count)
 
 
-def op_census(hlo_text: str, ops=("fusion", "custom-call", "while", "convolution", "dot")) -> Dict[str, int]:
-    out: Dict[str, int] = defaultdict(int)
+def op_census(hlo_text: str, ops=("fusion", "custom-call", "while", "convolution", "dot")) -> dict[str, int]:
+    out: dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
         for op in ops:
             if f" {op}(" in line:

@@ -19,7 +19,6 @@ redundant-compute waste.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
@@ -79,7 +78,7 @@ class Roofline:
             return 0.0
         return (self.model_flops / self.chips / self.t_bound) / PEAK_FLOPS
 
-    def row(self) -> Dict[str, object]:
+    def row(self) -> dict[str, object]:
         return {
             "arch": self.arch,
             "shape": self.shape,
@@ -107,7 +106,7 @@ def model_flops_for(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch
 
 
-def from_record(rec: Dict) -> Roofline:
+def from_record(rec: dict) -> Roofline:
     return Roofline(
         arch=rec["arch"],
         shape=rec["shape"],

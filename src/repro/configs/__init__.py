@@ -5,7 +5,6 @@ One module per assigned architecture; each exports ``CONFIG``.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
 
 from .base import LONG_CONTEXT_FAMILIES, SHAPES, ModelConfig, ShapeConfig  # noqa: F401
 
@@ -22,10 +21,10 @@ _ARCH_MODULES = [
     "whisper_base",
 ]
 
-_CACHE: Dict[str, ModelConfig] = {}
+_CACHE: dict[str, ModelConfig] = {}
 
 
-def list_archs() -> List[str]:
+def list_archs() -> list[str]:
     return [m.replace("_", "-") for m in _ARCH_MODULES]
 
 

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +31,7 @@ class ModelConfig:
     # RecurrentGemma / Griffin
     d_rnn: int = 0                  # RG-LRU recurrence width (0 = d_model)
     conv_width: int = 4
-    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    block_pattern: tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
     # encoder-decoder (whisper): n_layers = decoder layers
     n_enc_layers: int = 0
     src_len: int = 1500             # stub frontend (frames / patches) length

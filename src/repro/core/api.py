@@ -19,12 +19,14 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.contracts import mirror_guard
 from . import batched
 from . import plan as plan_mod
 from .network import SimNet
@@ -133,7 +135,7 @@ class HardwareDataplane(RingReclamationMixin):
         # monotone count of device program launches (wire-path dispatches);
         # the KV tier pins its consensus-free read claim on this staying flat
         self.dispatch_count = 0
-        self._seq_base: Optional[int] = None        # provenance hint for vote()
+        self._seq_base: int | None = None        # provenance hint for vote()
         if use_kernels:
             from repro.kernels import ops as kops
 
@@ -156,11 +158,11 @@ class HardwareDataplane(RingReclamationMixin):
         return _wire_window_aligned(self.cfg, base, b)
 
     # -- ring reclamation: RingReclamationMixin at G == 1 (DESIGN.md §9) -----
-    def _seq_marks(self) -> List[int]:
+    def _seq_marks(self) -> list[int]:
         return [self._next_inst_host]
 
     @property
-    def reclaimed_host(self) -> Optional[int]:
+    def reclaimed_host(self) -> int | None:
         """Scalar view of the single group's reclamation watermark (None
         while reclamation is disabled) — the historical public surface."""
         marks = self._reclaim_marks
@@ -175,6 +177,7 @@ class HardwareDataplane(RingReclamationMixin):
         self._reclaim_guard(0, base, b)
 
     # -- fused fast path: whole Phase-2 round in ONE device program ----------
+    @mirror_guard
     def pipeline(self, values: np.ndarray, active: np.ndarray):
         """One dispatch: sequence + all acceptor votes + quorum + dedup.
 
@@ -225,6 +228,7 @@ class HardwareDataplane(RingReclamationMixin):
         )
 
     # -- staged path (votes surface as messages) -----------------------------
+    @mirror_guard
     def sequence(self, values: np.ndarray, active: np.ndarray) -> MsgBatch:
         self._guard_capacity(self._next_inst_host, values.shape[0])
         self._seq_base = self._next_inst_host
@@ -235,7 +239,7 @@ class HardwareDataplane(RingReclamationMixin):
         self._next_inst_host += values.shape[0]
         return p2a
 
-    def vote(self, p2a: MsgBatch) -> List[Optional[MsgBatch]]:
+    def vote(self, p2a: MsgBatch) -> list[MsgBatch | None]:
         """Phase-2 vote of the whole acceptor array, one dispatch.
 
         Batches produced by ``sequence()`` (contiguous, block-aligned window)
@@ -256,12 +260,12 @@ class HardwareDataplane(RingReclamationMixin):
         self.stack, votes = fn(self.stack, p2a, self.alive_mask)
         return self._split(votes)
 
-    def prepare(self, p1a: MsgBatch) -> List[Optional[MsgBatch]]:
+    def prepare(self, p1a: MsgBatch) -> list[MsgBatch | None]:
         self.dispatch_count += 1
         self.stack, outs = self._prep_all(self.stack, p1a, self.alive_mask)
         return self._split(outs)
 
-    def _split(self, stacked: MsgBatch) -> List[Optional[MsgBatch]]:
+    def _split(self, stacked: MsgBatch) -> list[MsgBatch | None]:
         """Stacked [A, ...] message batches -> per-acceptor list, None when
         dead (a crashed switch emits nothing)."""
         return [
@@ -290,7 +294,7 @@ class _GroupView:
     def cfg(self) -> PaxosConfig:
         return self.mg.cfg
 
-    def vote(self, p2a: MsgBatch) -> List[Optional[MsgBatch]]:
+    def vote(self, p2a: MsgBatch) -> list[MsgBatch | None]:
         mg, gid = self.mg, self.gid
         mg.dispatch_count += 1
         st = jax.tree_util.tree_map(lambda x: x[gid], mg.stack)
@@ -300,7 +304,7 @@ class _GroupView:
         )
         return self._split(votes)
 
-    def prepare(self, p1a: MsgBatch) -> List[Optional[MsgBatch]]:
+    def prepare(self, p1a: MsgBatch) -> list[MsgBatch | None]:
         mg, gid = self.mg, self.gid
         mg.dispatch_count += 1
         st = jax.tree_util.tree_map(lambda x: x[gid], mg.stack)
@@ -310,7 +314,7 @@ class _GroupView:
         )
         return self._split(outs)
 
-    def _split(self, stacked: MsgBatch) -> List[Optional[MsgBatch]]:
+    def _split(self, stacked: MsgBatch) -> list[MsgBatch | None]:
         gid = jnp.int32(self.gid)
         return [
             jax.tree_util.tree_map(lambda x, aid=aid: x[aid], stacked).replace(
@@ -362,16 +366,16 @@ class MultiGroupDataplane(RingReclamationMixin):
         self.alive_mask = jnp.ones((g, a), jnp.bool_)
         # dynamic membership: every capacity slot starts live; the free-list
         # (sorted, lowest-first: deterministic allocation) holds vacant slots
-        self.live_host: List[bool] = [True] * g
-        self._free: List[int] = []
+        self.live_host: list[bool] = [True] * g
+        self._free: list[int] = []
         self.use_kernels = use_kernels
         # per-group host mirrors of the sequencer watermark and round — the
         # kernel path's alignment/lockstep decisions cost no device sync
-        self.next_inst_host: List[int] = [0] * g
-        self.crnd_host: List[int] = [0] * g
+        self.next_inst_host: list[int] = [0] * g
+        self.crnd_host: list[int] = [0] * g
         # monotone device-program-launch counter (see HardwareDataplane)
         self.dispatch_count = 0
-        self.last_gb: Optional[int] = None   # fold width of the last dispatch
+        self.last_gb: int | None = None   # fold width of the last dispatch
         if use_kernels:
             from repro.kernels import ops as kops
 
@@ -407,11 +411,11 @@ class MultiGroupDataplane(RingReclamationMixin):
         return _wire_window_aligned(self.cfg, base, b)
 
     # -- ring reclamation: RingReclamationMixin per group (DESIGN.md §9) -----
-    def _seq_marks(self) -> List[int]:
+    def _seq_marks(self) -> list[int]:
         return self.next_inst_host
 
     @property
-    def reclaimed_host(self) -> Optional[List[int]]:
+    def reclaimed_host(self) -> list[int] | None:
         """Per-group watermark vector (None while disabled).  The list IS
         the mixin's live state: membership paths (``create_group``/
         ``adopt_group``) reset their slot in place."""
@@ -423,7 +427,7 @@ class MultiGroupDataplane(RingReclamationMixin):
         self._check_gid(gid)
         self._reclaim_set(gid, upto)
 
-    def _reclaim_limits(self) -> Optional[jax.Array]:
+    def _reclaim_limits(self) -> jax.Array | None:
         """Device form of the mixin's first-refused-instance vector."""
         lim = self._reclaim_limits_np()
         return None if lim is None else jnp.asarray(lim)
@@ -439,7 +443,7 @@ class MultiGroupDataplane(RingReclamationMixin):
         here; one shard's slab in the sharded subclass)."""
         return self.cfg.n_groups
 
-    def _plan_round(self, b: int, enabled: Optional[List[bool]]):
+    def _plan_round(self, b: int, enabled: list[bool] | None):
         """Resolve the enabled mask against membership and frozen rounds,
         decide kernel eligibility from the host watermark mirrors, and pick
         the fold width (``core.plan.fold_width_full`` — the widest divisor
@@ -455,12 +459,12 @@ class MultiGroupDataplane(RingReclamationMixin):
         if enabled is None:
             enabled = [
                 lv and c != NO_ROUND
-                for lv, c in zip(self.live_host, self.crnd_host)
+                for lv, c in zip(self.live_host, self.crnd_host, strict=True)
             ]
         else:
             enabled = [
                 bool(e) and lv and c != NO_ROUND
-                for e, lv, c in zip(enabled, self.live_host, self.crnd_host)
+                for e, lv, c in zip(enabled, self.live_host, self.crnd_host, strict=True)
             ]
         en_gids = [i for i, e in enumerate(enabled) if e]
         use_k = self.use_kernels and all(
@@ -480,11 +484,12 @@ class MultiGroupDataplane(RingReclamationMixin):
         )
 
     # -- fused fast path: ALL groups advance one round in ONE dispatch -------
+    @mirror_guard
     def pipeline(
         self,
         values: np.ndarray,
         active: np.ndarray,
-        enabled: Optional[List[bool]] = None,
+        enabled: list[bool] | None = None,
     ):
         """One dispatch for all G groups: sequence + votes + quorum + dedup.
 
@@ -569,6 +574,7 @@ class MultiGroupDataplane(RingReclamationMixin):
         )
         return gids, member, use_k, inst
 
+    @mirror_guard
     def pipeline_cohort(
         self, gids, values: np.ndarray, active: np.ndarray,
         defer: bool = False,
@@ -677,6 +683,7 @@ class MultiGroupDataplane(RingReclamationMixin):
             return be
         return self._block(be)
 
+    @mirror_guard
     def pipeline_persistent(
         self, gids, values: np.ndarray, active: np.ndarray,
         defer: bool = False,
@@ -799,6 +806,7 @@ class MultiGroupDataplane(RingReclamationMixin):
         handle = _DeferredRound(dfresh, dvalue, inst, rows=rows, axis=1)
         return handle if defer else handle.resolve()
 
+    @mirror_guard
     def burn_forward(self, gid: int, target: int) -> None:
         """Advance a group's sequencer watermark to ``target`` without
         proposing anything: the skipped instances are NOP holes, never
@@ -843,6 +851,7 @@ class MultiGroupDataplane(RingReclamationMixin):
             lambda s, f: s.at[gid, aid].set(f), self.stack, fresh
         )
 
+    @mirror_guard
     def freeze_group(self, gid: int) -> None:
         """Park a group's hardware round at NO_ROUND while a software
         coordinator owns it: every slot the shared dispatch sequences for the
@@ -856,6 +865,7 @@ class MultiGroupDataplane(RingReclamationMixin):
         )
         self.crnd_host[gid] = NO_ROUND
 
+    @mirror_guard
     def restore_group(self, gid: int, next_inst: int, crnd: int) -> None:
         """Hand a group back to the hardware sequencer at the watermark and
         round the software coordinator reached (block-realigned on the kernel
@@ -884,7 +894,7 @@ class MultiGroupDataplane(RingReclamationMixin):
         if not self.live_host[gid]:
             raise ValueError(f"group {gid} is retired")
 
-    def live_groups(self) -> List[int]:
+    def live_groups(self) -> list[int]:
         """Currently live group ids, ascending (the routing domain)."""
         return [g for g in range(self.cfg.n_groups) if self.live_host[g]]
 
@@ -911,6 +921,7 @@ class MultiGroupDataplane(RingReclamationMixin):
             batched.LearnerState.init(n, v),
         )
 
+    @mirror_guard
     def create_group(self) -> int:
         """Claim a free slot on the group axis: zeroed rings, fresh
         watermark/round, all acceptors alive.  Deterministic (lowest free
@@ -931,6 +942,7 @@ class MultiGroupDataplane(RingReclamationMixin):
             self.reclaimed_host[gid] = 0
         return gid
 
+    @mirror_guard
     def adopt_group(self, watermark: int) -> int:
         """Claim a free slot for a tenant bootstrapping from a transferred
         snapshot (vertical-Paxos state transfer, DESIGN.md §9): the slot's
@@ -951,7 +963,7 @@ class MultiGroupDataplane(RingReclamationMixin):
         self.reclaimed_host[gid] = watermark
         return gid
 
-    def retire_group(self, gid: int) -> List[Tuple[int, bytes]]:
+    def retire_group(self, gid: int) -> list[tuple[int, bytes]]:
         """Retire a live group: drain its learner ring to a host log, park
         its round at ``NO_ROUND`` (inert in the shared dispatch, exactly
         like freeze), and return the slot to the free-list.  Host scalars
@@ -1029,7 +1041,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         self._slab_sharding = NamedSharding(mesh, P(axis))
         self.stack = jax.device_put(self.stack, self._slab_sharding)
         self.lstate = jax.device_put(self.lstate, self._slab_sharding)
-        self._dispatches: Dict[Tuple[bool, int], Any] = {}
+        self._dispatches: dict[tuple[bool, int], Any] = {}
 
     def _fold_width(self) -> int:
         # lockstep folds one shard's slab per grid step (a block has a
@@ -1043,7 +1055,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         self._check_gid(gid)
         return gid // self.groups_per_shard
 
-    def group_placement(self) -> List[int]:
+    def group_placement(self) -> list[int]:
         """group id -> owning shard, for the whole service."""
         return [g // self.groups_per_shard for g in range(self.cfg.n_groups)]
 
@@ -1074,11 +1086,12 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         self.lstate = jax.device_put(self.lstate, self._slab_sharding)
 
     # -- fused fast path: all shards advance their slabs in ONE dispatch ----
+    @mirror_guard
     def pipeline(
         self,
         values: np.ndarray,
         active: np.ndarray,
-        enabled: Optional[List[bool]] = None,
+        enabled: list[bool] | None = None,
     ):
         """Same contract (and bit-identical results) as
         ``MultiGroupDataplane.pipeline``, executed as one ``shard_map``
@@ -1120,6 +1133,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         return np.asarray(fresh), np.asarray(inst), np.asarray(value)
 
     # -- cohort dispatch (DESIGN.md §8), sharded execution -------------------
+    @mirror_guard
     def pipeline_cohort(
         self, gids, values: np.ndarray, active: np.ndarray,
         defer: bool = False,
@@ -1208,6 +1222,7 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
             return _DeferredRound.resolved(fresh, value, inst)
         return fresh, inst, value
 
+    @mirror_guard
     def burn_forward(self, gid: int, target: int) -> None:
         """Host-scalar-only realignment burn (the sharded control-state
         discipline of DESIGN.md §6): the new watermark reaches the owning
@@ -1238,11 +1253,13 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         self.alive[gid][aid] = True
         self.alive_mask[gid, aid] = 1
 
+    @mirror_guard
     def freeze_group(self, gid: int) -> None:
         self._check_gid(gid)
         self.crnd_host[gid] = NO_ROUND
         self._sync_cstate()
 
+    @mirror_guard
     def restore_group(self, gid: int, next_inst: int, crnd: int) -> None:
         self._check_gid(gid)
         if self.use_kernels:
@@ -1258,9 +1275,9 @@ class PaxosContext:
 
     def __init__(
         self,
-        cfg: Optional[PaxosConfig] = None,
-        deliver: Optional[Callable[[bytes, int, int], None]] = None,
-        net: Optional[SimNet] = None,
+        cfg: PaxosConfig | None = None,
+        deliver: Callable[[bytes, int, int], None] | None = None,
+        net: SimNet | None = None,
         use_kernels: bool = False,
         retransmit_after: int = 3,
         n_learners: int = 1,
@@ -1296,12 +1313,12 @@ class PaxosContext:
                     self.cfg, use_kernels=use_kernels
                 )
             self.fused = True
-            self._softco_g: Dict[int, SoftCoordinator] = {}
+            self._softco_g: dict[int, SoftCoordinator] = {}
             # the group-keyed learn surface
-            self.learned_g: List[Dict[int, bytes]] = [
+            self.learned_g: list[dict[int, bytes]] = [
                 dict() for _ in range(self.n_groups)
             ]
-            self._partial_g: List[Dict[int, Dict[int, Tuple[int, bytes]]]] = [
+            self._partial_g: list[dict[int, dict[int, tuple[int, bytes]]]] = [
                 dict() for _ in range(self.n_groups)
             ]
         else:
@@ -1311,7 +1328,7 @@ class PaxosContext:
         # realignment sweep for the group-keyed pump (DESIGN.md §8); the
         # single-group context is the degenerate one-cohort case and only
         # shares the burst quantizer
-        self.planner: Optional[plan_mod.DispatchPlanner] = (
+        self.planner: plan_mod.DispatchPlanner | None = (
             plan_mod.DispatchPlanner(
                 batch=self.cfg.batch,
                 n_instances=self.cfg.n_instances,
@@ -1324,30 +1341,30 @@ class PaxosContext:
         # the per-group delivery log is uniform across context shapes: an
         # ungrouped single-group context logs into group_log[0], so readers
         # (serve.ConsensusService.delivered) never need a G == 1 special case
-        self.group_log: List[List[Tuple[int, bytes]]] = [
+        self.group_log: list[list[tuple[int, bytes]]] = [
             [] for _ in range(self.n_groups)
         ]
         self._delivered_seqs: set = set()
         self.retransmit_after = retransmit_after
         self.n_learners = n_learners
         # learner state (software role), one per learner
-        self.learned: List[Dict[int, bytes]] = [dict() for _ in range(n_learners)]
-        self._partial: List[Dict[int, Dict[int, Tuple[int, bytes]]]] = [
+        self.learned: list[dict[int, bytes]] = [dict() for _ in range(n_learners)]
+        self._partial: list[dict[int, dict[int, tuple[int, bytes]]]] = [
             dict() for _ in range(n_learners)
         ]
-        self.delivered_log: List[Tuple[int, bytes]] = []
+        self.delivered_log: list[tuple[int, bytes]] = []
         # client-seq -> payload; multi-group contexts key by (group, seq) —
         # each group is an independent Paxos, with its own sequence space
-        self._pending: Dict[Any, _Pending] = {}
+        self._pending: dict[Any, _Pending] = {}
         self._next_client_seq = 0
         self._next_client_seq_g = [0] * self.n_groups
         self._next_epoch = 1                      # round-allocator epochs
-        self._softco: Optional[SoftCoordinator] = None  # failover coordinator
+        self._softco: SoftCoordinator | None = None  # failover coordinator
         # snapshot/compaction subsystem (DESIGN.md §9): when enabled the
         # rings are watermark-gated (no silent overwrite-on-wrap) and
         # ``snapshot_group`` drains the delivered prefix into the store;
         # ``full_group_log`` stitches store prefix + live log uniformly
-        self.snapshots: Optional[SnapshotStore] = None
+        self.snapshots: SnapshotStore | None = None
         if snapshots:
             if not self.fused:
                 # the drain source is the device learner ring, which only the
@@ -1498,11 +1515,11 @@ class PaxosContext:
 
     def _quorum_learn(
         self,
-        learned: Dict[int, bytes],
-        partial: Dict[int, Dict[int, Tuple[int, bytes]]],
+        learned: dict[int, bytes],
+        partial: dict[int, dict[int, tuple[int, bytes]]],
         aid: int,
         votes: dict,
-        deliver: Optional[Callable[[int, bytes], None]],
+        deliver: Callable[[int, bytes], None] | None,
     ) -> None:
         """The software learner: fold one acceptor's vote batch into the
         partial-quorum table; at quorum, record the decision and (when this
@@ -1517,7 +1534,7 @@ class PaxosContext:
                 continue  # duplicate suppression
             slot = partial.setdefault(inst, {})
             slot[aid] = (int(votes["vrnd"][i]), votes["value"][i].tobytes())
-            by_rnd: Dict[int, int] = {}
+            by_rnd: dict[int, int] = {}
             for vr, _ in slot.values():
                 by_rnd[vr] = by_rnd.get(vr, 0) + 1
             for vr, cnt in by_rnd.items():
@@ -1532,8 +1549,8 @@ class PaxosContext:
     # -- multi-group internals (G device-resident groups, fused dispatch) ----
     def _pump_coordinator_groups(
         self,
-        submits: List[Tuple[int, bytes, int]],
-        recovers: List[Tuple[int, bytes, int]],
+        submits: list[tuple[int, bytes, int]],
+        recovers: list[tuple[int, bytes, int]],
     ) -> None:
         """Group-keyed coordinator pump: recovery first, then groups under a
         software coordinator (staged, per group), then one fused multi-group
@@ -1547,7 +1564,7 @@ class PaxosContext:
         recovers = [r for r in recovers if live[r[2]]]
         for inst, nop, gid in recovers:
             self._run_recover_group(gid, inst, nop)
-        queues: List[List[Tuple[int, bytes]]] = [
+        queues: list[list[tuple[int, bytes]]] = [
             [] for _ in range(self.n_groups)
         ]
         for seq, payload, gid in submits:
@@ -1589,7 +1606,7 @@ class PaxosContext:
         # ONE dispatch (``pipeline_persistent``).
         hw = self.hw
         async_on = self.cfg.async_pump
-        in_flight: List[Tuple[Tuple[int, ...], Any]] = []
+        in_flight: list[tuple[tuple[int, ...], Any]] = []
         while any(queues):
             pending = [len(q) for q in queues]
             chunks = [q[:b] for q in queues]
@@ -1603,7 +1620,7 @@ class PaxosContext:
             )
             for gid, target in rp.realign:
                 hw.burn_forward(gid, target)
-            wave: List[Tuple[Tuple[int, ...], Any]] = []
+            wave: list[tuple[tuple[int, ...], Any]] = []
             for cohort in rp.cohorts:
                 kk = self._wave_depth_clamped(cohort)
                 if kk > 1:
@@ -1668,7 +1685,7 @@ class PaxosContext:
                 kk = min(kk, head)
         return max(1, kk)
 
-    def _resolve_wave(self, gids: Tuple[int, ...], handle: Any) -> None:
+    def _resolve_wave(self, gids: tuple[int, ...], handle: Any) -> None:
         """Host read-back + delivery for one dispatched cohort wave.
         Persistent waves deliver rounds-then-rows — exactly the order K
         sequential single-round dispatches would have produced."""
@@ -1698,8 +1715,8 @@ class PaxosContext:
         return be
 
     def _pack_chunk(
-        self, chunk: List[Tuple[int, bytes]], be: int
-    ) -> Tuple[np.ndarray, np.ndarray]:
+        self, chunk: list[tuple[int, bytes]], be: int
+    ) -> tuple[np.ndarray, np.ndarray]:
         """Pack (seq, payload) pairs into a (BE, V) wire burst; unfilled
         slots carry the NOP sentinel and are inactive."""
         return plan_mod.pack_rows(
@@ -1738,7 +1755,7 @@ class PaxosContext:
         self._deliver_value(inst, raw)
 
     def _deliver_value(
-        self, inst: int, raw: bytes, group: Optional[int] = None
+        self, inst: int, raw: bytes, group: int | None = None
     ) -> None:
         """The delivery contract, shared by the single-group and group-keyed
         paths: discard internal fillers, suppress duplicates (retransmit
@@ -1789,7 +1806,7 @@ class PaxosContext:
             )
         return self.snapshots
 
-    def full_group_log(self, gid: int = 0) -> List[Tuple[int, bytes]]:
+    def full_group_log(self, gid: int = 0) -> list[tuple[int, bytes]]:
         """The group's complete delivery history: compacted snapshot prefix
         (if any) stitched before the live ``group_log`` — the ONE read that
         is uniform in steady state, at retirement, and after restore."""
@@ -1798,7 +1815,7 @@ class PaxosContext:
         return self.snapshots.log_prefix(gid) + self.group_log[gid]
 
     def snapshot_group(
-        self, gid: int = 0, upto: Optional[int] = None
+        self, gid: int = 0, upto: int | None = None
     ) -> GroupSnapshot:
         """Drain group ``gid``'s decided ring prefix below ``upto`` (default:
         its sequencer watermark — everything) into the ``SnapshotStore``,
@@ -1878,7 +1895,7 @@ class PaxosContext:
     def adopt_group(
         self,
         snap: GroupSnapshot,
-        log_prefix: Optional[List[Tuple[int, bytes]]] = None,
+        log_prefix: list[tuple[int, bytes]] | None = None,
     ) -> int:
         """Admit a tenant bootstrapping from a transferred snapshot: claims
         a free slot whose sequencer and reclamation watermarks start at
@@ -1905,7 +1922,7 @@ class PaxosContext:
                 "(n_groups > 1 or mesh=...)"
             )
 
-    def live_groups(self) -> List[int]:
+    def live_groups(self) -> list[int]:
         """Currently live group ids (ascending) — the routing domain."""
         if not self.grouped:
             return [0]
@@ -1926,7 +1943,7 @@ class PaxosContext:
             self.snapshots.reset_group(gid)
         return gid
 
-    def retire_group(self, gid: int) -> List[Tuple[int, bytes]]:
+    def retire_group(self, gid: int) -> list[tuple[int, bytes]]:
         """Reclaim a tenant's slot: the group's delivery log is drained
         (returned to the caller — the serving tier archives it for routing-
         epoch stitching), its round parks at ``NO_ROUND`` and the slot joins
@@ -1963,7 +1980,7 @@ class PaxosContext:
 
     # -- failover ------------------------------------------------------------
     def fail_coordinator(
-        self, est_next_inst: Optional[int] = None, group: int = 0
+        self, est_next_inst: int | None = None, group: int = 0
     ) -> None:
         """Hardware coordinator dies; a software coordinator takes over.
 
@@ -2005,7 +2022,7 @@ class PaxosContext:
         return res
 
     def _fail_coordinator_group(
-        self, gid: int, est_next_inst: Optional[int]
+        self, gid: int, est_next_inst: int | None
     ) -> None:
         from .failover import takeover_group
 
@@ -2031,6 +2048,7 @@ class PaxosContext:
         self.hw.freeze_group(gid)
         return res
 
+    @mirror_guard
     def restore_hardware_coordinator(self, group: int = 0) -> None:
         self._check_group(group)
         if self.grouped:
@@ -2066,7 +2084,7 @@ class PaxosContext:
 
     def _soft_p2a(
         self, co: SoftCoordinator, vals: np.ndarray, active: np.ndarray,
-        gid: Optional[int] = None,
+        gid: int | None = None,
     ) -> MsgBatch:
         """Software-coordinator sequencing: bind a burst to the coordinator's
         next window (shared by the single-group and per-group failover
@@ -2095,8 +2113,8 @@ class PaxosContext:
                 self.net.send(("learner", lid), ("votes", aid, _to_host(v)))
 
     def _recover_votes(
-        self, surface, inst: int, nop: bytes, gid: Optional[int] = None
-    ) -> Optional[List[Optional[MsgBatch]]]:
+        self, surface, inst: int, nop: bytes, gid: int | None = None
+    ) -> list[MsgBatch | None] | None:
         """The shared recovery engine: Phase-1 scan one instance, choose the
         required value (discovered vote, else the no-op), Phase-2 it, and
         return the per-acceptor vote batches (None = no quorum of promises).
@@ -2124,7 +2142,7 @@ class PaxosContext:
             gid=gtag,
         )
         promises = surface.prepare(p1a)
-        best: Tuple[int, Optional[bytes]] = (NO_ROUND, None)
+        best: tuple[int, bytes | None] = (NO_ROUND, None)
         got = 0
         for v in promises:
             if v is None:

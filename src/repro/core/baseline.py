@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 from collections import defaultdict
-from typing import Callable, Dict, List, Optional, Tuple
+from collections.abc import Callable
 
 from .network import SimNet
 from .paxos import Acceptor, Coordinator, Learner, Proposer
@@ -24,9 +24,9 @@ class SoftwarePaxos:
 
     def __init__(
         self,
-        cfg: Optional[PaxosConfig] = None,
-        deliver: Optional[Callable[[bytes, int, int], None]] = None,
-        net: Optional[SimNet] = None,
+        cfg: PaxosConfig | None = None,
+        deliver: Callable[[bytes, int, int], None] | None = None,
+        net: SimNet | None = None,
         n_learners: int = 1,
     ):
         self.cfg = cfg or PaxosConfig()
@@ -44,9 +44,9 @@ class SoftwarePaxos:
             for i in range(n_learners)
         ]
         self.learners[0].deliver_cb = self._on_deliver
-        self.delivered: List[Tuple[int, bytes]] = []
+        self.delivered: list[tuple[int, bytes]] = []
         # per-role busy seconds — reproduces the paper's Fig. 2 methodology
-        self.busy: Dict[str, float] = defaultdict(float)
+        self.busy: dict[str, float] = defaultdict(float)
 
     def _on_deliver(self, inst: int, value: bytes) -> None:
         self.delivered.append((inst, value))

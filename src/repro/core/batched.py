@@ -18,7 +18,6 @@ Semantics notes
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +42,7 @@ NO_ROUND = jnp.int32(-1)
 # ---------------------------------------------------------------------------
 def coordinator_sequence(
     cstate: CoordinatorState, values: jax.Array, active: jax.Array
-) -> Tuple[CoordinatorState, MsgBatch]:
+) -> tuple[CoordinatorState, MsgBatch]:
     """Bind a batch of proposals to a contiguous window of instances.
 
     Inactive slots still consume an instance and carry a NOP marker — they are
@@ -71,7 +70,7 @@ def coordinator_sequence(
 # ---------------------------------------------------------------------------
 def acceptor_phase2(
     astate: AcceptorState, msgs: MsgBatch, aid: int | jax.Array = 0
-) -> Tuple[AcceptorState, MsgBatch]:
+) -> tuple[AcceptorState, MsgBatch]:
     """Vote on a batch of P2A requests against the instance ring.
 
     accept iff msgtype==P2A and msg.rnd >= promised rnd of the slot.
@@ -107,7 +106,7 @@ def acceptor_phase2(
 
 def acceptor_phase1(
     astate: AcceptorState, msgs: MsgBatch, aid: int | jax.Array = 0
-) -> Tuple[AcceptorState, MsgBatch]:
+) -> tuple[AcceptorState, MsgBatch]:
     """Promise on a batch of P1A prepares (recovery / takeover path)."""
     n = astate.n_instances
     slots = msgs.inst % n
@@ -138,7 +137,7 @@ def acceptor_phase1(
 # ---------------------------------------------------------------------------
 def acceptor_phase2_all(
     stack: AcceptorState, msgs: MsgBatch, alive: jax.Array
-) -> Tuple[AcceptorState, MsgBatch]:
+) -> tuple[AcceptorState, MsgBatch]:
     """Phase-2 vote of the *whole* acceptor array on one P2A batch.
 
     ``stack`` holds the A register files stacked on a leading axis; ``alive``
@@ -179,7 +178,7 @@ def acceptor_phase2_all(
 
 def acceptor_phase1_all(
     stack: AcceptorState, msgs: MsgBatch, alive: jax.Array
-) -> Tuple[AcceptorState, MsgBatch]:
+) -> tuple[AcceptorState, MsgBatch]:
     """Phase-1 promise of the whole acceptor array (recovery/takeover path)."""
     a = stack.rnd.shape[0]
 
@@ -203,7 +202,7 @@ def acceptor_phase1_all(
 # ---------------------------------------------------------------------------
 def acceptor_sequential(
     astate: AcceptorState, msgs: MsgBatch, aid: int | jax.Array = 0
-) -> Tuple[AcceptorState, MsgBatch]:
+) -> tuple[AcceptorState, MsgBatch]:
     """One-message-at-a-time semantics via lax.scan (recovery / adversarial)."""
 
     def step(state: AcceptorState, m):
@@ -254,7 +253,7 @@ def learner_quorum(
     vote_vrnd: jax.Array,      # int32[A, B]
     vote_value: jax.Array,     # int32[A, B, V]
     quorum: int,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Position-aligned quorum count over the acceptor axis.
 
     Votes arriving from the A acceptors for the same P2A batch are aligned by
@@ -317,7 +316,7 @@ def learner_update(
     deliver: jax.Array,
     inst: jax.Array,
     value: jax.Array,
-) -> Tuple[LearnerState, jax.Array]:
+) -> tuple[LearnerState, jax.Array]:
     """Record deliveries; returns mask of *fresh* (not duplicate) deliveries."""
     n = lstate.delivered.shape[0]
     slots = inst % n
@@ -349,7 +348,7 @@ def fused_round(
     alive: jax.Array,     # bool[A]
     quorum: int | jax.Array,
     reclaim_limit: jax.Array | None = None,  # int32[]; None = no reclamation
-) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+) -> tuple[CoordinatorState, AcceptorState, LearnerState,
            jax.Array, jax.Array, jax.Array, jax.Array]:
     """The CAANS wire path as one jnp program: coordinator sequencing, the
     whole acceptor array's Phase-2 vote, learner quorum count, and ring-dedup
@@ -386,8 +385,9 @@ def multigroup_fused_round(
     active: jax.Array,          # bool[G, B]
     alive: jax.Array,           # bool[G, A]
     quorum: int | jax.Array,
+    enabled: jax.Array | None = None,        # 0/1 per group; None = all
     reclaim_limit: jax.Array | None = None,  # int32[G]; None = no reclamation
-) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+) -> tuple[CoordinatorState, AcceptorState, LearnerState,
            jax.Array, jax.Array, jax.Array, jax.Array]:
     """``fused_round`` vmapped over a leading group axis: G device-resident
     Paxos groups advance one Phase-2 round in a single jnp program.
@@ -398,8 +398,22 @@ def multigroup_fused_round(
     It is the semantic oracle (and CPU fallback) for the Pallas megakernel
     ``repro.kernels.wirepath.multigroup_wirepath_round`` (DESIGN.md §5).
     ``reclaim_limit`` carries each group's reclamation limit (DESIGN.md §9).
+
+    ``enabled`` (0/1 per group) holds disabled groups inert exactly as the
+    kernel path does: a disabled group is presented at NO_ROUND so every
+    acceptor rejects its slots.  Like the kernel wrapper, the returned
+    coordinator watermark still advances for every group — callers that mix
+    enabled/disabled groups correct the watermark with their own
+    ``jnp.where(enabled, ...)`` (see ``persistent_multigroup_rounds``).
     Returns the ``fused_round`` tuple with every output grown a (G,) axis.
     """
+    if enabled is not None:
+        cstate = CoordinatorState(
+            next_inst=cstate.next_inst,
+            crnd=jnp.where(
+                jnp.asarray(enabled) != 0, cstate.crnd, NO_ROUND
+            ),
+        )
     if reclaim_limit is None:
         return jax.vmap(fused_round, in_axes=(0, 0, 0, 0, 0, 0, None))(
             cstate, stack, lstate, values, active, alive, quorum
@@ -420,7 +434,7 @@ def persistent_multigroup_rounds(
     quorum: int | jax.Array,
     enabled_rounds: jax.Array | None = None,  # bool/int32[K, G]; None = all
     reclaim_limit: jax.Array | None = None,   # int32[G]; None = no reclamation
-) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+) -> tuple[CoordinatorState, AcceptorState, LearnerState,
            jax.Array, jax.Array, jax.Array, jax.Array]:
     """K Phase-2 rounds unrolled in ONE jnp program: the bit-exact oracle of
     the persistent wave kernel ``kernels.wirepath.persistent_wirepath_round``
@@ -452,7 +466,7 @@ def persistent_multigroup_rounds(
             )
         new_c, stack, lstate, fresh, inst, win, value = multigroup_fused_round(
             eff, stack, lstate, values[r], active[r], alive, quorum,
-            reclaim_limit,
+            reclaim_limit=reclaim_limit,
         )
         if en is None:
             cstate = CoordinatorState(
@@ -478,7 +492,7 @@ def persistent_multigroup_rounds(
 
 def init_multigroup_state(
     n_groups: int, n_acceptors: int, n_instances: int, value_words: int
-) -> Tuple[CoordinatorState, AcceptorState, LearnerState]:
+) -> tuple[CoordinatorState, AcceptorState, LearnerState]:
     """Freshly initialized (G,)-stacked coordinator/acceptor/learner state."""
     cstate = CoordinatorState(
         next_inst=jnp.zeros((n_groups,), jnp.int32),

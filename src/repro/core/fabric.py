@@ -20,7 +20,6 @@ fewer hops", at ICI speed.  Acceptor failure is modelled by an ``alive`` mask
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +59,7 @@ def consensus_round(
     *,
     axis: str,
     quorum: int,
-) -> Tuple[AcceptorState, CoordinatorState, jax.Array, jax.Array, jax.Array]:
+) -> tuple[AcceptorState, CoordinatorState, jax.Array, jax.Array, jax.Array]:
     """One in-fabric consensus round (runs *inside* shard_map).
 
     Returns (astate', cstate', decided_mask[B], inst[B], value[B, V]) with
@@ -94,7 +93,7 @@ def make_fabric_consensus(
     mesh: jax.sharding.Mesh,
     *,
     axis: str = "data",
-    quorum: Optional[int] = None,
+    quorum: int | None = None,
     n_instances: int = 4096,
     value_words: int = 16,
 ):
@@ -244,7 +243,8 @@ def make_sharded_multigroup_round(
             cs = CoordinatorState(next_inst=ni_l, crnd=cr_l)
             _c, stack, lstate, fresh, _i, win, value = (
                 batched.multigroup_fused_round(
-                    cs, stack, lstate, values, active, al_l != 0, q, lim_l
+                    cs, stack, lstate, values, active, al_l != 0, q,
+                    reclaim_limit=lim_l,
                 )
             )
         b = values.shape[1]
@@ -310,7 +310,7 @@ def quorum_commit_digest(
     *,
     axis: str,
     quorum: int,
-) -> Tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array]:
     """Decide a training step commit by digest agreement (inside shard_map).
 
     Each data-parallel replica group votes with the digest of its gradient

@@ -22,7 +22,6 @@ pairs with in-network consensus.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +45,7 @@ def allocate_round(epoch: int, coordinator_id: int, n_coordinators: int = 16) ->
 class TakeoverResult:
     crnd: int
     next_inst: int
-    reproposed: List[Tuple[int, bytes]]   # (inst, value) re-proposed values
+    reproposed: list[tuple[int, bytes]]   # (inst, value) re-proposed values
     scanned: int
 
 
@@ -71,7 +70,7 @@ def takeover(
     b = hw.cfg.batch
     vwords = hw.cfg.value_words
 
-    reproposed: List[Tuple[int, bytes]] = []
+    reproposed: list[tuple[int, bytes]] = []
     highest_voted = -1
     scanned = 0
 
@@ -179,7 +178,7 @@ def rebuild_acceptor_rows(
     crnd: int,
     lo: int,
     hi: int,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Reconstruct one acceptor's ``(rnd, vrnd, value)`` register rows from
     the learner ring's decided live suffix.
 
@@ -208,7 +207,7 @@ def restore_acceptor(
     hw,                      # HardwareDataplane or MultiGroupDataplane
     aid: int,
     *,
-    gid: Optional[int] = None,
+    gid: int | None = None,
     watermark: int = 0,
 ) -> int:
     """Rebuild a wiped acceptor from snapshot watermark + live ring suffix

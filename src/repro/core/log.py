@@ -9,7 +9,7 @@ log view a state-machine-replication application consumes, gap detection
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from collections.abc import Callable
 
 
 @dataclasses.dataclass
@@ -22,13 +22,13 @@ class ReplicatedLog:
     """In-order delivery + gap tracking + quorum trim."""
 
     def __init__(self, n_learners: int = 1, quorum: int = 2):
-        self.entries: Dict[int, bytes] = {}
+        self.entries: dict[int, bytes] = {}
         self.apply_watermark = 0          # next instance to apply, in order
         self.trim_watermark = 0           # everything below is trimmed
         self.quorum = quorum
-        self._trim_acks: Dict[int, set] = {}
-        self.applied: List[LogEntry] = []
-        self.on_apply: Optional[Callable[[int, bytes], None]] = None
+        self._trim_acks: dict[int, set] = {}
+        self.applied: list[LogEntry] = []
+        self.on_apply: Callable[[int, bytes], None] | None = None
 
     def offer(self, inst: int, payload: bytes) -> None:
         """A learner delivered (inst, payload)."""
@@ -46,7 +46,7 @@ class ReplicatedLog:
                 self.on_apply(inst, payload)
             self.apply_watermark += 1
 
-    def gaps(self, horizon: int) -> List[int]:
+    def gaps(self, horizon: int) -> list[int]:
         """Instances < horizon not yet offered — candidates for recover()."""
         return [
             i

@@ -29,7 +29,8 @@ from __future__ import annotations
 import dataclasses
 import random
 from collections import defaultdict, deque
-from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
+from typing import Any
+from collections.abc import Callable, Hashable
 
 
 @dataclasses.dataclass
@@ -55,18 +56,18 @@ class SimNet:
         self,
         faults: FaultSpec | None = None,
         seed: int = 0,
-        key_fn: Optional[Callable[[Hashable, Any], Hashable]] = None,
+        key_fn: Callable[[Hashable, Any], Hashable] | None = None,
     ):
         self.faults = faults or FaultSpec()
         self.seed = seed
         self.rng = random.Random(seed)
         self.key_fn = key_fn
-        self.queues: Dict[Hashable, Deque[Any]] = defaultdict(deque)
+        self.queues: dict[Hashable, deque[Any]] = defaultdict(deque)
         # keyed mode: per-(dst-key) occurrence counters (retransmits of the
         # same logical message get independent fates) and the defer-one-pump
         # side queue that realizes reordering
-        self._occurrence: Dict[Hashable, int] = defaultdict(int)
-        self._deferred: Dict[Hashable, List[Any]] = defaultdict(list)
+        self._occurrence: dict[Hashable, int] = defaultdict(int)
+        self._deferred: dict[Hashable, list[Any]] = defaultdict(list)
         self.sent = 0
         self.dropped = 0
         self.partitioned: set = set()   # endpoints cut off from the fabric
@@ -78,7 +79,7 @@ class SimNet:
             self.partitioned.discard(endpoint)
 
     # -- keyed fault decisions ----------------------------------------------
-    def _fate(self, dst: Hashable, msg: Any) -> Tuple[bool, bool, bool]:
+    def _fate(self, dst: Hashable, msg: Any) -> tuple[bool, bool, bool]:
         """(drop, dup, reorder) for one keyed send — a pure function of the
         seed, the message key and its occurrence index, independent of how
         other endpoints' traffic interleaves."""
@@ -143,7 +144,7 @@ class SimNet:
         q = self.queues[dst]
         return q.popleft() if q else None
 
-    def recv_all(self, dst: Hashable) -> List[Any]:
+    def recv_all(self, dst: Hashable) -> list[Any]:
         q = self.queues[dst]
         out = list(q)
         q.clear()

@@ -15,7 +15,7 @@ The batched JAX engine (``core/batched.py``) and the Pallas kernels
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from collections.abc import Callable
 
 from .types import (
     MSG_DELIVER,
@@ -50,7 +50,7 @@ class Proposer:
 
     def __init__(self, pid: int):
         self.pid = pid
-        self.pending: Dict[int, bytes] = {}   # seq -> payload (for retransmit)
+        self.pending: dict[int, bytes] = {}   # seq -> payload (for retransmit)
         self._seq = 0
 
     def submit(self, payload: bytes) -> Msg:
@@ -74,7 +74,7 @@ class Coordinator:
         self.next_inst = next_inst
         self.n_instances = n_instances
         # Phase-1 bookkeeping for recover/takeover: inst -> {acceptor: (vrnd, value)}
-        self.p1b: Dict[Tuple[int, int], Dict[int, Tuple[int, bytes]]] = {}
+        self.p1b: dict[tuple[int, int], dict[int, tuple[int, bytes]]] = {}
 
     # -- normal path (hardware fast path in CAANS) --------------------------
     def on_submit(self, msg: Msg) -> Msg:
@@ -84,12 +84,12 @@ class Coordinator:
                    value=msg.value)
 
     # -- recovery path (phase 1 then 2) --------------------------------------
-    def prepare(self, inst: int, rnd: Optional[int] = None) -> Msg:
+    def prepare(self, inst: int, rnd: int | None = None) -> Msg:
         if rnd is None:
             rnd = self.crnd
         return Msg(MSG_P1A, inst=inst, rnd=rnd, swid=self.cid)
 
-    def on_p1b(self, msg: Msg, quorum: int) -> Optional[Msg]:
+    def on_p1b(self, msg: Msg, quorum: int) -> Msg | None:
         """Collect promises; at quorum, issue P2A with the required value.
 
         Returns the P2A to send once a quorum of promises for (inst, rnd) has
@@ -116,12 +116,12 @@ class Acceptor:
         self.n_instances = n_instances
         # slot -> (promised rnd, voted rnd, voted value).  Pre-initialized
         # (lazily) to (0, NO_ROUND, b"") == "promised round 0", eliding Phase 1.
-        self.slots: Dict[int, Tuple[int, int, bytes]] = {}
+        self.slots: dict[int, tuple[int, int, bytes]] = {}
 
-    def _get(self, inst: int) -> Tuple[int, int, bytes]:
+    def _get(self, inst: int) -> tuple[int, int, bytes]:
         return self.slots.get(inst % self.n_instances, (0, NO_ROUND, b""))
 
-    def _set(self, inst: int, v: Tuple[int, int, bytes]) -> None:
+    def _set(self, inst: int, v: tuple[int, int, bytes]) -> None:
         self.slots[inst % self.n_instances] = v
 
     def on_p1a(self, msg: Msg) -> Msg:
@@ -149,20 +149,20 @@ class Learner:
     """
 
     def __init__(self, lid: int, n_acceptors: int,
-                 deliver_cb: Optional[Callable[[int, bytes], None]] = None):
+                 deliver_cb: Callable[[int, bytes], None] | None = None):
         self.lid = lid
         self.quorum = n_acceptors // 2 + 1
-        self.votes: Dict[int, Dict[int, Tuple[int, bytes]]] = {}
-        self.delivered: Dict[int, bytes] = {}
+        self.votes: dict[int, dict[int, tuple[int, bytes]]] = {}
+        self.delivered: dict[int, bytes] = {}
         self.deliver_cb = deliver_cb
 
-    def on_p2b(self, msg: Msg) -> Optional[Msg]:
+    def on_p2b(self, msg: Msg) -> Msg | None:
         if msg.inst in self.delivered:
             return None
         votes = self.votes.setdefault(msg.inst, {})
         votes[msg.swid] = (msg.vrnd, msg.value)
         # quorum = f+1 votes with the same vrnd
-        by_rnd: Dict[int, int] = {}
+        by_rnd: dict[int, int] = {}
         for vrnd, _ in votes.values():
             by_rnd[vrnd] = by_rnd.get(vrnd, 0) + 1
         for vrnd, count in by_rnd.items():
@@ -174,7 +174,7 @@ class Learner:
                 return Msg(MSG_DELIVER, inst=msg.inst, rnd=vrnd, value=value)
         return None
 
-    def gaps(self, upto: Optional[int] = None) -> List[int]:
+    def gaps(self, upto: int | None = None) -> list[int]:
         """Instances below the watermark that this learner has not delivered.
 
         With an explicit ``upto`` watermark the answer is defined even when

@@ -42,7 +42,8 @@ never re-engaged.  ``plan.py`` owns all of those decisions in one place:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -84,7 +85,7 @@ def quantize_burst(n: int, cap: int) -> int:
     return min(be, cap)
 
 
-def _divisors(cap: int) -> List[int]:
+def _divisors(cap: int) -> list[int]:
     return [d for d in range(1, cap + 1) if cap % d == 0]
 
 
@@ -92,7 +93,7 @@ def _block_lockstep(gids: Sequence[int], marks: Sequence[int], d: int) -> bool:
     """True iff every ``d``-aligned block's members (of ``gids``) share one
     watermark — the validity condition for folding ``d`` groups per grid
     step with cohort-base substitution for non-members."""
-    classes: Dict[int, int] = {}
+    classes: dict[int, int] = {}
     for g in gids:
         blk = g // d
         if classes.setdefault(blk, marks[g]) != marks[g]:
@@ -119,7 +120,7 @@ def fold_width_full(
 
 def cohort_blocks(
     gids: Sequence[int], marks: Sequence[int], cap: int
-) -> Tuple[int, List[int]]:
+) -> tuple[int, list[int]]:
     """Group-axis *compaction* for a cohort dispatch: pick ``(gb, blocks)``
     so the kernel grid visits only the aligned ``gb``-blocks containing
     cohort members.
@@ -128,7 +129,7 @@ def cohort_blocks(
     group axis), then the fold width (block size — smaller blocks carry
     fewer inert filler rows).  A single hot group therefore costs one
     1-group block; a 7-of-8 cold cohort costs one folded 8-group block."""
-    best: Optional[Tuple[Tuple[int, int], int, List[int]]] = None
+    best: tuple[tuple[int, int], int, list[int]] | None = None
     for d in _divisors(cap):
         if not _block_lockstep(gids, marks, d):
             continue
@@ -142,7 +143,7 @@ def cohort_blocks(
 
 def pack_rows(
     rows: Sequence[np.ndarray], be: int, value_words: int
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray]:
     """Pack encoded value rows into a ``(be, V)`` wire burst; unfilled
     slots carry the NOP sentinel and are inactive.
 
@@ -165,10 +166,10 @@ def pack_rows(
 def scatter_rows(
     gids: Sequence[int],
     values: np.ndarray,
-    active: Optional[np.ndarray],
+    active: np.ndarray | None,
     g: int,
     value_words: int,
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray]:
     """Scatter compact cohort rows into a full-width ``(G, BE, V)`` burst:
     non-member rows carry the NOP sentinel and are inactive (they ride any
     dispatch inert).  The single definition of the full-width packing
@@ -196,7 +197,7 @@ class Cohort:
     consuming ``rounds`` burst-sized chunks per member, and syncs results
     back to the host once."""
 
-    gids: Tuple[int, ...]
+    gids: tuple[int, ...]
     burst: int
     rounds: int = 1
 
@@ -212,9 +213,9 @@ class RoundPlan:
     state — one cohort, one watermark class — where the dispatch folds the
     full width."""
 
-    cohorts: Tuple[Cohort, ...]
-    enabled: Tuple[bool, ...]
-    realign: Tuple[Tuple[int, int], ...]
+    cohorts: tuple[Cohort, ...]
+    enabled: tuple[bool, ...]
+    realign: tuple[tuple[int, int], ...]
     fragmentation: int
     full_fold: bool
 
@@ -233,16 +234,16 @@ class DispatchPlanner:
         self,
         batch: int,
         n_instances: int,
-        realign_after: Optional[int] = None,
+        realign_after: int | None = None,
         persistent_rounds: int = 1,
-    ):
+    ) -> None:
         self.batch = batch
         self.n_instances = n_instances
         self.realign_after = realign_after
         self.persistent_rounds = max(1, int(persistent_rounds))
         self._fragmented_rounds = 0
-        self.last_plan: Optional[RoundPlan] = None
-        self.stats = {
+        self.last_plan: RoundPlan | None = None
+        self.stats: dict[str, Any] = {
             "rounds": 0,
             "dispatches": 0,
             "full_fold_rounds": 0,
@@ -263,7 +264,7 @@ class DispatchPlanner:
         plan stays a pure function of the round's inputs."""
         self.stats["service_loads"] = list(loads)
 
-    def report(self) -> Dict:
+    def report(self) -> dict[str, Any]:
         # Snapshot-copy every mutable value: a report is an observation,
         # not a window onto live planner state (callers mutating a report
         # must not perturb planning, and later observe_service_loads calls
@@ -280,7 +281,7 @@ class DispatchPlanner:
         self,
         burst: int,
         gids: Sequence[int],
-        pending: Optional[Sequence[int]],
+        pending: Sequence[int] | None,
     ) -> int:
         """Persistent-wave depth K for one cohort (DESIGN.md §11).
 
@@ -306,7 +307,7 @@ class DispatchPlanner:
         marks: Sequence[int],
         live: Sequence[bool],
         crnd: Sequence[int],
-        pending: Optional[Sequence[int]] = None,
+        pending: Sequence[int] | None = None,
     ) -> RoundPlan:
         """Resolve one chunk wave: membership/frozen masking, the
         realignment sweep, and the hot->cold cohort tiering.
@@ -345,7 +346,7 @@ class DispatchPlanner:
         elif en_gids:
             self._fragmented_rounds = 0
 
-        realign: List[Tuple[int, int]] = []
+        realign: list[tuple[int, int]] = []
         if (
             self.realign_after is not None
             and fragmented
@@ -363,7 +364,7 @@ class DispatchPlanner:
             self._fragmented_rounds = 0
             self.stats["realignments"] += 1
 
-        tiers: Dict[int, List[int]] = {}
+        tiers: dict[int, list[int]] = {}
         for i in en_gids:
             be = quantize_burst(loads[i], self.batch)
             tiers.setdefault(be, []).append(i)

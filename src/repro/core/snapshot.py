@@ -29,7 +29,7 @@ drain-schedule fingerprint.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Any
 
 import numpy as np
 
@@ -46,7 +46,9 @@ class RingOverflowError(RuntimeError):
     without parsing the message.
     """
 
-    def __init__(self, group: int, base: int, burst: int, boundary: int):
+    def __init__(
+        self, group: int, base: int, burst: int, boundary: int
+    ) -> None:
         self.group = group
         self.base = base
         self.burst = burst
@@ -90,9 +92,12 @@ class RingReclamationMixin:
     watermark host mirrors the window validation reads.
     """
 
-    _reclaim_marks: Optional[List[int]] = None
+    _reclaim_marks: list[int] | None = None
+    # provided by the concrete dataplane (PaxosConfig); declared loose so
+    # the mixin stays independent of the host class hierarchy
+    cfg: Any
 
-    def _seq_marks(self) -> List[int]:
+    def _seq_marks(self) -> list[int]:
         raise NotImplementedError
 
     @property
@@ -121,7 +126,7 @@ class RingReclamationMixin:
         if base + burst > boundary:
             raise RingOverflowError(gid, base, burst, boundary)
 
-    def _reclaim_limits_np(self) -> Optional[np.ndarray]:
+    def _reclaim_limits_np(self) -> np.ndarray | None:
         """int32[G] first-refused-instance vector, or None when disabled —
         the host-authoritative form every dispatch threads to its engine."""
         if self._reclaim_marks is None:
@@ -166,10 +171,10 @@ class SnapshotStore:
     """
 
     def __init__(self) -> None:
-        self._insts: Dict[int, np.ndarray] = {}
-        self._values: Dict[int, np.ndarray] = {}
-        self._watermark: Dict[int, int] = {}
-        self._log: Dict[int, List[Tuple[int, bytes]]] = {}
+        self._insts: dict[int, np.ndarray] = {}
+        self._values: dict[int, np.ndarray] = {}
+        self._watermark: dict[int, int] = {}
+        self._log: dict[int, list[tuple[int, bytes]]] = {}
 
     # -- watermarks ---------------------------------------------------------
     def watermark(self, gid: int = 0) -> int:
@@ -210,19 +215,19 @@ class SnapshotStore:
         self._watermark[gid] = upto
 
     def absorb_log(
-        self, gid: int, entries: List[Tuple[int, bytes]]
+        self, gid: int, entries: list[tuple[int, bytes]]
     ) -> None:
         """Append compacted ``(inst, payload)`` host-log entries."""
         self._log.setdefault(gid, []).extend(entries)
 
     # -- reads --------------------------------------------------------------
-    def entries(self, gid: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    def entries(self, gid: int = 0) -> tuple[np.ndarray, np.ndarray]:
         """The full drained prefix ``(insts, values)`` below the watermark."""
         if gid not in self._insts:
             return (np.zeros((0,), np.int32), np.zeros((0, 0), np.int32))
         return (self._insts[gid], self._values[gid])
 
-    def log_prefix(self, gid: int = 0) -> List[Tuple[int, bytes]]:
+    def log_prefix(self, gid: int = 0) -> list[tuple[int, bytes]]:
         """The compacted host-log prefix (for ``delivered()`` stitching)."""
         return self._log.get(gid, [])
 
@@ -247,7 +252,7 @@ class SnapshotStore:
         self,
         gid: int,
         snap: GroupSnapshot,
-        log_prefix: Optional[List[Tuple[int, bytes]]] = None,
+        log_prefix: list[tuple[int, bytes]] | None = None,
     ) -> None:
         """Install a transferred snapshot under ``gid``, verifying its seal
         (the divergence check: a corrupted or diverged transfer is rejected,

@@ -110,7 +110,7 @@ class MsgBatch:
     value: jax.Array     # int32[B, V]
     gid: Any = None      # optional scalar int32: consensus group id
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> tuple[tuple[Any, ...], None]:
         return (
             (self.msgtype, self.inst, self.rnd, self.vrnd, self.swid,
              self.value, self.gid),
@@ -118,7 +118,7 @@ class MsgBatch:
         )
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux: None, children: tuple[Any, ...]) -> "MsgBatch":
         return cls(*children)
 
     @property
@@ -156,11 +156,13 @@ class AcceptorState:
     vrnd: jax.Array   # int32[N]
     value: jax.Array  # int32[N, V]
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> tuple[tuple[jax.Array, ...], None]:
         return ((self.rnd, self.vrnd, self.value), None)
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(
+        cls, aux: None, children: tuple[jax.Array, ...]
+    ) -> "AcceptorState":
         return cls(*children)
 
     @property
@@ -188,11 +190,13 @@ class CoordinatorState:
     next_inst: jax.Array  # int32[]    monotonically increasing sequence number
     crnd: jax.Array       # int32[]    the coordinator's round
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> tuple[tuple[jax.Array, ...], None]:
         return ((self.next_inst, self.crnd), None)
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(
+        cls, aux: None, children: tuple[jax.Array, ...]
+    ) -> "CoordinatorState":
         return cls(*children)
 
     @classmethod

@@ -23,7 +23,6 @@ the P4 targets.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +101,7 @@ def acceptor_phase2_window(
     *,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """Vote on a contiguous window batch.  Returns
     (st_rnd', st_vrnd', st_val', vote_type, vote_rnd, vote_vrnd, vote_swid,
     vote_val)."""

@@ -11,7 +11,6 @@ pass.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +50,7 @@ def coordinator_sequence_window(
     *,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Returns (msgtype[B], inst[B], rnd[B], vrnd[B], new_next_inst[])."""
     b = active.shape[0]
     bb = min(block_b, b)

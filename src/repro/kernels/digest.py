@@ -69,7 +69,7 @@ def tree_digest(tree, *, interpret: bool = False) -> jax.Array:
     """Digest a whole gradient pytree (combines leaf digests order-sensitively)."""
     leaves = jax.tree_util.tree_leaves(tree)
     acc = jnp.int32(0)
-    for k, leaf in enumerate(leaves):
+    for leaf in leaves:
         d = digest(leaf, interpret=interpret)
         acc = acc * jnp.int32(1000003) + d  # polynomial combine
     return acc

@@ -19,7 +19,6 @@ mode against ``kernels/ref.flash_attention`` over shape/dtype/window sweeps.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,7 +100,7 @@ def flash_attention(
     *,
     window: jax.Array | int = 0,
     causal: bool = True,
-    softmax_scale: Optional[float] = None,
+    softmax_scale: float | None = None,
     block_q: int = DEFAULT_BQ,
     block_k: int = DEFAULT_BK,
     interpret: bool = False,

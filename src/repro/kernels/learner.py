@@ -13,7 +13,6 @@ the winning round, contracted against the vote values.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +61,7 @@ def learner_quorum_window(
     *,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (deliver[B] int32 0/1, win_vrnd[B], value[B, V])."""
     a, b = vote_type.shape
     v = vote_val.shape[-1]

@@ -8,11 +8,12 @@ backend they compile to Mosaic.  ``INTERPRET`` auto-detects.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import dataplane_contract
+from repro.core import batched as _batched
 from repro.core.batched import LearnerState
 from repro.core.types import AcceptorState, CoordinatorState, MsgBatch
 
@@ -20,15 +21,17 @@ from . import acceptor as _acceptor
 from . import coordinator as _coordinator
 from . import digest as _digest
 from . import learner as _learner
+from . import ref as _ref
 from . import wirepath as _wirepath
 
 NO_ROUND = -1
 INTERPRET = jax.default_backend() == "cpu"
 
 
+@dataplane_contract(oracle=_batched.coordinator_sequence)
 def coordinator_sequence(
     cstate: CoordinatorState, values: jax.Array, active: jax.Array
-) -> Tuple[CoordinatorState, MsgBatch]:
+) -> tuple[CoordinatorState, MsgBatch]:
     """Kernel-backed drop-in for ``batched.coordinator_sequence``."""
     b = values.shape[0]
     msgtype, inst, rnd, vrnd, new_next = _coordinator.coordinator_sequence_window(
@@ -45,9 +48,10 @@ def coordinator_sequence(
     return CoordinatorState(next_inst=new_next, crnd=cstate.crnd), out
 
 
+@dataplane_contract(oracle=_batched.acceptor_phase2, state_args=("astate",))
 def acceptor_phase2(
     astate: AcceptorState, msgs: MsgBatch, aid: int | jax.Array = 0
-) -> Tuple[AcceptorState, MsgBatch]:
+) -> tuple[AcceptorState, MsgBatch]:
     """Kernel-backed drop-in for ``batched.acceptor_phase2``.
 
     Requires the contiguous-window invariant maintained by the sequencer:
@@ -74,13 +78,14 @@ def acceptor_phase2(
     return AcceptorState(st_rnd, st_vrnd, st_val), votes
 
 
+@dataplane_contract(oracle=_batched.learner_quorum)
 def learner_quorum(
     vote_msgtype: jax.Array,
     vote_inst: jax.Array,
     vote_vrnd: jax.Array,
     vote_value: jax.Array,
     quorum: int,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Kernel-backed drop-in for ``batched.learner_quorum``."""
     deliver, win, value = _learner.learner_quorum_window(
         jnp.int32(quorum),
@@ -93,6 +98,9 @@ def learner_quorum(
     return deliver.astype(bool), inst, win, value
 
 
+@dataplane_contract(
+    oracle=_batched.fused_round, state_args=("stack", "lstate")
+)
 def fused_round(
     cstate: CoordinatorState,
     stack: AcceptorState,
@@ -102,7 +110,7 @@ def fused_round(
     alive: jax.Array,
     quorum: int | jax.Array,
     reclaim_limit: jax.Array | None = None,
-) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+) -> tuple[CoordinatorState, AcceptorState, LearnerState,
            jax.Array, jax.Array, jax.Array, jax.Array]:
     """Kernel-backed drop-in for ``batched.fused_round`` — the whole Phase-2
     round in one ``pallas_call`` (DESIGN.md §3).
@@ -149,6 +157,11 @@ def fused_round(
     )
 
 
+@dataplane_contract(
+    oracle=_batched.multigroup_fused_round,
+    state_args=("stack", "lstate"),
+    extra=("group_block",),
+)
 def multigroup_fused_round(
     cstate: CoordinatorState,   # leaves shaped (G,)
     stack: AcceptorState,       # leaves shaped (G, A, N[, V])
@@ -161,7 +174,7 @@ def multigroup_fused_round(
     reclaim_limit: jax.Array | None = None,  # int32[G]; None = no reclamation
     *,
     group_block: int = 1,
-) -> Tuple[CoordinatorState, AcceptorState, LearnerState,
+) -> tuple[CoordinatorState, AcceptorState, LearnerState,
            jax.Array, jax.Array, jax.Array, jax.Array]:
     """Kernel-backed drop-in for ``batched.multigroup_fused_round`` — G
     device-resident Paxos groups, one ``pallas_call`` (DESIGN.md §5).
@@ -211,6 +224,15 @@ def multigroup_fused_round(
     )
 
 
+@dataplane_contract(
+    oracle=None,
+    state_args=("stack", "lstate"),
+    reason=(
+        "compositional entry with no standalone oracle: the jnp parity "
+        "path is full-width batched.multigroup_fused_round over "
+        "scatter-expanded cohort rows (tests/test_wirepath_parity.py)"
+    ),
+)
 def cohort_fused_round(
     stack: AcceptorState,       # leaves shaped (G, A, N[, V])
     lstate: LearnerState,       # leaves shaped (G, N[, V])
@@ -224,7 +246,7 @@ def cohort_fused_round(
     reclaim_limit: jax.Array | None = None,  # int32[G]; None = no reclamation
     *,
     group_block: int = 1,
-) -> Tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
+) -> tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
     """Cohort-compacted fused round (DESIGN.md §8): the grid visits only the
     group blocks named by ``gsel``, so a dispatch costs what its cohort
     costs — not the full capacity G.  Stateless with respect to the
@@ -263,6 +285,13 @@ def cohort_fused_round(
     )
 
 
+@dataplane_contract(
+    oracle=_batched.persistent_multigroup_rounds,
+    state_args=("stack", "lstate"),
+    extra=("gsel", "wni", "wen", "crnd", "group_block", "block_b"),
+    oracle_extra=("cstate", "active", "enabled_rounds"),
+    strict_order=False,
+)
 def persistent_cohort_rounds(
     stack: AcceptorState,       # leaves shaped (G, A, N[, V])
     lstate: LearnerState,       # leaves shaped (G, N[, V])
@@ -277,7 +306,7 @@ def persistent_cohort_rounds(
     *,
     group_block: int = 1,
     block_b: int | None = None,
-) -> Tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
+) -> tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
     """Persistent K-round wave dispatch (DESIGN.md §11): the whole chunk
     wave stays device-resident and syncs back to host once per K rounds.
     Coordinator-stateless like ``cohort_fused_round`` — the dataplane walks
@@ -318,9 +347,10 @@ def persistent_cohort_rounds(
     )
 
 
+@dataplane_contract(oracle=_batched.acceptor_phase2_all, state_args=("stack",))
 def acceptor_phase2_all(
     stack: AcceptorState, msgs: MsgBatch, alive: jax.Array
-) -> Tuple[AcceptorState, MsgBatch]:
+) -> tuple[AcceptorState, MsgBatch]:
     """Kernel-backed drop-in for ``batched.acceptor_phase2_all``.
 
     Requires the contiguous-window invariant (``msgs.inst == base + iota(B)``
@@ -352,9 +382,18 @@ def acceptor_phase2_all(
     return AcceptorState(st_rnd, st_vrnd, st_val), votes
 
 
+@dataplane_contract(oracle=_ref.digest)
 def digest(x: jax.Array) -> jax.Array:
     return _digest.digest(x, interpret=INTERPRET)
 
 
+@dataplane_contract(
+    oracle=None,
+    reason=(
+        "leaf-wise composition of ``digest``: the jnp oracle is "
+        "kernels.ref.digest applied per flattened leaf, folded with the "
+        "same mixing constant (tests/test_digest.py pins parity)"
+    ),
+)
 def tree_digest(tree) -> jax.Array:
     return _digest.tree_digest(tree, interpret=INTERPRET)

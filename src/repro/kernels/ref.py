@@ -8,7 +8,6 @@ truth.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ NO_ROUND = -1
 
 def acceptor_phase2_window(
     st_rnd, st_vrnd, st_val, base, aid, msgtype, msg_rnd, msg_val
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """Oracle for kernels.acceptor.acceptor_phase2_window."""
     n = st_rnd.shape[0]
     b = msgtype.shape[0]
@@ -56,7 +55,7 @@ def acceptor_phase2_window(
 
 def coordinator_sequence_window(
     next_inst, crnd, active
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """Oracle for kernels.coordinator.coordinator_sequence_window."""
     b = active.shape[0]
     inst = jnp.asarray(next_inst, jnp.int32) + jnp.arange(b, dtype=jnp.int32)
@@ -68,7 +67,7 @@ def coordinator_sequence_window(
 
 def learner_quorum_window(
     quorum, vote_type, vote_vrnd, vote_val
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Oracle for kernels.learner.learner_quorum_window."""
     is_vote = vote_type == MSG_P2B
     masked = jnp.where(is_vote, vote_vrnd, NO_ROUND)
@@ -84,7 +83,7 @@ def learner_quorum_window(
 def wirepath_round(
     next_inst, crnd, quorum, alive,
     st_rnd, st_vrnd, st_val, ldel, linst, lval, values,
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """Oracle for kernels.wirepath.wirepath_round — delegates to the jnp
     fused round so oracle and system share one source of protocol truth."""
     b = values.shape[0]
@@ -108,7 +107,7 @@ def wirepath_round(
 
 def acceptor_vote_all_window(
     st_rnd, st_vrnd, st_val, base, alive, msgtype, msg_rnd, msg_val
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """Oracle for kernels.wirepath.acceptor_vote_all_window."""
     n = st_rnd.shape[1]
     b = msgtype.shape[0]

@@ -67,7 +67,6 @@ side of the policy (burst tiers, fold widths, block selection) lives in
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -239,13 +238,13 @@ def cohort_wirepath_round(
     linst: jax.Array,       # int32[G, N]
     lval: jax.Array,        # int32[G, N, V]
     values: jax.Array,      # int32[NB*GB, B, V]  cohort burst values, compact
-    enabled: Optional[jax.Array] = None,  # int32[G] (0/1); None = all enabled
-    limit: Optional[jax.Array] = None,    # int32[G]; None = no reclamation
+    enabled: jax.Array | None = None,  # int32[G] (0/1); None = all enabled
+    limit: jax.Array | None = None,    # int32[G]; None = no reclamation
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
     interpret: bool = False,
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """One fused Phase-2 round for a *cohort* of groups: the grid visits
     only the ``GB``-aligned group blocks named by ``gsel`` (DESIGN.md §8).
 
@@ -417,13 +416,13 @@ def multigroup_wirepath_round(
     linst: jax.Array,       # int32[G, N]
     lval: jax.Array,        # int32[G, N, V]
     values: jax.Array,      # int32[G, B, V]   per-group burst values
-    enabled: Optional[jax.Array] = None,  # int32[G] (0/1); None = all enabled
-    limit: Optional[jax.Array] = None,    # int32[G]; None = no reclamation
+    enabled: jax.Array | None = None,  # int32[G] (0/1); None = all enabled
+    limit: jax.Array | None = None,    # int32[G]; None = no reclamation
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
     interpret: bool = False,
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """One fused Phase-2 round for G device-resident groups; single dispatch.
 
     The full-width slice of ``cohort_wirepath_round``: every group block is
@@ -536,12 +535,12 @@ def persistent_wirepath_round(
     linst: jax.Array,       # int32[G, N]
     lval: jax.Array,        # int32[G, N, V]
     values: jax.Array,      # int32[K, NB*GB, B, V]  wave values, compact rows
-    limit: Optional[jax.Array] = None,    # int32[G]; None = no reclamation
+    limit: jax.Array | None = None,    # int32[G]; None = no reclamation
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
     interpret: bool = False,
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """K Phase-2 rounds in ONE ``pallas_call``: the persistent wire path.
 
     The single-round dispatch pays a host round-trip per round, and on small
@@ -717,13 +716,13 @@ def shard_slab_round(
     linst: jax.Array,         # int32[Gl, N]
     lval: jax.Array,          # int32[Gl, N, V]
     values: jax.Array,        # int32[Gl, B, V]   this shard's burst slab
-    enabled: Optional[jax.Array] = None,  # int32[G_global] (0/1) replicated
-    limit: Optional[jax.Array] = None,    # int32[G_global] replicated
+    enabled: jax.Array | None = None,  # int32[G_global] (0/1) replicated
+    limit: jax.Array | None = None,    # int32[G_global] replicated
     *,
     block_b: int = DEFAULT_BLOCK_B,
     group_block: int = 1,
     interpret: bool = False,
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """Local-slab entry point for the groups-sharded dataplane (DESIGN.md §6).
 
     Runs ``multigroup_wirepath_round`` on ONE shard's contiguous slab of
@@ -778,11 +777,11 @@ def wirepath_round(
     linst: jax.Array,       # int32[N]
     lval: jax.Array,        # int32[N, V]
     values: jax.Array,      # int32[B, V]   burst values
-    limit: Optional[jax.Array] = None,  # int32[]; None = no reclamation
+    limit: jax.Array | None = None,  # int32[]; None = no reclamation
     *,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """One fused Phase-2 round for a single group: the G=1 slice of
     ``multigroup_wirepath_round`` (same kernel, one group on the grid).
 
@@ -866,7 +865,7 @@ def acceptor_vote_all_window(
     *,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
-) -> Tuple[jax.Array, ...]:
+) -> tuple[jax.Array, ...]:
     """Whole-array Phase-2 vote on a contiguous window, one dispatch.
 
     The staged sibling of ``wirepath_round`` for when votes must surface as

@@ -21,7 +21,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,7 @@ from repro.serve.engine import make_prefill_step, make_serve_step
 from repro.train import train_loop
 
 
-def _mem_analysis(compiled) -> Dict[str, float]:
+def _mem_analysis(compiled) -> dict[str, float]:
     try:
         m = compiled.memory_analysis()
         if m is None:
@@ -65,7 +65,7 @@ def _arg_bytes_per_device(shardings_tree, shapes_tree, mesh) -> float:
         shardings_tree, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
     )
     shapes = jax.tree_util.tree_leaves(shapes_tree)
-    for sds, s in zip(shapes, shards):
+    for sds, s in zip(shapes, shards, strict=False):
         if not hasattr(sds, "shape"):
             continue
         n = float(np.prod(sds.shape)) if sds.shape else 1.0
@@ -78,7 +78,7 @@ def _replication(sharding, shape, mesh) -> float:
     try:
         spec = sharding.spec
         sharded = 1
-        for i, part in enumerate(spec):
+        for part in spec:
             if part is None:
                 continue
             axes = (part,) if isinstance(part, str) else part
@@ -114,12 +114,12 @@ def lower_cell(
     rules_name: str = "base",
     variant: str = "base",
     compile_it: bool = True,
-    chunk_q: Optional[int] = None,
-) -> Dict[str, Any]:
+    chunk_q: int | None = None,
+) -> dict[str, Any]:
     cfg = VARIANTS[variant](get_config(arch), multi_pod)
     shape = SHAPES[shape_name]
     mesh_name = "2x16x16" if multi_pod else "16x16"
-    rec: Dict[str, Any] = {
+    rec: dict[str, Any] = {
         "arch": arch,
         "shape": shape_name,
         "mesh": mesh_name,

@@ -16,7 +16,8 @@ for low-kv GQA architectures).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any
+from collections.abc import Sequence
 
 import jax
 import numpy as np
@@ -24,16 +25,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import layers as L
 
-AxisCandidate = Union[None, str, Tuple[str, ...]]
+AxisCandidate = None | str | tuple[str, ...]
 
 
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:
     """Ordered candidates per logical axis name."""
 
-    rules: Dict[str, Tuple[AxisCandidate, ...]]
+    rules: dict[str, tuple[AxisCandidate, ...]]
 
-    def candidates(self, name: Optional[str]) -> Tuple[AxisCandidate, ...]:
+    def candidates(self, name: str | None) -> tuple[AxisCandidate, ...]:
         if name is None:
             return (None,)
         return self.rules.get(name, (None,))
@@ -120,17 +121,17 @@ def abstract_mesh(shape: Sequence[int], axis_names: Sequence[str]):
     try:
         return jax.sharding.AbstractMesh(tuple(shape), tuple(axis_names))
     except TypeError:
-        return jax.sharding.AbstractMesh(tuple(zip(axis_names, shape)))
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, shape, strict=True)))
 
 
 def resolve_spec(
-    shape: Sequence[int], axes: Sequence[Optional[str]], rules: ShardingRules, mesh: Mesh
+    shape: Sequence[int], axes: Sequence[str | None], rules: ShardingRules, mesh: Mesh
 ) -> P:
     """Resolve one array's logical axes to a PartitionSpec."""
     assert len(shape) == len(axes), (shape, axes)
     used: set = set()
-    parts: List[AxisCandidate] = []
-    for dim, name in zip(shape, axes):
+    parts: list[AxisCandidate] = []
+    for dim, name in zip(shape, axes, strict=True):
         chosen: AxisCandidate = None
         for cand in rules.candidates(name):
             if cand is None:
@@ -175,7 +176,7 @@ def tree_shardings(shapes_tree, axes_tree, rules: ShardingRules, mesh: Mesh):
 def install(mesh: Mesh, rules: ShardingRules = BASE_RULES) -> None:
     """Install the activation-constraint hook used by model code."""
 
-    def sharder(x: jax.Array, axes: Tuple) -> jax.Array:
+    def sharder(x: jax.Array, axes: tuple) -> jax.Array:
         spec = resolve_spec(x.shape, axes, rules, mesh)
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
@@ -213,7 +214,7 @@ BATCH_AXES = {
 }
 
 
-def batch_shardings(input_specs: Dict[str, Any], cfg, rules, mesh):
+def batch_shardings(input_specs: dict[str, Any], cfg, rules, mesh):
     """Shardings for a train/prefill/decode input-spec dict."""
     from repro.models import registry
 

@@ -18,7 +18,7 @@ remainder layers (26 mod 3 = 2) run as a trailing mini-scan of rec blocks.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,7 @@ def _stack(spec: PSpec, n: int) -> PSpec:
     return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
 
 
-def _rec_block_specs(cfg) -> Dict[str, Any]:
+def _rec_block_specs(cfg) -> dict[str, Any]:
     d, dr = cfg.d_model, cfg.d_rnn or cfg.d_model
     return {
         "ln1": PSpec((d,), ("embed",), init="zeros"),
@@ -49,7 +49,7 @@ def _rec_block_specs(cfg) -> Dict[str, Any]:
     }
 
 
-def _attn_block_specs(cfg) -> Dict[str, Any]:
+def _attn_block_specs(cfg) -> dict[str, Any]:
     d = cfg.d_model
     return {
         "ln1": PSpec((d,), ("embed",), init="zeros"),
@@ -59,13 +59,13 @@ def _attn_block_specs(cfg) -> Dict[str, Any]:
     }
 
 
-def _layout(cfg) -> Tuple[int, int]:
+def _layout(cfg) -> tuple[int, int]:
     """(n_super, n_rem): superblocks of len(pattern) + remainder rec layers."""
     p = len(cfg.block_pattern)
     return cfg.n_layers // p, cfg.n_layers % p
 
 
-def specs(cfg) -> Dict[str, Any]:
+def specs(cfg) -> dict[str, Any]:
     n_super, n_rem = _layout(cfg)
     n_rec_per = cfg.block_pattern.count("rec")
     rec = jax.tree_util.tree_map(
@@ -78,7 +78,7 @@ def specs(cfg) -> Dict[str, Any]:
         _attn_block_specs(cfg),
         is_leaf=lambda x: isinstance(x, PSpec),
     )
-    sp: Dict[str, Any] = {
+    sp: dict[str, Any] = {
         "embed": PSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
         "super": {"rec": rec, "attn": attn},
         "ln_f": PSpec((cfg.d_model,), ("embed",), init="zeros"),
@@ -95,7 +95,7 @@ def specs(cfg) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 # RG-LRU mixer
 # ---------------------------------------------------------------------------
-def _causal_conv(u: jax.Array, kernel: jax.Array, state: Optional[jax.Array] = None):
+def _causal_conv(u: jax.Array, kernel: jax.Array, state: jax.Array | None = None):
     """Depthwise causal conv. u: (B,T,C); kernel: (W,C); state: (B,W-1,C)."""
     w = kernel.shape[0]
     if state is None:
@@ -110,7 +110,7 @@ def _causal_conv(u: jax.Array, kernel: jax.Array, state: Optional[jax.Array] = N
     return out, new_state
 
 
-def _rg_lru(u: jax.Array, p, h0: Optional[jax.Array] = None):
+def _rg_lru(u: jax.Array, p, h0: jax.Array | None = None):
     """u: (B,T,C) conv output.  Returns (h: (B,T,C), h_T)."""
     r = jax.nn.sigmoid(jnp.einsum("btc,ce->bte", u, p["w_a"]).astype(jnp.float32))
     i = jax.nn.sigmoid(jnp.einsum("btc,ce->bte", u, p["w_i"]).astype(jnp.float32))
@@ -188,7 +188,7 @@ def forward(cfg, params, batch, *, collect_cache: bool = False):
         x = carry
         rec_states = []
         for r in range(n_rec_per):
-            rp = jax.tree_util.tree_map(lambda a: a[r], blk["rec"])
+            rp = jax.tree_util.tree_map(lambda a, r=r: a[r], blk["rec"])
             x, st = _rec_block(rp, x, cfg)
             rec_states.append(st)
         x, (kk, vv) = _attn_block(blk["attn"], x, cfg)
@@ -305,7 +305,7 @@ def decode_step(cfg, params, tokens, cache, pos):
         blk, conv, hs, kc, vc, kp = xs
         new_conv, new_h = [], []
         for r in range(n_rec_per):
-            rp = jax.tree_util.tree_map(lambda a: a[r], blk["rec"])
+            rp = jax.tree_util.tree_map(lambda a, r=r: a[r], blk["rec"])
             x, cs, hl = rec_step(rp, x, conv[r], hs[r])
             new_conv.append(cs)
             new_h.append(hl)

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -18,15 +19,15 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 # Activation sharding hook (installed by launch/sharding.py)
 # ---------------------------------------------------------------------------
-_ACTIVATION_SHARDER: Optional[Callable[[jax.Array, Tuple], jax.Array]] = None
+_ACTIVATION_SHARDER: Callable[[jax.Array, tuple], jax.Array] | None = None
 
 
-def set_activation_sharder(fn: Optional[Callable]) -> None:
+def set_activation_sharder(fn: Callable | None) -> None:
     global _ACTIVATION_SHARDER
     _ACTIVATION_SHARDER = fn
 
 
-def shard(x: jax.Array, axes: Tuple) -> jax.Array:
+def shard(x: jax.Array, axes: tuple) -> jax.Array:
     """Annotate an activation with logical axes (no-op without a mesh)."""
     if _ACTIVATION_SHARDER is None:
         return x
@@ -38,8 +39,8 @@ def shard(x: jax.Array, axes: Tuple) -> jax.Array:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class PSpec:
-    shape: Tuple[int, ...]
-    axes: Tuple[Optional[str], ...]   # logical name per dim (None = replicated)
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical name per dim (None = replicated)
     init: str = "normal"              # normal | zeros | ones
     scale: float = 1.0                # stddev multiplier (fan-in applied below)
 
@@ -63,7 +64,7 @@ def materialize(spec_tree, key: jax.Array, dtype) -> Any:
         spec_tree, is_leaf=lambda x: isinstance(x, PSpec)
     )
     keys = jax.random.split(key, len(leaves))
-    out = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    out = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys, strict=True)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -147,10 +148,10 @@ def flash_attention(
     causal: bool = True,
     window: jax.Array | int = 0,      # 0 = unbounded; may be traced (per-layer)
     q_offset: jax.Array | int = 0,    # absolute position of q[0]
-    k_positions: Optional[jax.Array] = None,   # (Sk,) absolute key positions
+    k_positions: jax.Array | None = None,   # (Sk,) absolute key positions
     chunk_q: int = 512,
     chunk_k: int = 512,
-    softmax_scale: Optional[float] = None,
+    softmax_scale: float | None = None,
 ) -> jax.Array:
     """Online-softmax attention that never materializes (Sq, Sk).
 
@@ -240,7 +241,7 @@ def decode_attention(
     pos: jax.Array,             # int32[] current absolute position
     *,
     window: jax.Array | int = 0,
-    softmax_scale: Optional[float] = None,
+    softmax_scale: float | None = None,
 ) -> jax.Array:
     """Single-token attention over a (possibly ring) KV cache."""
     d = q.shape[-1]
@@ -263,7 +264,7 @@ def decode_attention(
 # ---------------------------------------------------------------------------
 # Attention block (GQA + optional qk_norm + rope)
 # ---------------------------------------------------------------------------
-def attention_specs(cfg, d_model: Optional[int] = None) -> Dict[str, PSpec]:
+def attention_specs(cfg, d_model: int | None = None) -> dict[str, PSpec]:
     d = d_model or cfg.d_model
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     sp = {
@@ -279,16 +280,16 @@ def attention_specs(cfg, d_model: Optional[int] = None) -> Dict[str, PSpec]:
 
 
 def attention_fwd(
-    p: Dict[str, jax.Array],
+    p: dict[str, jax.Array],
     x: jax.Array,              # (B, S, D)
     cfg,
     *,
     causal: bool = True,
     window: jax.Array | int = 0,
-    positions: Optional[jax.Array] = None,   # (S,) absolute positions
+    positions: jax.Array | None = None,   # (S,) absolute positions
     use_rope: bool = True,
-    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
-) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    kv_override: tuple[jax.Array, jax.Array] | None = None,  # cross-attn
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -325,7 +326,7 @@ def attention_fwd(
 # ---------------------------------------------------------------------------
 # MLP (SwiGLU) and MoE
 # ---------------------------------------------------------------------------
-def mlp_specs(cfg, d_ff: Optional[int] = None) -> Dict[str, PSpec]:
+def mlp_specs(cfg, d_ff: int | None = None) -> dict[str, PSpec]:
     d, f = cfg.d_model, d_ff or cfg.d_ff
     return {
         "wi": PSpec((d, f), ("embed", "mlp")),
@@ -334,7 +335,7 @@ def mlp_specs(cfg, d_ff: Optional[int] = None) -> Dict[str, PSpec]:
     }
 
 
-def mlp_fwd(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+def mlp_fwd(p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
     h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"])) * jnp.einsum(
         "bsd,df->bsf", x, p["wi"]
     )
@@ -342,7 +343,7 @@ def mlp_fwd(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
     return jnp.einsum("bsf,fd->bsd", h, p["wo"])
 
 
-def moe_specs(cfg) -> Dict[str, PSpec]:
+def moe_specs(cfg) -> dict[str, PSpec]:
     d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
     sp = {
         "router": PSpec((d, e), ("embed", None)),
@@ -355,7 +356,7 @@ def moe_specs(cfg) -> Dict[str, PSpec]:
     return sp
 
 
-def moe_fwd(p: Dict[str, jax.Array], x: jax.Array, cfg) -> jax.Array:
+def moe_fwd(p: dict[str, jax.Array], x: jax.Array, cfg) -> jax.Array:
     """Capacity-based sort-free MoE dispatch (one-hot position ranking).
 
     Tokens above expert capacity are dropped (standard Switch semantics);

@@ -14,7 +14,7 @@ include precomputed frame/patch embeddings.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +66,7 @@ def count_params(cfg: ModelConfig) -> int:
 # ---------------------------------------------------------------------------
 # Input specs per (arch x shape) cell
 # ---------------------------------------------------------------------------
-def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
     """ShapeDtypeStructs for every input of the cell's step function.
 
     train:   {tokens, labels [, patches|frames]}
@@ -77,7 +77,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     dt = jnp.dtype(cfg.dtype)
     tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
 
-    def frontend() -> Dict[str, Any]:
+    def frontend() -> dict[str, Any]:
         if cfg.family == "vlm":
             return {
                 "patches": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dt)
@@ -106,10 +106,10 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     raise ValueError(shape.kind)
 
 
-def make_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array) -> Dict[str, Any]:
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array) -> dict[str, Any]:
     """Concrete (small-scale) inputs matching ``input_specs`` — for smoke tests."""
     specs = input_specs(cfg, shape)
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
     for name, sp in specs.items():
         if name == "cache":
             out[name] = family_module(cfg).init_cache(

@@ -13,7 +13,7 @@ O(1) state); decode is a single recurrence step — which is what makes the
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ def _stack(spec: PSpec, n: int) -> PSpec:
     return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
 
 
-def block_specs(cfg) -> Dict[str, Any]:
+def block_specs(cfg) -> dict[str, Any]:
     d = cfg.d_model
     h = cfg.n_heads
     hd = cfg.rwkv_head_dim
@@ -65,7 +65,7 @@ def block_specs(cfg) -> Dict[str, Any]:
     }
 
 
-def specs(cfg) -> Dict[str, Any]:
+def specs(cfg) -> dict[str, Any]:
     blocks = jax.tree_util.tree_map(
         lambda s: _stack(s, cfg.n_layers),
         block_specs(cfg),

@@ -12,7 +12,7 @@ dry-run compiles.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +28,9 @@ def _stack(spec: PSpec, n: int) -> PSpec:
     return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
 
 
-def block_specs(cfg) -> Dict[str, Any]:
+def block_specs(cfg) -> dict[str, Any]:
     d = cfg.d_model
-    sp: Dict[str, Any] = {
+    sp: dict[str, Any] = {
         "ln1": PSpec((d,), ("embed",), init="zeros"),
         "ln2": PSpec((d,), ("embed",), init="zeros"),
         "attn": L.attention_specs(cfg),
@@ -42,7 +42,7 @@ def block_specs(cfg) -> Dict[str, Any]:
     return sp
 
 
-def specs(cfg) -> Dict[str, Any]:
+def specs(cfg) -> dict[str, Any]:
     d = cfg.d_model
     blocks = jax.tree_util.tree_map(
         lambda s: _stack(s, cfg.n_layers),
@@ -79,7 +79,7 @@ def _ffn(blk, x, cfg):
     return L.mlp_fwd(blk["mlp"], x)
 
 
-def _embed_inputs(cfg, params, batch) -> Tuple[jax.Array, int]:
+def _embed_inputs(cfg, params, batch) -> tuple[jax.Array, int]:
     """Token (+ modality-prefix) embedding.  Returns (h, n_prefix)."""
     tokens = batch["tokens"]
     h = params["embed"][tokens].astype(params["embed"].dtype)
@@ -93,10 +93,10 @@ def _embed_inputs(cfg, params, batch) -> Tuple[jax.Array, int]:
 def forward(
     cfg,
     params,
-    batch: Dict[str, jax.Array],
+    batch: dict[str, jax.Array],
     *,
     collect_cache: bool = False,
-) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
     """Full-sequence forward.  batch = {tokens: (B,S) [, patches: (B,P,D)]}.
 
     Returns (logits (B, S_total, V), cache or None).
@@ -143,7 +143,7 @@ def _grouped(cfg) -> bool:
     return bool(cfg.ring_local_cache and cfg.local_window and cfg.global_every)
 
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict[str, Any]:
     if _grouped(cfg):
         return grouped_init_cache(cfg, batch, max_len, dtype)
     l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
@@ -218,9 +218,9 @@ def decode_step(
     cfg,
     params,
     tokens: jax.Array,          # (B, 1)
-    cache: Dict[str, jax.Array],
+    cache: dict[str, jax.Array],
     pos: jax.Array,             # int32[] absolute position of this token
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+) -> tuple[jax.Array, dict[str, jax.Array]]:
     """One-token decode with ring KV cache write at ``pos % C``."""
     if cfg.ring_local_cache and cfg.local_window and cfg.global_every:
         return _decode_step_grouped(cfg, params, tokens, cache, pos)
@@ -242,7 +242,7 @@ def decode_step(
     return logits, {"k": kc, "v": vc, "kpos": kp}
 
 
-def prefill(cfg, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+def prefill(cfg, params, batch) -> tuple[jax.Array, dict[str, jax.Array]]:
     logits, cache = forward(cfg, params, batch, collect_cache=True)
     return logits, cache
 
@@ -257,7 +257,7 @@ def prefill(cfg, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
 # cache 62*S -> 52*W + 10*S  (~5.3x) and, since decode attention reads the
 # whole cache every token, shrinks decode HBM traffic by the same factor.
 # ---------------------------------------------------------------------------
-def _grouped_layout(cfg) -> Tuple[int, int, int]:
+def _grouped_layout(cfg) -> tuple[int, int, int]:
     ge = cfg.global_every
     return cfg.n_layers // ge, ge, cfg.n_layers % ge
 

@@ -7,7 +7,7 @@ over the encoder output, GELU MLPs, tied embeddings.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,7 @@ def _stack(spec: PSpec, n: int) -> PSpec:
     return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
 
 
-def _gelu_mlp_specs(cfg) -> Dict[str, PSpec]:
+def _gelu_mlp_specs(cfg) -> dict[str, PSpec]:
     d, f = cfg.d_model, cfg.d_ff
     return {
         "wi": PSpec((d, f), ("embed", "mlp")),
@@ -34,7 +34,7 @@ def _gelu_mlp(p, x):
     return jnp.einsum("bsf,fd->bsd", h, p["wo"])
 
 
-def _enc_block_specs(cfg) -> Dict[str, Any]:
+def _enc_block_specs(cfg) -> dict[str, Any]:
     d = cfg.d_model
     return {
         "ln1": PSpec((d,), ("embed",), init="zeros"),
@@ -44,7 +44,7 @@ def _enc_block_specs(cfg) -> Dict[str, Any]:
     }
 
 
-def _dec_block_specs(cfg) -> Dict[str, Any]:
+def _dec_block_specs(cfg) -> dict[str, Any]:
     d = cfg.d_model
     return {
         "ln1": PSpec((d,), ("embed",), init="zeros"),
@@ -56,7 +56,7 @@ def _dec_block_specs(cfg) -> Dict[str, Any]:
     }
 
 
-def specs(cfg) -> Dict[str, Any]:
+def specs(cfg) -> dict[str, Any]:
     enc = jax.tree_util.tree_map(
         lambda s: _stack(s, cfg.n_enc_layers),
         _enc_block_specs(cfg),

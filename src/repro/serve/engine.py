@@ -17,7 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import NamedTuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +30,7 @@ from repro.models import registry
 def make_prefill_step(cfg) -> Callable:
     mod = registry.family_module(cfg)
 
-    def prefill_step(params, batch: Dict[str, jax.Array]):
+    def prefill_step(params, batch: dict[str, jax.Array]):
         logits, cache = mod.prefill(cfg, params, batch)
         return logits[:, -1], cache
 
@@ -51,7 +52,7 @@ class Request:
     rid: int
     prompt: np.ndarray         # (S,) int32
     max_new: int = 16
-    generated: Optional[List[int]] = None
+    generated: list[int] | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +94,7 @@ def session_group(session_id, n_groups: int) -> int:
     return session_hash(session_id) % n_groups
 
 
-def session_group_live(session_id, live_groups: List[int], capacity: int) -> int:
+def session_group_live(session_id, live_groups: list[int], capacity: int) -> int:
     """Epoch-aware routing: primary slot with deterministic fallback.
 
     The session's *primary* slot is the capacity routing
@@ -165,11 +166,11 @@ class Session:
         svc.submits_per_group[gid] += 1
         return Ticket(gid, seq)
 
-    def delivered(self) -> List[Tuple[int, bytes]]:
+    def delivered(self) -> list[tuple[int, bytes]]:
         """The stitched ``(inst, payload)`` log this session observes."""
         return self.service._delivered(self.id)
 
-    def read(self) -> List[bytes]:
+    def read(self) -> list[bytes]:
         """Delivered payloads only, in decided order — the common
         application-level read."""
         return [p for _inst, p in self.service._delivered(self.id)]
@@ -208,13 +209,13 @@ class ConsensusService:
         # routing epochs: per-epoch (live gid list, per-slot generation)
         # snapshots; archived logs keyed by (gid, generation)
         self._gen = [0] * self.n_groups
-        self._epochs: List[Tuple[List[int], List[int]]] = [
+        self._epochs: list[tuple[list[int], list[int]]] = [
             (self._live_now(), list(self._gen))
         ]
-        self._archived: Dict[Tuple[int, int], List[Tuple[int, bytes]]] = {}
+        self._archived: dict[tuple[int, int], list[tuple[int, bytes]]] = {}
 
     # -- membership (drives the context, keeps the epoch history) ------------
-    def _live_now(self) -> List[int]:
+    def _live_now(self) -> list[int]:
         live = getattr(self.ctx.hw, "live_host", None)
         if live is None:
             return list(range(self.n_groups))
@@ -261,7 +262,7 @@ class ConsensusService:
         return session_group_live(session_id, live, self.n_groups)
 
     # -- group -> shard placement (the sharded dataplane, DESIGN.md §6) ------
-    def group_placement(self) -> List[int]:
+    def group_placement(self) -> list[int]:
         """group id -> owning mesh shard.  Routing composes as session ->
         group (FNV-1a, placement-independent) -> shard (dataplane
         placement); an unsharded dataplane is the degenerate one-shard
@@ -320,7 +321,7 @@ class ConsensusService:
                 return
             self.pump()
 
-    def plan_report(self) -> Dict:
+    def plan_report(self) -> dict:
         """The dispatch planner's introspection report (burst-shape
         vocabulary, cohort dispatch counts, full-fold rounds, realignment
         sweeps) — the serving-tier view of DESIGN.md §8."""
@@ -329,7 +330,7 @@ class ConsensusService:
             return {}
         return planner.report()
 
-    def delivered(self, session_id) -> List[Tuple[int, bytes]]:
+    def delivered(self, session_id) -> list[tuple[int, bytes]]:
         """Deprecated: use ``service.session(session_id).delivered()``."""
         warnings.warn(
             "ConsensusService.delivered(session_id) is deprecated; "
@@ -339,14 +340,14 @@ class ConsensusService:
         )
         return self._delivered(session_id)
 
-    def session_chain(self, session_id) -> List[Tuple[int, int]]:
+    def session_chain(self, session_id) -> list[tuple[int, int]]:
         """The distinct ``(group, generation)`` segments a session's history
         spans, in epoch order — the stitching skeleton ``Session.delivered``
         reads through, exposed so state-machine tiers (``serve.kv``) can
         keep one incremental replica per segment instead of re-reading
         concatenated logs."""
         seen: set = set()
-        chain: List[Tuple[int, int]] = []
+        chain: list[tuple[int, int]] = []
         for live, gens in self._epochs:
             if not live:
                 continue
@@ -362,7 +363,7 @@ class ConsensusService:
         ``gid`` — the second half of a segment key."""
         return self._gen[gid]
 
-    def log_segment(self, gid: int, gen: int) -> List[Tuple[int, bytes]]:
+    def log_segment(self, gid: int, gen: int) -> list[tuple[int, bytes]]:
         """One ``(group, generation)`` segment of the stitched history: the
         archived log for retired generations, the live stitched log
         (snapshot prefix + group log, ``PaxosContext.full_group_log``) for
@@ -375,12 +376,12 @@ class ConsensusService:
             return self.ctx.full_group_log(gid)
         return []
 
-    def archived_segments(self) -> Dict[Tuple[int, int], List[Tuple[int, bytes]]]:
+    def archived_segments(self) -> dict[tuple[int, int], list[tuple[int, bytes]]]:
         """Read-only view of the retirement archive: ``(gid, generation) ->
         drained log``.  Apply loops use it to finalize retired segments."""
         return dict(self._archived)
 
-    def _delivered(self, session_id) -> List[Tuple[int, bytes]]:
+    def _delivered(self, session_id) -> list[tuple[int, bytes]]:
         """The (inst, payload) log the session observes, in decided order.
 
         Uniform group-log read — no G == 1 special case (a service can pass
@@ -394,12 +395,12 @@ class ConsensusService:
         (``PaxosContext.full_group_log``) — so compaction is invisible to
         sessions in steady state, not just at retirement.
         """
-        out: List[Tuple[int, bytes]] = []
+        out: list[tuple[int, bytes]] = []
         for key in self.session_chain(session_id):
             out.extend(self.log_segment(*key))
         return out
 
-    def group_loads(self) -> List[int]:
+    def group_loads(self) -> list[int]:
         """Values submitted per group (load-balance introspection)."""
         return list(self.submits_per_group)
 
@@ -416,7 +417,7 @@ class ServeLoop:
         self._decode = jax.jit(make_serve_step(cfg))
         self.steps = 0
 
-    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+    def run(self, requests: list[Request]) -> dict[int, list[int]]:
         """Teacher-forced prefill via decode steps, then greedy generation.
 
         Mixed prompt lengths never see padding: every row feeds a *real*
@@ -429,7 +430,7 @@ class ServeLoop:
         ever hold the row's own tokens); rows that finish early idle on
         their last token, which touches no other row.
         """
-        out: Dict[int, List[int]] = {}
+        out: dict[int, list[int]] = {}
         for chunk_start in range(0, len(requests), self.batch):
             chunk = requests[chunk_start : chunk_start + self.batch]
             b = len(chunk)
@@ -439,12 +440,12 @@ class ServeLoop:
             cache = self.mod.init_cache(
                 self.cfg, self.batch, self.max_len, jnp.dtype(self.cfg.dtype)
             )
-            gen: List[List[int]] = [[] for _ in range(b)]
+            gen: list[list[int]] = [[] for _ in range(b)]
             cur = np.zeros((self.batch, 1), np.int32)
             for i, r in enumerate(chunk):
                 if len(r.prompt):
                     cur[i, 0] = r.prompt[0]
-            total = max(ln + r.max_new for ln, r in zip(lens, chunk))
+            total = max(ln + r.max_new for ln, r in zip(lens, chunk, strict=True))
             for t in range(total - 1):
                 last, cache = self._decode(
                     self.params, jnp.asarray(cur), cache, jnp.int32(t)

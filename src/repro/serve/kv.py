@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import struct
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any
 
 from .engine import ConsensusService, Ticket, session_hash
 
@@ -70,7 +70,7 @@ class KvOp:
     op: int
     key: bytes
     value: bytes = b""
-    expect: Optional[bytes] = None   # cas only; None = "expect absent"
+    expect: bytes | None = None   # cas only; None = "expect absent"
     sid_tag: int = 0
     counter: int = 0
 
@@ -142,7 +142,7 @@ def decode_op(buf: bytes) -> KvOp:
     if flags & _FLAG_EXPECT:
         if opcode != OP_CAS:
             raise KvCodecError("expect flag on a non-cas frame")
-        expect: Optional[bytes] = expect_bytes
+        expect: bytes | None = expect_bytes
     else:
         if elen:
             raise KvCodecError("expect bytes without the expect flag")
@@ -165,12 +165,12 @@ class GroupReplica:
     """
 
     def __init__(self) -> None:
-        self.state: Dict[bytes, Tuple[Optional[bytes], int]] = {}
+        self.state: dict[bytes, tuple[bytes | None, int]] = {}
         self.applied_len = 0
-        self.applied_counter: Dict[int, int] = {}
+        self.applied_counter: dict[int, int] = {}
         self.final = False           # archived segment, fully applied
 
-    def apply_log(self, log: List[Tuple[int, bytes]]) -> int:
+    def apply_log(self, log: list[tuple[int, bytes]]) -> int:
         """Apply the suffix past the watermark; returns ops consumed.
 
         Safe against any later view of the same segment: ``full_group_log``
@@ -205,7 +205,7 @@ class GroupReplica:
         else:                         # put, or a cas that matched
             self.state[op.key] = (op.value, version)
 
-    def signature(self) -> Tuple[Dict[bytes, Tuple[Optional[bytes], int]], int]:
+    def signature(self) -> tuple[dict[bytes, tuple[bytes | None, int]], int]:
         """Canonical (state, applied_len) for bit-equality across twins."""
         return (dict(self.state), self.applied_len)
 
@@ -223,13 +223,15 @@ class ReplicatedKV:
     class dispatches to the wire path — only session mutations (and
     read-index fallbacks) do, through the service."""
 
-    def __init__(self, service: ConsensusService, max_read_rounds: int = 64):
+    def __init__(
+        self, service: ConsensusService, max_read_rounds: int = 64
+    ) -> None:
         self.service = service
         self.max_read_rounds = max_read_rounds
-        self._replicas: Dict[Tuple[int, int], GroupReplica] = {}
-        self._sessions: Dict[Any, "KVSession"] = {}
-        self.stats = {"leased_gets": 0, "read_index_gets": 0,
-                      "ops_submitted": 0}
+        self._replicas: dict[tuple[int, int], GroupReplica] = {}
+        self._sessions: dict[Any, "KVSession"] = {}
+        self.stats: dict[str, int] = {"leased_gets": 0, "read_index_gets": 0,
+                                      "ops_submitted": 0}
         # per-epoch caches: the live set, current generations, and the
         # retirement archive only change at membership events, which all
         # flow through the service and bump its routing epoch — refresh()
@@ -237,9 +239,9 @@ class ReplicatedKV:
         # O(history)
         self._snaps = getattr(service.ctx, "snapshots", None)
         self._epoch_seen = -1
-        self._live_reps: List[Tuple[int, GroupReplica]] = []
+        self._live_reps: list[tuple[int, GroupReplica]] = []
 
-    def session(self, session_id) -> "KVSession":
+    def session(self, session_id: Any) -> "KVSession":
         """The stateful KV client for one session id (cached: unlike the
         stateless routing handles, a KV session owns lease state)."""
         s = self._sessions.get(session_id)
@@ -247,7 +249,7 @@ class ReplicatedKV:
             s = self._sessions[session_id] = KVSession(self, session_id)
         return s
 
-    def replica(self, gid: int, gen: Optional[int] = None) -> GroupReplica:
+    def replica(self, gid: int, gen: int | None = None) -> GroupReplica:
         """The segment replica for ``(gid, gen)`` (current generation when
         ``gen`` is omitted), created empty on first touch."""
         if gen is None:
@@ -293,7 +295,7 @@ class ReplicatedKV:
         the monotone per-group read watermark leased gets answer behind."""
         return self.replica(gid).applied_len
 
-    def lookup(self, session_id, key: bytes) -> Optional[bytes]:
+    def lookup(self, session_id: Any, key: bytes) -> bytes | None:
         """Stitched lookup over the session's segment chain, newest segment
         first; a tombstone in a newer segment masks older values."""
         for seg in reversed(self.service.session_chain(session_id)):
@@ -324,18 +326,18 @@ class KVSession:
     it applies the session's writes have too, and the lease re-validates
     at the current epoch."""
 
-    def __init__(self, kv: ReplicatedKV, session_id):
+    def __init__(self, kv: ReplicatedKV, session_id: Any) -> None:
         self.kv = kv
         self.id = session_id
         self.tag = session_hash(session_id)
         self._counter = 0
-        self._pending: Dict[int, int] = {}   # counter -> group submitted to
+        self._pending: dict[int, int] = {}   # counter -> group submitted to
         self._epoch = kv.service.routing_epoch
         self._seg = self._current_seg()
         # segment chain cached per routing epoch: the chain only grows at
         # membership events, and recomputing it hashes the session id per
         # epoch — too hot for a per-get path meant to be O(1)
-        self._chain: Optional[List[Tuple[int, int]]] = None
+        self._chain: list[tuple[int, int]] | None = None
         self._chain_epoch = -1
 
     # -- write path (consensus) ---------------------------------------------
@@ -345,7 +347,7 @@ class KVSession:
     def delete(self, key: bytes) -> Ticket:
         return self._submit(KvOp(OP_DELETE, key, b"", None, self.tag))
 
-    def cas(self, key: bytes, expect: Optional[bytes], value: bytes) -> Ticket:
+    def cas(self, key: bytes, expect: bytes | None, value: bytes) -> Ticket:
         """Compare-and-set: applies iff the segment's current value equals
         ``expect`` (``None`` = create iff absent).  A failed cas is a
         committed no-op — it still advances the session's RYW token."""
@@ -360,18 +362,20 @@ class KVSession:
         return ticket
 
     # -- consensus-free read path -------------------------------------------
-    def _current_seg(self) -> Tuple[int, int]:
+    def _current_seg(self) -> tuple[int, int]:
         svc = self.kv.service
         gid = svc.group_of(self.id)
         return (gid, svc.group_generation(gid))
 
-    def _segments(self) -> List[Tuple[int, int]]:
+    def _segments(self) -> list[tuple[int, int]]:
         svc = self.kv.service
         ep = svc.routing_epoch
-        if self._chain_epoch != ep:
-            self._chain = svc.session_chain(self.id)
+        chain = self._chain
+        if chain is None or self._chain_epoch != ep:
+            chain = svc.session_chain(self.id)
+            self._chain = chain
             self._chain_epoch = ep
-        return self._chain
+        return chain
 
     def _applied_token(self) -> int:
         """Highest op counter of this session applied anywhere on its
@@ -406,7 +410,7 @@ class KVSession:
     def lease_valid(self) -> bool:
         return not self._pending and self._epoch == self.kv.service.routing_epoch
 
-    def get(self, key: bytes) -> Optional[bytes]:
+    def get(self, key: bytes) -> bytes | None:
         """Read one key.
 
         Leased: host-side only — apply already-delivered entries, answer

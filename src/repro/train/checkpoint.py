@@ -24,7 +24,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np
@@ -73,7 +73,7 @@ class CheckpointManager:
             f.write("ok")
 
     # -- restore ------------------------------------------------------------
-    def latest_committed(self) -> Optional[str]:
+    def latest_committed(self) -> str | None:
         if not os.path.isdir(self.dir):
             return None
         steps = sorted(
@@ -85,8 +85,8 @@ class CheckpointManager:
         return os.path.join(self.dir, steps[-1]) if steps else None
 
     def restore(
-        self, like: Any, path: Optional[str] = None, shardings: Any = None
-    ) -> Tuple[Any, int]:
+        self, like: Any, path: str | None = None, shardings: Any = None
+    ) -> tuple[Any, int]:
         """Restore into the structure of ``like``; optionally reshard.
 
         ``shardings``: matching pytree of Shardings for the *current* mesh —

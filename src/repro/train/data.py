@@ -11,7 +11,7 @@ are yielded host-local and assembled into the global array by
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -35,7 +35,7 @@ class SyntheticStream:
     def __init__(self, cfg: DataConfig):
         self.cfg = cfg
 
-    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
         cfg = self.cfg
         rng = np.random.default_rng(np.uint64(cfg.seed * 1_000_003 + step))
         if cfg.mode == "arith":
@@ -60,7 +60,7 @@ class SyntheticStream:
             )
         return out
 
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         step = 0
         while True:
             yield self.batch_at(step)

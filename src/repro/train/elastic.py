@@ -15,15 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
 class MembershipView:
     epoch: int
-    hosts: Tuple[str, ...]
-    mesh_shape: Tuple[int, ...]
-    mesh_axes: Tuple[str, ...]
+    hosts: tuple[str, ...]
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
 
     def encode(self) -> bytes:
         return json.dumps(
@@ -41,7 +40,7 @@ class MembershipView:
         return cls(d["epoch"], tuple(d["hosts"]), tuple(d["shape"]), tuple(d["axes"]))
 
 
-def replan_mesh(n_devices: int, *, model_parallel: int = 16) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+def replan_mesh(n_devices: int, *, model_parallel: int = 16) -> tuple[tuple[int, ...], tuple[str, ...]]:
     """Largest (data, model) mesh from the surviving device count.
 
     Keeps the model axis fixed (TP degree is architecture-bound) and shrinks
@@ -59,7 +58,7 @@ class ViewManager:
     def __init__(self, paxos_ctx, initial: MembershipView):
         self.ctx = paxos_ctx
         self.view = initial
-        self._decided: List[MembershipView] = [initial]
+        self._decided: list[MembershipView] = [initial]
         if paxos_ctx is not None:
             orig = paxos_ctx.deliver_cb
 
@@ -76,7 +75,7 @@ class ViewManager:
             self.view = view
             self._decided.append(view)
 
-    def propose_view(self, hosts: List[str], model_parallel: int = 16) -> MembershipView:
+    def propose_view(self, hosts: list[str], model_parallel: int = 16) -> MembershipView:
         shape, axes = replan_mesh(len(hosts), model_parallel=model_parallel)
         view = MembershipView(
             epoch=self.view.epoch + 1,

@@ -7,7 +7,7 @@ Moments are kept in float32 regardless of the parameter dtype.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,7 @@ def global_norm(tree) -> jax.Array:
 
 def update(
     grads, state: OptState, params, cfg: OptConfig
-) -> Tuple[Any, OptState, jax.Array]:
+) -> tuple[Any, OptState, jax.Array]:
     """Returns (new_params, new_state, grad_norm)."""
     count = state.count + 1
     gnorm = global_norm(grads)

@@ -12,7 +12,8 @@ tests) or the PaxosContext (host tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +29,7 @@ class TrainState(NamedTuple):
     step: jax.Array
 
 
-def init_state(cfg, key, opt_cfg: Optional[opt.OptConfig] = None) -> TrainState:
+def init_state(cfg, key, opt_cfg: opt.OptConfig | None = None) -> TrainState:
     params = registry.init_params(cfg, key)
     return TrainState(params=params, opt=opt.init(params), step=jnp.zeros((), jnp.int32))
 
@@ -104,17 +105,17 @@ def make_loss_fn(cfg) -> Callable:
 
 def make_train_step(
     cfg,
-    opt_cfg: Optional[opt.OptConfig] = None,
+    opt_cfg: opt.OptConfig | None = None,
     *,
     grad_accum: int = 1,
     with_digest: bool = True,
-) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict]]:
+) -> Callable[[TrainState, dict[str, jax.Array]], tuple[TrainState, dict]]:
     """Build the jit-able train step (microbatched when grad_accum > 1)."""
     ocfg = opt_cfg or opt.OptConfig()
     loss_fn = make_loss_fn(cfg)
     vg = jax.value_and_grad(loss_fn)
 
-    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+    def train_step(state: TrainState, batch: dict[str, jax.Array]):
         if grad_accum == 1:
             loss, grads = vg(state.params, batch)
         else:
@@ -162,11 +163,11 @@ def run_loop(
     data_iter,
     *,
     loop: LoopConfig,
-    train_step: Optional[Callable] = None,
+    train_step: Callable | None = None,
     paxos_ctx=None,
     checkpoint_mgr=None,
     rng_seed: int = 0,
-) -> Tuple[TrainState, Dict[str, list]]:
+) -> tuple[TrainState, dict[str, list]]:
     """Drive training with quorum-committed steps.
 
     Every step, each replica group's digest is submitted as a consensus value;
@@ -178,7 +179,7 @@ def run_loop(
     import numpy as np
 
     step_fn = train_step or jax.jit(make_train_step(cfg))
-    history: Dict[str, list] = {"loss": [], "committed": [], "straggled": []}
+    history: dict[str, list] = {"loss": [], "committed": [], "straggled": []}
     rng = np.random.default_rng(rng_seed)
 
     for i in range(loop.steps):
@@ -191,7 +192,7 @@ def run_loop(
         # math means healthy groups agree bit-exactly.
         votes = []
         straggled = 0
-        for g in range(loop.replica_groups):
+        for _g in range(loop.replica_groups):
             if rng.random() < loop.straggler_prob:
                 straggled += 1
                 continue  # group missed the deadline -> abstains

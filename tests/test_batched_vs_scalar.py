@@ -70,7 +70,7 @@ def test_sequential_engine_matches_scalar_oracle(msgs):
             assert int(outs.vrnd[j]) == out.vrnd
 
     # final state agreement
-    for slot, (rnd, vrnd, value) in oracle.slots.items():
+    for slot, (rnd, vrnd, _value) in oracle.slots.items():
         assert int(astate.rnd[slot]) == rnd
         assert int(astate.vrnd[slot]) == vrnd
 
@@ -104,7 +104,7 @@ def test_vectorized_matches_sequential_on_distinct_slots(n_msgs, base, rnd, seed
     a2, v2 = batched.acceptor_sequential(astate0, msgs, aid=1)
     for x, y in zip(
         (a1.rnd, a1.vrnd, a1.value, v1.msgtype, v1.rnd, v1.vrnd, v1.value),
-        (a2.rnd, a2.vrnd, a2.value, v2.msgtype, v2.rnd, v2.vrnd, v2.value),
+        (a2.rnd, a2.vrnd, a2.value, v2.msgtype, v2.rnd, v2.vrnd, v2.value), strict=True,
     ):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 

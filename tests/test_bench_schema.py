@@ -15,7 +15,12 @@ import sys
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, REPO_ROOT)
 
-from benchmarks.check_bench_schema import validate  # noqa: E402
+from benchmarks.check_bench_schema import (  # noqa: E402
+    FLAG_HEADLINES,
+    REQUIRED_HEADLINES,
+    check_ci_gate_flags,
+    validate,
+)
 
 
 def _load():
@@ -49,3 +54,31 @@ def test_validator_catches_malformed_artifacts():
     assert any("partial" in e for e in validate(bad))
     # empty rows
     assert validate({"meta": {"backend": "cpu"}, "rows": []})
+
+
+def _ci_text() -> str:
+    with open(
+        os.path.join(REPO_ROOT, ".github", "workflows", "ci.yml")
+    ) as f:
+        return f.read()
+
+
+def test_live_ci_gate_flags_match_headlines():
+    assert check_ci_gate_flags(_ci_text()) == []
+
+
+def test_every_headline_has_a_gate_flag_mapping():
+    assert set(FLAG_HEADLINES.values()) == set(REQUIRED_HEADLINES)
+
+
+def test_gate_flag_cross_check_catches_drift():
+    text = _ci_text()
+    # a flag the catalogue doesn't know (new metric without a headline)
+    errs = check_ci_gate_flags(
+        text.replace("--min-trickle-ratio", "--min-bft-ratio")
+    )
+    assert any("--min-bft-ratio" in e for e in errs)
+    # dropping a flag leaves its headline ungated
+    assert any("trickle_persistent_ratio" in e for e in errs)
+    # a workflow that never runs the gate at all
+    assert check_ci_gate_flags("jobs: {}")

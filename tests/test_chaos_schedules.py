@@ -255,12 +255,12 @@ def test_membership_lifecycle_matches_oracles(use_kernels, sharded):
     for gid in range(g):
         assert mg.group_log[gid] == twins[gid].delivered_log, gid
         mine = jax.tree_util.tree_map(
-            lambda x: np.asarray(x)[gid], (mg.hw.stack, mg.hw.lstate)
+            lambda x, gid=gid: np.asarray(x)[gid], (mg.hw.stack, mg.hw.lstate)
         )
         ref = (twins[gid].hw.stack, twins[gid].hw.lstate)
         for a, b in zip(
             jax.tree_util.tree_leaves(mine), jax.tree_util.tree_leaves(ref)
-        ):
+        , strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -335,12 +335,12 @@ def run_skewed(
         import jax
 
         mine = jax.tree_util.tree_map(
-            lambda x: np.asarray(x)[gid], (mg.hw.stack, mg.hw.lstate)
+            lambda x, gid=gid: np.asarray(x)[gid], (mg.hw.stack, mg.hw.lstate)
         )
         ref = (singles[gid].hw.stack, singles[gid].hw.lstate)
         for a, b in zip(
             jax.tree_util.tree_leaves(mine), jax.tree_util.tree_leaves(ref)
-        ):
+        , strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert not mg._pending
 

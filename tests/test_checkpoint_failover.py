@@ -38,7 +38,7 @@ def test_checkpoint_roundtrip_committed(tmp_path):
     assert step == 3
     for a, b in zip(
         jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)
-    ):
+    , strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -78,7 +78,7 @@ def test_restart_resumes_training(tmp_path):
     s_a, _ = step(state, {k: jnp.asarray(v) for k, v in stream.batch_at(at).items()})
     s_b, _ = step(state2, {k: jnp.asarray(v) for k, v in stream.batch_at(at).items()})
     for a, b in zip(jax.tree_util.tree_leaves(s_a.params),
-                    jax.tree_util.tree_leaves(s_b.params)):
+                    jax.tree_util.tree_leaves(s_b.params), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -239,7 +239,7 @@ def test_elastic_reshard_restore(tmp_path):
     restored, step = mgr.restore(state, shardings=shardings)
     assert step == 1
     for a, b in zip(jax.tree_util.tree_leaves(state),
-                    jax.tree_util.tree_leaves(restored)):
+                    jax.tree_util.tree_leaves(restored), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

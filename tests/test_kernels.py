@@ -17,7 +17,7 @@ RNG = np.random.default_rng(0)
 
 
 def _assert_tree_equal(a, b):
-    for x, y in zip(a, b):
+    for x, y in zip(a, b, strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 

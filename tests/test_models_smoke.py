@@ -88,5 +88,5 @@ def test_grad_accum_equivalence():
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
     l1 = jax.tree_util.tree_leaves(s1.params)
     l2 = jax.tree_util.tree_leaves(s2.params)
-    for a, b in zip(l1, l2):
+    for a, b in zip(l1, l2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -61,7 +61,7 @@ def test_groups_match_independent_contexts(use_kernels):
 
     for gid, ctx in enumerate(singles):
         assert mg.group_log[gid] == ctx.delivered_log, gid
-        for a, b in zip(_group_state(mg.hw, gid), _group_state(ctx.hw, gid)):
+        for a, b in zip(_group_state(mg.hw, gid), _group_state(ctx.hw, gid), strict=True):
             np.testing.assert_array_equal(a, b)
 
 
@@ -98,7 +98,7 @@ def test_group_failover_does_not_perturb_others(use_kernels):
 
     for gid, ctx in enumerate(singles):
         assert mg.group_log[gid] == ctx.delivered_log, gid
-        for a, b in zip(_group_state(mg.hw, gid), _group_state(ctx.hw, gid)):
+        for a, b in zip(_group_state(mg.hw, gid), _group_state(ctx.hw, gid), strict=True):
             np.testing.assert_array_equal(a, b)
     # every submission in every group was delivered exactly once
     assert all(len(log) == 6 for log in mg.group_log)
@@ -124,7 +124,7 @@ def test_idle_group_unperturbed_under_skewed_load(use_kernels):
     assert len(ctx.group_log[0]) == 192 and len(ctx.group_log[1]) == 0
     assert ctx.hw.next_inst_host[1] == 0
     assert not ctx.learned_g[1]
-    for a, b in zip(_group_state(ctx.hw, 1), _group_state(ref.hw, 0)):
+    for a, b in zip(_group_state(ctx.hw, 1), _group_state(ref.hw, 0), strict=True):
         np.testing.assert_array_equal(a, b)
     ctx.submit(b"late", group=1)
     ctx.run_until_quiescent()
@@ -147,7 +147,7 @@ def test_group_recover_targets_one_group():
     for gid in range(G):
         if gid == 3:
             continue
-        for a, b in zip(before[gid], after[gid]):
+        for a, b in zip(before[gid], after[gid], strict=True):
             np.testing.assert_array_equal(a, b)
     # group 3's ring now holds a vote for instance 100
     assert np.asarray(mg.hw.stack.vrnd)[3, :, 100 % CFG_MG.n_instances].max() >= 0
@@ -228,13 +228,13 @@ def test_retire_drains_learner_ring_and_touches_no_other_group():
     assert len(expect) == 2
     assert ctx.hw.create_group() == 1
     others_after = [_group_state(ctx.hw, gid) for gid in range(G) if gid != 1]
-    for before, after in zip(others_before, others_after):
-        for a, b in zip(before, after):
+    for before, after in zip(others_before, others_after, strict=True):
+        for a, b in zip(before, after, strict=True):
             np.testing.assert_array_equal(a, b)
     # the recycled slot is a fresh deployment
     fresh = MultiGroupDataplane(PaxosConfig(
         n_acceptors=3, n_instances=512, batch=16, n_groups=1))
-    for a, b in zip(_group_state(ctx.hw, 1), _group_state(fresh, 0)):
+    for a, b in zip(_group_state(ctx.hw, 1), _group_state(fresh, 0), strict=True):
         np.testing.assert_array_equal(a, b)
 
 
@@ -270,7 +270,7 @@ def test_vacant_slot_rides_folded_dispatch_inert(use_kernels):
     vacant_after = [np.asarray(x) for x in jax.tree_util.tree_leaves(
         jax.tree_util.tree_map(lambda s: s[0], (ctx.hw.stack, ctx.hw.lstate))
     )]
-    for a, b in zip(vacant_before, vacant_after):
+    for a, b in zip(vacant_before, vacant_after, strict=True):
         np.testing.assert_array_equal(a, b)
     # the recycled group then serves from its own (divergent) watermark
     ctx.submit(b"late", group=0)

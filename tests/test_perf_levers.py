@@ -78,5 +78,5 @@ def test_dots_remat_same_gradients():
     s2, m2 = jax.jit(train_loop.make_train_step(cfg2))(state, batch)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-6)
     for a, b in zip(jax.tree_util.tree_leaves(s1.params),
-                    jax.tree_util.tree_leaves(s2.params)):
+                    jax.tree_util.tree_leaves(s2.params), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

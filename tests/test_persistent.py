@@ -42,7 +42,7 @@ QUORUM = 2
 
 
 def _tree_equal(t1, t2):
-    for l1, l2 in zip(jax.tree_util.tree_leaves(t1), jax.tree_util.tree_leaves(t2)):
+    for l1, l2 in zip(jax.tree_util.tree_leaves(t1), jax.tree_util.tree_leaves(t2), strict=True):
         np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
 
 

@@ -113,7 +113,7 @@ def test_plan_round_masks_frozen_and_vacant():
 def test_realignment_sweep_triggers_after_k_fragmented_rounds():
     p = DispatchPlanner(batch=128, n_instances=4096, realign_after=3)
     marks = [128, 256, 128, 128]
-    for k in range(2):
+    for _ in range(2):
         rp = p.plan_round([4] * 4, marks, [True] * 4, [0] * 4)
         assert rp.realign == ()                  # below the threshold
         assert rp.fragmentation == 2

@@ -187,7 +187,7 @@ def test_session_routing_stable_across_placements(sid):
     assert len(set(gids)) == 1                     # placement-independent
     gid = gids[0]
     assert 0 <= gid < n_groups
-    for svc, placement in zip(services, _slab_placements(n_groups)):
+    for svc, placement in zip(services, _slab_placements(n_groups), strict=True):
         assert svc.shard_of(sid) == placement[gid]
         assert svc.group_placement() == placement
 
@@ -202,7 +202,7 @@ def test_session_routing_stable_across_placements_deterministic():
         gids = {svc.group_of(sid) for svc in services}
         assert len(gids) == 1, sid
         gid = gids.pop()
-        for svc, placement in zip(services, placements):
+        for svc, placement in zip(services, placements, strict=True):
             assert svc.shard_of(sid) == placement[gid]
 
 

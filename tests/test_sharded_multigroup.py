@@ -122,7 +122,7 @@ def test_sharded_matches_unsharded_and_scalar_oracle(mult, use_kernels):
                 if d is not None:
                     assert d.inst == inst_b[gid, j]
                     np.testing.assert_array_equal(d.value, val_b[gid, j])
-    for a, b in zip(_state_leaves(mg), _state_leaves(sh)):
+    for a, b in zip(_state_leaves(mg), _state_leaves(sh), strict=True):
         np.testing.assert_array_equal(a, b)
     # final register files agree with the scalar acceptors, per group
     h_rnd, h_vrnd = np.asarray(sh.stack.rnd), np.asarray(sh.stack.vrnd)
@@ -177,7 +177,7 @@ def test_sharded_context_parity_with_failover(use_kernels):
     assert sh.group_log == mg.group_log
     for gid in range(g):
         assert sh.group_log[gid] == singles[gid].delivered_log, gid
-    for a, b in zip(_state_leaves(mg.hw), _state_leaves(sh.hw)):
+    for a, b in zip(_state_leaves(mg.hw), _state_leaves(sh.hw), strict=True):
         np.testing.assert_array_equal(a, b)
     assert all(len(log) == 6 for log in sh.group_log)
 

@@ -164,7 +164,7 @@ def test_fused_round_matches_scalar_oracle(seed, n, b, v, a):
         np.testing.assert_array_equal(np.asarray(win), np.asarray(k_win))
         np.testing.assert_array_equal(np.asarray(value), np.asarray(k_value))
         for x, y in zip(jax.tree_util.tree_leaves((stack, lstate)),
-                        jax.tree_util.tree_leaves((stack_k, lstate_k))):
+                        jax.tree_util.tree_leaves((stack_k, lstate_k)), strict=True):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
         # fused round == scalar oracle
@@ -323,7 +323,7 @@ def test_multigroup_fused_matches_independent_runs(g):
                 np.asarray(value), np.asarray(outs[8]), err_msg=f"gb={gb}"
             )
             for x, y in zip(jax.tree_util.tree_leaves((stack, lstate)),
-                            outs[:6]):
+                            outs[:6], strict=True):
                 np.testing.assert_array_equal(
                     np.asarray(x), np.asarray(y), err_msg=f"gb={gb}"
                 )
@@ -349,9 +349,9 @@ def test_multigroup_fused_matches_independent_runs(g):
             np.testing.assert_array_equal(np.asarray(value[gid]), np.asarray(v_g))
             for x, y in zip(
                 jax.tree_util.tree_leaves(
-                    jax.tree_util.tree_map(lambda s: s[gid], (stack, lstate))
+                    jax.tree_util.tree_map(lambda s, gid=gid: s[gid], (stack, lstate))
                 ),
-                jax.tree_util.tree_leaves((st_g, ls_g)),
+                jax.tree_util.tree_leaves((st_g, ls_g)), strict=True,
             ):
                 np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
@@ -396,7 +396,7 @@ def test_multigroup_dead_acceptor_isolated_to_group():
             cstate, stack, lstate, values, active, alive, 2
         )
     for x, y in zip(jax.tree_util.tree_leaves(outs["all"]),
-                    jax.tree_util.tree_leaves(outs["dead"])):
+                    jax.tree_util.tree_leaves(outs["dead"]), strict=True):
         x, y = np.asarray(x), np.asarray(y)
         mask = np.ones(x.shape[0], bool)
         mask[1] = False  # every group but the victim is untouched
@@ -426,7 +426,7 @@ def test_vote_all_window_kernel_matches_jnp():
     r = ref.acceptor_vote_all_window(
         st_rnd, st_vrnd, st_val, base, alive, mt, mr, mv
     )
-    for x, y in zip(k, r):
+    for x, y in zip(k, r, strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
     # wrapped follow-up window [256, 384) -> slots [0, 128)
     k2 = wirepath.acceptor_vote_all_window(
@@ -435,7 +435,7 @@ def test_vote_all_window_kernel_matches_jnp():
     r2 = ref.acceptor_vote_all_window(
         r[0], r[1], r[2], 256, alive, mt, mr, mv
     )
-    for x, y in zip(k2, r2):
+    for x, y in zip(k2, r2, strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
@@ -459,7 +459,7 @@ def test_cohort_round_matches_full_width_oracle():
     marks = np.zeros((g,), np.int32)
     hot = 0
     hot_b, cold_b = 64, 8
-    for r in range(2 * n // hot_b + 2):          # hot ring wraps twice
+    for _ in range(2 * n // hot_b + 2):          # hot ring wraps twice
         # -- hot tier: compact single-group block ---------------------------
         vals_h = rng.integers(-99, 99, (1, hot_b, v)).astype(np.int32)
         en_h = np.zeros((g,), np.int32)
@@ -532,7 +532,7 @@ def test_cohort_round_matches_full_width_oracle():
         # disabled hot slot, and untouched-slab aliasing are all state-exact
         for x, y in zip(
             jax.tree_util.tree_leaves((stack, ls)),
-            jax.tree_util.tree_leaves((stack_o, ls_o)),
+            jax.tree_util.tree_leaves((stack_o, ls_o)), strict=True,
         ):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
@@ -571,6 +571,6 @@ def test_cohort_round_per_block_bases():
     for x, y in zip(
         jax.tree_util.tree_leaves((AcceptorState(*outs[:3]),
                                    batched.LearnerState(*outs[3:6]))),
-        jax.tree_util.tree_leaves((stack_o, ls_o)),
+        jax.tree_util.tree_leaves((stack_o, ls_o)), strict=True,
     ):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""Path-free entry point for the dataplane contract checker.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis.contracts`` but
+runnable from anywhere inside the repo without environment setup:
+
+    python tools/check_contracts.py [--strict-advisory]
+
+See ``src/repro/analysis/contracts.py`` and DESIGN.md §12.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis.contracts import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
