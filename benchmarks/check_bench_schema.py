@@ -36,11 +36,12 @@ REQUIRED_HEADLINES = (
     "wirepath/kv_read_write_ratio/",
     "wirepath/persistent_speedup/",
     "wirepath/trickle_persistent_ratio/",
+    "wirepath/skew_sharded_pallas/",
 )
 RATIO_FIELDS = (
     "speedup", "scaling", "skew_speedup", "sustained_ratio", "kv_ratio",
     "persistent_speedup", "trickle_persistent_ratio",
-    "persistent_amortization",
+    "persistent_amortization", "skew_sharded_ratio",
 )
 
 # Regression-gate CLI flag -> the headline prefix it gates.  The CI
@@ -57,6 +58,7 @@ FLAG_HEADLINES = {
     "--persistent-tolerance": "wirepath/persistent_speedup/",
     "--min-persistent-speedup": "wirepath/persistent_speedup/",
     "--min-trickle-ratio": "wirepath/trickle_persistent_ratio/",
+    "--min-skew-sharded-ratio": "wirepath/skew_sharded_pallas/",
 }
 
 

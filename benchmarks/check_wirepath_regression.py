@@ -43,7 +43,15 @@ committed perf-trajectory artifact and fails on:
     (default 70%) by design: wave-vs-sequential ratios on shared CPU
     runners swing with allocator state (observed 3.0–5.9x for the same
     code), so the absolute floors carry the claims and the relative gate
-    only catches collapses.
+    only catches collapses;
+  * the sharded skewed-load economics (``skew_sharded_ratio``: the
+    sharded dataplane's packed-hot/full-width-cold dispatch pair vs the
+    unsharded two-tier cohort path on the identical schedule —
+    DESIGN.md §13) dropping below the absolute
+    ``--min-skew-sharded-ratio`` floor (default 0.5: sharded useful
+    decided-instances/s must stay within 2x of unsharded) in the fresh
+    run — the packed lane tables and crossover must not reintroduce the
+    full-width cold tax the cohort planner removed.
 
     PYTHONPATH=src python -m benchmarks.check_wirepath_regression \
         BENCH_wirepath.json /tmp/fresh.json
@@ -128,6 +136,11 @@ def main(argv=None) -> int:
                     help="absolute floor on trickle_persistent_ratio — one "
                          "K-round wave must beat K per-round dispatches on "
                          "the trickle schedule (default 2.0)")
+    ap.add_argument("--min-skew-sharded-ratio", type=float, default=0.5,
+                    help="absolute floor on skew_sharded_ratio — the sharded "
+                         "dataplane's skewed-schedule throughput must stay "
+                         "within 1/floor of the unsharded two-tier cohort "
+                         "path (default 0.5, i.e. within 2x)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -290,6 +303,29 @@ def main(argv=None) -> int:
                     f"{args.persistent_tolerance:.0%}, absolute min "
                     f"{abs_min:.1f}x)"
                 )
+
+    base_ss = _row_metric(base, "skew_sharded_pallas", "skew_sharded_ratio")
+    fresh_ss = _row_metric(fresh, "skew_sharded_pallas", "skew_sharded_ratio")
+    if base_ss is None:
+        # pre-§13 artifact: nothing committed to gate against
+        print("skew sharded ratio: no committed row, gate skipped")
+    elif fresh_ss is None:
+        failures.append("fresh run has no skew_sharded_pallas row")
+    else:
+        floor = args.min_skew_sharded_ratio
+        status = "OK" if fresh_ss >= floor else "REGRESSION"
+        print(
+            f"sharded vs unsharded skewed-load ratio: fresh {fresh_ss:.2f}x "
+            f"vs committed {base_ss:.2f}x (absolute floor {floor:.2f}x) "
+            f"-> {status}"
+        )
+        if fresh_ss < floor:
+            failures.append(
+                f"skew_sharded_ratio {fresh_ss:.2f}x below absolute floor "
+                f"{floor:.2f}x (committed {base_ss:.2f}x): sharded dispatch "
+                f"is no longer within 1/{floor:.2f}x of the unsharded "
+                f"two-tier path"
+            )
 
     if failures:
         for f_ in failures:

@@ -196,6 +196,7 @@ CANONICAL_PREFETCH_ORDER = (
     "alive",      # per-acceptor runtime liveness mask
     "limit",      # ring reclamation limit (first refused instance)
     "wen",        # persistent-wave per-round participation table
+    "segids",     # per-lane local slab-row table (packed shard dispatch)
 )
 
 # ``enabled`` is deliberately NOT in the wire order: it is a host-side
@@ -216,6 +217,7 @@ SCALAR_CLASSES: dict[str, str] = {
     "lim": "limit", "limit": "limit", "reclaim_limit": "limit",
     "wen": "wen", "wenk": "wen",
     "en": "enabled", "enabled": "enabled",
+    "seg": "segids", "segids": "segids",
 }
 
 # Per-entry expected prefetch vectors (class sequences), keyed by the
@@ -229,6 +231,9 @@ EXPECTED_PREFETCH: dict[str, tuple[str, ...]] = {
         "gsel", "watermark", "round", "quorum", "alive", "limit", "wen",
     ),
     "acceptor_vote_all_window": ("watermark", "alive"),
+    "packed_shard_round": (
+        "watermark", "round", "quorum", "alive", "limit", "segids",
+    ),
 }
 
 # Host entry points that delegate to another wire-path entry; the scalar

@@ -20,7 +20,7 @@ import bisect
 import dataclasses
 import functools
 from typing import Any
-from collections.abc import Callable
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -296,21 +296,23 @@ class _GroupView:
 
     def vote(self, p2a: MsgBatch) -> list[MsgBatch | None]:
         mg, gid = self.mg, self.gid
+        row = mg._slab_row(gid)
         mg.dispatch_count += 1
-        st = jax.tree_util.tree_map(lambda x: x[gid], mg.stack)
+        st = jax.tree_util.tree_map(lambda x: x[row], mg.stack)
         st, votes = mg._vote_all(st, p2a, mg.alive_mask[gid])
         mg.stack = jax.tree_util.tree_map(
-            lambda s, n: s.at[gid].set(n), mg.stack, st
+            lambda s, n: s.at[row].set(n), mg.stack, st
         )
         return self._split(votes)
 
     def prepare(self, p1a: MsgBatch) -> list[MsgBatch | None]:
         mg, gid = self.mg, self.gid
+        row = mg._slab_row(gid)
         mg.dispatch_count += 1
-        st = jax.tree_util.tree_map(lambda x: x[gid], mg.stack)
+        st = jax.tree_util.tree_map(lambda x: x[row], mg.stack)
         st, outs = mg._prep_all(st, p1a, mg.alive_mask[gid])
         mg.stack = jax.tree_util.tree_map(
-            lambda s, n: s.at[gid].set(n), mg.stack, st
+            lambda s, n: s.at[row].set(n), mg.stack, st
         )
         return self._split(outs)
 
@@ -846,9 +848,10 @@ class MultiGroupDataplane(RingReclamationMixin):
         group (its BRAM); revival rebuilds from snapshot + live ring suffix
         (``core.failover.restore_acceptor``, DESIGN.md §9)."""
         self._check_gid(gid)
+        row = self._slab_row(gid)
         fresh = AcceptorState.init(self.cfg.n_instances, self.cfg.value_words)
         self.stack = jax.tree_util.tree_map(
-            lambda s, f: s.at[gid, aid].set(f), self.stack, fresh
+            lambda s, f: s.at[row, aid].set(f), self.stack, fresh
         )
 
     @mirror_guard
@@ -898,9 +901,16 @@ class MultiGroupDataplane(RingReclamationMixin):
         """Currently live group ids, ascending (the routing domain)."""
         return [g for g in range(self.cfg.n_groups) if self.live_host[g]]
 
+    def _slab_row(self, gid: int) -> int:
+        """Physical slab row of group ``gid``.  Identity here; the sharded
+        subclass translates through its ``PlacementMap`` so every slab
+        access (recovery views, wipes, slot resets, ring drains) lands on
+        the group's current placement (DESIGN.md §13)."""
+        return gid
+
     def _reset_group_slab(self, gid: int) -> None:
         """Zero ONE group's acceptor and learner rings — a fresh tenant's
-        slot.  Touches only row ``gid`` of the slabs (the sharded subclass
+        slot.  Touches only the group's slab row (the sharded subclass
         re-pins placement before its next fused dispatch, exactly like the
         staged recovery surface)."""
         n, v, a = (
@@ -908,15 +918,16 @@ class MultiGroupDataplane(RingReclamationMixin):
             self.cfg.value_words,
             self.cfg.n_acceptors,
         )
+        row = self._slab_row(gid)
         one = AcceptorState.init(n, v)
         fresh = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (a,) + x.shape), one
         )
         self.stack = jax.tree_util.tree_map(
-            lambda s, f: s.at[gid].set(f), self.stack, fresh
+            lambda s, f: s.at[row].set(f), self.stack, fresh
         )
         self.lstate = jax.tree_util.tree_map(
-            lambda s, f: s.at[gid].set(f),
+            lambda s, f: s.at[row].set(f),
             self.lstate,
             batched.LearnerState.init(n, v),
         )
@@ -973,9 +984,10 @@ class MultiGroupDataplane(RingReclamationMixin):
         pairs in instance order — the decided values still resident in the
         retiring group's dedup ring."""
         self._check_live(gid)
-        ld = np.asarray(self.lstate.delivered[gid])
-        li = np.asarray(self.lstate.inst[gid])
-        lv = np.asarray(self.lstate.value[gid])
+        row = self._slab_row(gid)
+        ld = np.asarray(self.lstate.delivered[row])
+        li = np.asarray(self.lstate.inst[row])
+        lv = np.asarray(self.lstate.value[row])
         slots = np.nonzero(ld != 0)[0]
         order = slots[np.argsort(li[slots], kind="stable")]
         drained = [(int(li[s]), lv[s].tobytes()) for s in order]
@@ -1042,6 +1054,14 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         self.stack = jax.device_put(self.stack, self._slab_sharding)
         self.lstate = jax.device_put(self.lstate, self._slab_sharding)
         self._dispatches: dict[tuple[bool, int], Any] = {}
+        self._packed_dispatches: dict[bool, Any] = {}
+        # group -> physical slot permutation (DESIGN.md §13); identity at
+        # boot, mutated only by ``migrate_group`` slot swaps.  Device slabs
+        # are SLOT-indexed; every host mirror stays gid-indexed and the
+        # translation happens exactly once, at the dispatch/slab boundary.
+        self._placement = plan_mod.PlacementMap.identity(
+            cfg.n_groups, self.groups_per_shard
+        )
 
     def _fold_width(self) -> int:
         # lockstep folds one shard's slab per grid step (a block has a
@@ -1049,15 +1069,31 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         # 1-device mesh this is the parent's full-service fold
         return self.groups_per_shard
 
-    # -- placement introspection (consumed by serve.ConsensusService) --------
+    # -- placement (consumed by serve.ConsensusService) ----------------------
+    @property
+    def placement(self) -> plan_mod.PlacementMap:
+        return self._placement
+
+    def _slab_row(self, gid: int) -> int:
+        return self._placement.slot_of[gid]
+
     def shard_of_group(self, gid: int) -> int:
-        """Mesh shard owning group ``gid`` (contiguous-slab placement)."""
+        """Mesh shard owning group ``gid`` under the current placement."""
         self._check_gid(gid)
-        return gid // self.groups_per_shard
+        return self._placement.shard_of(gid)
 
     def group_placement(self) -> list[int]:
         """group id -> owning shard, for the whole service."""
-        return [g // self.groups_per_shard for g in range(self.cfg.n_groups)]
+        pm = self._placement
+        return [pm.shard_of(g) for g in range(self.cfg.n_groups)]
+
+    def plan_placement(self, loads: Sequence[int]) -> plan_mod.PlacementMap:
+        """The load-weighted placement this service *would* adopt for the
+        given per-group loads (``PlacementMap.weighted``); pure planning —
+        adopting it is a sequence of ``migrate_group`` slot swaps."""
+        return plan_mod.PlacementMap.weighted(
+            loads, self.n_shards, self.groups_per_shard
+        )
 
     # -- dispatch construction ----------------------------------------------
     def _dispatch(self, use_k: bool, gb: int):
@@ -1075,6 +1111,20 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
                 group_block=gb,
             )
             self._dispatches[key] = fn
+        return fn
+
+    def _packed_dispatch(self, use_k: bool):
+        fn = self._packed_dispatches.get(use_k)
+        if fn is None:
+            from .fabric import make_packed_sharded_round
+
+            fn = make_packed_sharded_round(
+                self.mesh,
+                quorum=self.cfg.quorum,
+                axis=self.axis,
+                use_kernels=use_k,
+            )
+            self._packed_dispatches[use_k] = fn
         return fn
 
     def _ensure_placement(self) -> None:
@@ -1097,40 +1147,53 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         ``MultiGroupDataplane.pipeline``, executed as one ``shard_map``
         program over the group slabs."""
         g, b = values.shape[0], values.shape[1]
-        enabled, use_k, gb = self._plan_round(b, enabled)
+        enabled, use_k, _ = self._plan_round(b, enabled)
         if not any(enabled):
             return self._empty_round(g, b)
         self._guard_capacity(
             [gid for gid in range(g) if enabled[gid]], b
         )
+        pm = self._placement
+        # the fold's lockstep blocks are SLOT blocks (the kernel walks
+        # physical slab rows), so the width derives from slot-ordered marks
+        perm = list(pm.group_of)       # slot -> gid
+        marks_slot = [self.next_inst_host[gid] for gid in perm]
+        slots = [pm.slot_of[gid] for gid in range(g) if enabled[gid]]
+        gb = plan_mod.fold_width_full(slots, marks_slot, self._fold_width())
         plan_gb = gb               # reported engine-agnostically (last_gb)
         if not use_k:
             gb = 1
         self._ensure_placement()
-        ni = np.asarray(self.next_inst_host, np.int32)
-        en = np.asarray(enabled, np.int32)
+        ni = np.asarray(self.next_inst_host, np.int32)[perm]
+        en = np.asarray(enabled, np.int32)[perm]
         eff_crnd = np.where(
-            en != 0, np.asarray(self.crnd_host, np.int32), NO_ROUND
+            en != 0, np.asarray(self.crnd_host, np.int32)[perm], NO_ROUND
         ).astype(np.int32)
+        lim = self._reclaim_limits_np()
         fn = self._dispatch(use_k, gb)
         self.dispatch_count += 1
         self.stack, self.lstate, fresh, inst, _win, value = fn(
             ni,
             eff_crnd,
             en,
-            self.alive_mask,
+            self.alive_mask[perm],
             self.stack,
             self.lstate,
-            jnp.asarray(values),
-            jnp.asarray(active),
-            reclaim_limit=self._reclaim_limits_np(),
+            jnp.asarray(np.asarray(values)[perm]),
+            jnp.asarray(np.asarray(active)[perm]),
+            reclaim_limit=None if lim is None else lim[perm],
         )
         for gid in range(g):
             if enabled[gid]:
                 self.next_inst_host[gid] += b
         self._sync_cstate()
         self.last_gb = plan_gb
-        return np.asarray(fresh), np.asarray(inst), np.asarray(value)
+        inv = list(pm.slot_of)         # gid -> slot: gather back to gid order
+        return (
+            np.asarray(fresh)[inv],
+            np.asarray(inst)[inv],
+            np.asarray(value)[inv],
+        )
 
     # -- cohort dispatch (DESIGN.md §8), sharded execution -------------------
     @mirror_guard
@@ -1139,48 +1202,137 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         defer: bool = False,
     ):
         """Same contract (and bit-identical results) as the unsharded
-        ``pipeline_cohort``, executed as one ``shard_map`` program.
+        ``pipeline_cohort``, executed as one *packed* ``shard_map`` program
+        (DESIGN.md §13).
 
-        The group axis is NOT compacted here: shard_map needs uniform
-        per-shard shapes and a cohort may land all its members on one
-        shard, so each shard runs its full slab with non-members held
-        inert by the ``enabled`` mask — the tier still rides the
-        right-sized burst, which is where the skew win lives.  The fold
-        width is the widest divisor of the per-shard slab whose aligned
-        blocks are internally lockstep over the cohort
-        (``core.plan.fold_width_full``)."""
+        Historically this path ran every shard's full ``Gl``-row slab with
+        non-members held inert, so a cold one-group cohort paid full-width
+        slab cost on every shard.  Packed dispatch restores proportional
+        cost under shard_map's shape uniformity via input packing: each
+        shard advances ``C`` lanes (the cohort's max per-shard residency,
+        pow2-quantized), each lane routed to its physical slab row by a
+        ``segids`` table riding scalar prefetch; shards with fewer resident
+        members ride inert pad lanes.  The burst still right-sizes per
+        tier, so cohort cost is ``O(C x BE)`` instead of ``O(Gl x BE)``."""
         gids, member, use_k, inst = self._cohort_prologue(gids, values)
-        g = self.cfg.n_groups
         be = values.shape[1]
         self._guard_capacity(gids, be)
         marks = self.next_inst_host
-        # full-width fold over the per-shard slab is this dataplane's
-        # dispatch plan; reported on both engines (the jnp branch ignores
-        # the fold, so its dispatch is built at width 1)
-        plan_gb = plan_mod.fold_width_full(gids, marks, self._fold_width())
+        pm = self._placement
+        n_sh, gl = self.n_shards, self.groups_per_shard
+        # pack the cohort into per-shard lane tables: C = max residency,
+        # pow2-quantized (bounded retrace vocabulary), capped by the slab
+        lanes: list[list[int]] = [[] for _ in range(n_sh)]
+        for row, gid in enumerate(gids):
+            lanes[pm.shard_of(gid)].append(row)
+        cmax = max(len(ls) for ls in lanes)
+        c = min(1 << max(0, cmax - 1).bit_length(), gl)
+        if c >= gl:
+            # crossover: a saturated cohort's packed table visits as many
+            # slab rows as the full-width fold but pays one grid step per
+            # lane, so the fat folded dispatch is strictly cheaper
+            return self._cohort_full_width(
+                gids, member, use_k, inst, values, active, defer
+            )
+        # the full-width fold over slot-ordered marks remains the reported
+        # plan (engine-agnostic, comparable across rounds); packed
+        # execution itself needs no fold — lanes carry their own offsets
+        marks_slot = [marks[gid] for gid in pm.group_of]
+        plan_gb = plan_mod.fold_width_full(
+            [pm.slot_of[gid] for gid in gids], marks_slot, self._fold_width()
+        )
+        a, v = self.cfg.n_acceptors, self.cfg.value_words
+        seg = np.zeros((n_sh, c), np.int32)
+        enp = np.zeros((n_sh, c), np.int32)
+        nip = np.zeros((n_sh, c), np.int32)
+        crp = np.full((n_sh, c), NO_ROUND, np.int32)
+        alp = np.ones((n_sh, c, a), np.int32)
+        limnp = self._reclaim_limits_np()
+        limp = np.full((n_sh, c), np.iinfo(np.int32).max, np.int32)
+        valsp = np.zeros((n_sh, c, be, v), np.int32)
+        valsp[:, :, :, 0] = NOP_SENTINEL
+        lane_of: dict[int, tuple[int, int]] = {}
+        for s in range(n_sh):
+            for j, row in enumerate(lanes[s]):
+                gid = gids[row]
+                seg[s, j] = pm.row_of(gid)
+                enp[s, j] = 1
+                nip[s, j] = marks[gid]
+                crp[s, j] = self.crnd_host[gid]
+                alp[s, j] = self.alive_mask[gid]
+                if limnp is not None:
+                    limp[s, j] = limnp[gid]
+                valsp[s, j] = values[row]
+                lane_of[gid] = (s, j)
+        self._ensure_placement()
+        fn = self._packed_dispatch(use_k)
+        self.dispatch_count += 1
+        self.stack, self.lstate, fresh, _inst_d, _win, value = fn(
+            seg,
+            nip,
+            crp,
+            enp,
+            alp,
+            self.stack,
+            self.lstate,
+            jnp.asarray(valsp),
+            reclaim_limit=limp,
+        )
+        fresh = np.asarray(fresh).reshape(n_sh, c, be)
+        value = np.asarray(value).reshape(n_sh, c, be, v)
+        fresh = np.stack([fresh[lane_of[gid]] for gid in gids])
+        value = np.stack([value[lane_of[gid]] for gid in gids])
+        for gid in gids:
+            self.next_inst_host[gid] += be
+        self._sync_cstate()
+        self.last_gb = plan_gb
+        if defer:
+            return _DeferredRound.resolved(fresh, value, inst)
+        return fresh, inst, value
+
+    @mirror_guard
+    def _cohort_full_width(
+        self, gids, member, use_k, inst, values, active, defer: bool,
+    ):
+        """Full-width folded execution for saturated cohorts: non-members
+        ride the dispatch inert (NOP sentinel rows, membership-masked
+        crnd), exactly the unsharded cohort oracle's packing convention
+        (``plan.scatter_rows``), permuted into slot order for the slabs."""
+        g = self.cfg.n_groups
+        be = values.shape[1]
+        pm = self._placement
+        marks = self.next_inst_host
+        perm = list(pm.group_of)       # slot -> gid
+        marks_slot = [marks[gid] for gid in perm]
+        plan_gb = plan_mod.fold_width_full(
+            [pm.slot_of[gid] for gid in gids], marks_slot, self._fold_width()
+        )
         gb = plan_gb if use_k else 1
         vals_f, act_f = plan_mod.scatter_rows(
             gids, values, active, g, self.cfg.value_words
         )
-        self._ensure_placement()
-        ni = np.asarray(self.next_inst_host, np.int32)
+        memp = np.asarray(member, np.int32)[perm]
         eff_crnd = np.where(
-            member != 0, np.asarray(self.crnd_host, np.int32), NO_ROUND
+            memp != 0, np.asarray(self.crnd_host, np.int32)[perm], NO_ROUND
         ).astype(np.int32)
+        lim = self._reclaim_limits_np()
+        self._ensure_placement()
         fn = self._dispatch(use_k, gb)
         self.dispatch_count += 1
         self.stack, self.lstate, fresh, _inst_d, _win, value = fn(
-            ni,
+            np.asarray(marks, np.int32)[perm],
             eff_crnd,
-            member,
-            self.alive_mask,
+            memp,
+            self.alive_mask[perm],
             self.stack,
             self.lstate,
-            jnp.asarray(vals_f),
-            jnp.asarray(act_f),
-            reclaim_limit=self._reclaim_limits_np(),
+            jnp.asarray(vals_f[perm]),
+            jnp.asarray(act_f[perm]),
+            reclaim_limit=None if lim is None else lim[perm],
         )
-        fresh, value = np.asarray(fresh)[gids], np.asarray(value)[gids]
+        inv = list(pm.slot_of)         # gid -> slot: gather back to gid order
+        fresh = np.asarray(fresh)[inv][gids]
+        value = np.asarray(value)[inv][gids]
         for gid in gids:
             self.next_inst_host[gid] += be
         self._sync_cstate()
@@ -1269,6 +1421,59 @@ class ShardedMultiGroupDataplane(MultiGroupDataplane):
         self.crnd_host[gid] = crnd
         self._sync_cstate()
 
+    # -- live slab migration (DESIGN.md §13) ---------------------------------
+    @mirror_guard
+    def migrate_group(self, gid: int, dst_shard: int) -> None:
+        """Move a live tenant's slab to ``dst_shard`` between waves.
+
+        Placement-only state transfer: the caller has already drained the
+        group to its reclamation watermark (ring history absorbed into the
+        ``SnapshotStore`` — enforced here), so the slab rows carry no
+        information the store does not.  The move is then a slot *swap*
+        with a vacant (retired) group placed on the destination shard —
+        gid keeps its identity (session hashes, log segments and twin
+        numbering are placement-blind), only ``_slab_row`` changes:
+
+          1. swap slots with the lowest vacant group on ``dst_shard``;
+          2. zero the adopted slot (it holds the vacant group's stale
+             retired rows — exactly ``create_group``'s lazy reset);
+          3. re-seat the sequencer at the drain watermark (block-realigned
+             on the kernel path, as in ``restore_group``/``adopt_group``).
+
+        No other group's slab state, watermark or placement is touched, so
+        the rest of the service keeps dispatching normally around the swap
+        — there is no stop-the-world."""
+        self._check_live(gid)
+        if not 0 <= dst_shard < self.n_shards:
+            raise ValueError(
+                f"shard {dst_shard} out of range [0, {self.n_shards})"
+            )
+        if self.reclaimed_host is None:
+            raise ValueError("migrate_group requires reclamation enabled")
+        wm = self.next_inst_host[gid]
+        if self.reclaimed_host[gid] != wm:
+            raise ValueError(
+                f"group {gid} not drained: reclamation watermark "
+                f"{self.reclaimed_host[gid]} != sequencer watermark {wm}"
+            )
+        pm = self._placement
+        if pm.shard_of(gid) == dst_shard:
+            return
+        vacant = [
+            h
+            for h in range(self.cfg.n_groups)
+            if pm.shard_of(h) == dst_shard and not self.live_host[h]
+        ]
+        if not vacant:
+            raise RuntimeError(
+                f"no vacant slot on shard {dst_shard} to migrate group "
+                f"{gid} into (retire or migrate a tenant off it first)"
+            )
+        self._placement = pm.swapped(gid, vacant[0])
+        self._reset_group_slab(gid)        # the newly adopted slot
+        self._ensure_placement()
+        self.restore_group(gid, wm, self.crnd_host[gid])
+
 
 class PaxosContext:
     """Drop-in replacement context (the paper's ``paxos_ctx``)."""
@@ -1334,6 +1539,7 @@ class PaxosContext:
                 n_instances=self.cfg.n_instances,
                 realign_after=self.cfg.realign_after,
                 persistent_rounds=self.cfg.persistent_rounds,
+                sharded=mesh is not None,
             )
             if self.grouped
             else None
@@ -1827,10 +2033,11 @@ class PaxosContext:
         self._check_group(gid)
         hw = self.hw
         if self.grouped:
+            row = hw._slab_row(gid)
             seq_mark = hw.next_inst_host[gid]
-            ld = np.asarray(hw.lstate.delivered[gid])
-            li = np.asarray(hw.lstate.inst[gid])
-            lv = np.asarray(hw.lstate.value[gid])
+            ld = np.asarray(hw.lstate.delivered[row])
+            li = np.asarray(hw.lstate.inst[row])
+            lv = np.asarray(hw.lstate.value[row])
         else:
             seq_mark = hw._next_inst_host
             ld = np.asarray(hw.lstate.delivered)
@@ -1913,6 +2120,52 @@ class PaxosContext:
         store.reset_group(gid)
         store.seed(gid, snap, log_prefix)
         return gid
+
+    def migrate_group(
+        self, gid: int, dst_shard: int, max_rounds: int = 64
+    ) -> GroupSnapshot:
+        """Live slab migration (DESIGN.md §13): move tenant ``gid`` to
+        ``dst_shard`` between waves, no stop-the-world.
+
+        The protocol composes machinery this context already trusts:
+        pump until the group's in-flight submissions drain (other tenants
+        keep deciding during these waves), ``snapshot_group`` the full
+        prefix (ring drained into the ``SnapshotStore``, reclamation
+        watermark advanced to the sequencer watermark), seal it, let the
+        sharded dataplane swap slots, then re-derive the store's seal and
+        verify it against the pre-move snapshot — the same
+        divergence/corruption check ``adopt_group`` applies to transferred
+        state.  Returns the sealed snapshot the move was verified against.
+        Callers routing by placement must bump their routing epoch
+        (``serve.ConsensusService.migrate_group`` does)."""
+        self._require_grouped()
+        store = self._require_snapshots()
+        self._check_group(gid)
+        hw = self.hw
+        if not hasattr(hw, "migrate_group"):
+            raise ValueError(
+                "migrate_group requires the groups-sharded dataplane "
+                "(construct the context with mesh=...)"
+            )
+        for _ in range(max_rounds):
+            if not any(
+                isinstance(k, tuple) and k[0] == gid for k in self._pending
+            ):
+                break
+            self.pump()
+        else:
+            raise RuntimeError(
+                f"group {gid} did not drain within {max_rounds} pump rounds"
+            )
+        snap = self.snapshot_group(gid)
+        hw.migrate_group(gid, dst_shard)
+        after = store.snapshot(gid)
+        if after.seal != snap.seal or after.watermark != snap.watermark:
+            raise RuntimeError(
+                f"group {gid} snapshot seal changed across migration: "
+                f"{snap.seal!r} -> {after.seal!r}"
+            )
+        return snap
 
     # -- dynamic membership (DESIGN.md §7) -----------------------------------
     def _require_grouped(self) -> None:

@@ -490,6 +490,67 @@ def persistent_multigroup_rounds(
     )
 
 
+def packed_multigroup_round(
+    stack: AcceptorState,       # leaves shaped (Gl, A, N[, V])
+    lstate: LearnerState,       # leaves shaped (Gl, N[, V])
+    segids: jax.Array,          # int32[C]  per-lane slab row (0..Gl)
+    next_inst: jax.Array,       # int32[C]  per-lane window base
+    crnd: jax.Array,            # int32[C]  per-lane coordinator round
+    alive: jax.Array,           # int32[C, A]  per-lane liveness row
+    quorum: int | jax.Array,
+    values: jax.Array,          # int32[C, B, V]  packed burst values
+    enabled: jax.Array,         # int32[C]  0 marks a pad lane
+    reclaim_limit: jax.Array | None = None,  # int32[C]; None = no reclamation
+) -> tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
+    """Bit-exact jnp oracle of the packed ragged-shard kernel
+    ``kernels.wirepath.packed_shard_round`` (DESIGN.md §13).
+
+    ``C`` packed lanes each serve slab row ``segids[j]`` of one shard's
+    ``(Gl, ...)`` state with their own per-lane scalars.  Enabled lanes must
+    name pairwise-distinct rows (the caller packs one lane per resident
+    enabled group); pad lanes (``enabled == 0``) ride inert and write
+    nothing back.  Gather the lanes' rows, run ``fused_round`` vmapped over
+    the lane axis, scatter enabled lanes' rows back (pads scattered into a
+    dropped trash row) — identical arithmetic to the kernel's routed grid.
+
+    Returns ``(stack', lstate', fresh[C, B], win_vrnd[C, B],
+    value[C, B, V])`` with the state outputs full-slab ``(Gl, ...)``.
+    """
+    gl = stack.rnd.shape[0]
+    seg = jnp.asarray(segids, jnp.int32).reshape((-1,))
+    c = seg.shape[0]
+    en = jnp.asarray(enabled, jnp.int32).reshape((c,)) != 0
+    cr = jnp.where(en, jnp.asarray(crnd, jnp.int32).reshape((c,)), NO_ROUND)
+    cstate = CoordinatorState(
+        next_inst=jnp.asarray(next_inst, jnp.int32).reshape((c,)), crnd=cr
+    )
+    lane_stack = jax.tree_util.tree_map(lambda x: x[seg], stack)
+    lane_lstate = jax.tree_util.tree_map(lambda x: x[seg], lstate)
+    active = jnp.ones(values.shape[:2], bool)
+    al = jnp.asarray(alive).reshape((c, -1)) != 0
+    if reclaim_limit is None:
+        _c, lane_stack, lane_lstate, fresh, _inst, win, value = jax.vmap(
+            fused_round, in_axes=(0, 0, 0, 0, 0, 0, None)
+        )(cstate, lane_stack, lane_lstate, values, active, al, quorum)
+    else:
+        _c, lane_stack, lane_lstate, fresh, _inst, win, value = jax.vmap(
+            fused_round, in_axes=(0, 0, 0, 0, 0, 0, None, 0)
+        )(
+            cstate, lane_stack, lane_lstate, values, active, al, quorum,
+            jnp.asarray(reclaim_limit, jnp.int32).reshape((c,)),
+        )
+    # scatter lanes back to their slab rows; pads land in a dropped trash
+    # row (their lane state is bit-unchanged anyway — NO_ROUND rejects all)
+    tgt = jnp.where(en, seg, gl)
+
+    def scat(full: jax.Array, lanes: jax.Array) -> jax.Array:
+        return full.at[tgt].set(lanes, mode="drop")
+
+    stack = jax.tree_util.tree_map(scat, stack, lane_stack)
+    lstate = jax.tree_util.tree_map(scat, lstate, lane_lstate)
+    return stack, lstate, fresh, win, value
+
+
 def init_multigroup_state(
     n_groups: int, n_acceptors: int, n_instances: int, value_words: int
 ) -> tuple[CoordinatorState, AcceptorState, LearnerState]:

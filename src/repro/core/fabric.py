@@ -20,6 +20,8 @@ fewer hops", at ICI speed.  Acceptor failure is modelled by an ``alive`` mask
 """
 from __future__ import annotations
 
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +33,12 @@ from .types import MSG_P2B, AcceptorState, CoordinatorState
 NO_ROUND = jnp.int32(-1)
 
 
-def _shard_map(f, mesh, in_specs, out_specs):
+def _shard_map(
+    f: Callable[..., Any],
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+) -> Callable[..., Any]:
     """``shard_map`` across jax versions: the top-level export with
     ``check_vma`` (jax >= 0.6) or the experimental one with ``check_rep``
     (older releases, including this container's).  Replication checking is
@@ -96,7 +103,10 @@ def make_fabric_consensus(
     quorum: int | None = None,
     n_instances: int = 4096,
     value_words: int = 16,
-):
+) -> tuple[
+    Callable[[], tuple[AcceptorState, CoordinatorState]],
+    Callable[..., Any],
+]:
     """Build a jitted in-fabric consensus step over ``mesh[axis]``.
 
     Returns ``(init_fn, step_fn)``:
@@ -112,7 +122,7 @@ def make_fabric_consensus(
     shard = jax.sharding.NamedSharding(mesh, P(axis))
     replicated = jax.sharding.NamedSharding(mesh, P())
 
-    def init_fn():
+    def init_fn() -> tuple[AcceptorState, CoordinatorState]:
         astate = AcceptorState(
             rnd=jnp.zeros((n_acc, n_instances), jnp.int32),
             vrnd=jnp.full((n_acc, n_instances), NO_ROUND, jnp.int32),
@@ -122,7 +132,15 @@ def make_fabric_consensus(
         cstate = jax.device_put(CoordinatorState.init(), replicated)
         return astate, cstate
 
-    def local_round(astate, cstate, values, active, alive):
+    def local_round(
+        astate: AcceptorState,
+        cstate: CoordinatorState,
+        values: jax.Array,
+        active: jax.Array,
+        alive: jax.Array,
+    ) -> tuple[
+        AcceptorState, CoordinatorState, jax.Array, jax.Array, jax.Array
+    ]:
         # strip the per-shard leading dim inside shard_map
         a = AcceptorState(astate.rnd[0], astate.vrnd[0], astate.value[0])
         a, cstate, decided, inst, value = consensus_round(
@@ -134,16 +152,18 @@ def make_fabric_consensus(
     fn = _shard_map(
         local_round,
         mesh=mesh,
+        # pytree containers double as spec pytrees here (the shard_map
+        # convention), hence the arg-type ignores on Array-typed fields
         in_specs=(
-            AcceptorState(P(axis), P(axis), P(axis)),
-            CoordinatorState(P(), P()),
+            AcceptorState(P(axis), P(axis), P(axis)),  # type: ignore[arg-type]
+            CoordinatorState(P(), P()),  # type: ignore[arg-type]
             P(axis, None),
             P(axis),
             P(axis),
         ),
         out_specs=(
-            AcceptorState(P(axis), P(axis), P(axis)),
-            CoordinatorState(P(), P()),
+            AcceptorState(P(axis), P(axis), P(axis)),  # type: ignore[arg-type]
+            CoordinatorState(P(), P()),  # type: ignore[arg-type]
             P(),   # decided: replicated (every shard learns identically)
             P(),
             P(),
@@ -163,7 +183,7 @@ def make_sharded_multigroup_round(
     axis: str = "groups",
     use_kernels: bool = False,
     group_block: int = 1,
-):
+) -> Callable[..., Any]:
     """Build the groups-sharded fused dispatch (DESIGN.md §6): ONE compiled
     program advances all G groups one Phase-2 round, with the ``(G, A, N)``
     acceptor slabs and ``(G, N)`` learner slabs partitioned over
@@ -213,7 +233,21 @@ def make_sharded_multigroup_round(
     offsets = jnp.arange(n_sh, dtype=jnp.int32) * gl
     q = quorum
 
-    def local(ni, cr, en, alive, lim, off, stack, lstate, values, active):
+    def local(
+        ni: jax.Array,
+        cr: jax.Array,
+        en: jax.Array,
+        alive: jax.Array,
+        lim: jax.Array,
+        off: jax.Array,
+        stack: AcceptorState,
+        lstate: batched.LearnerState,
+        values: jax.Array,
+        active: jax.Array,
+    ) -> tuple[
+        AcceptorState, batched.LearnerState, jax.Array, jax.Array,
+        jax.Array, jax.Array,
+    ]:
         # off is this shard's (1,)-slice of the offset vector: the global id
         # of the slab's first group.  Scalar vectors stay global (including
         # the replicated reclaim-limit vector, DESIGN.md §9); slabs are local.
@@ -252,33 +286,49 @@ def make_sharded_multigroup_round(
         return stack, lstate, fresh, inst, win, value
 
     sheet = P(axis)
-    fn = _shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(
-            P(),                                   # next_inst (replicated)
-            P(),                                   # crnd (replicated)
-            P(),                                   # enabled (replicated)
-            P(),                                   # alive (replicated)
-            P(),                                   # reclaim limit (replicated)
-            sheet,                                 # offsets
-            AcceptorState(sheet, sheet, sheet),    # acceptor slabs
-            batched.LearnerState(sheet, sheet, sheet),  # learner slabs
-            sheet,                                 # values
-            sheet,                                 # active
-        ),
-        out_specs=(
-            AcceptorState(sheet, sheet, sheet),
-            batched.LearnerState(sheet, sheet, sheet),
-            sheet,                                 # fresh
-            sheet,                                 # inst
-            sheet,                                 # win
-            sheet,                                 # value
-        ),
-    )
+    if n_sh == 1:
+        # single-shard fast path, same argument as make_packed_sharded_round
+        # below: one shard's local block IS the global array for every spec,
+        # so the shard body runs bit-identically under plain jit and skips
+        # shard_map's fixed per-call resharding of the slab state
+        fn = local
+    else:
+        fn = _shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(
+                P(),                               # next_inst (replicated)
+                P(),                               # crnd (replicated)
+                P(),                               # enabled (replicated)
+                P(),                               # alive (replicated)
+                P(),                               # reclaim limit (replicated)
+                sheet,                             # offsets
+                AcceptorState(sheet, sheet, sheet),  # type: ignore[arg-type]
+                batched.LearnerState(sheet, sheet, sheet),  # type: ignore[arg-type]
+                sheet,                             # values
+                sheet,                             # active
+            ),
+            out_specs=(
+                AcceptorState(sheet, sheet, sheet),  # type: ignore[arg-type]
+                batched.LearnerState(sheet, sheet, sheet),  # type: ignore[arg-type]
+                sheet,                             # fresh
+                sheet,                             # inst
+                sheet,                             # win
+                sheet,                             # value
+            ),
+        )
 
-    def step(next_inst, crnd, enabled, alive, stack, lstate, values, active,
-             reclaim_limit=None):
+    def step(
+        next_inst: Any,
+        crnd: Any,
+        enabled: Any,
+        alive: Any,
+        stack: AcceptorState,
+        lstate: batched.LearnerState,
+        values: jax.Array,
+        active: jax.Array,
+        reclaim_limit: Any | None = None,
+    ) -> Any:
         if reclaim_limit is None:
             # full permit: int32.max is unreachable, every lane passes the
             # reclamation gate (legacy overwrite-on-wrap mode)
@@ -299,6 +349,152 @@ def make_sharded_multigroup_round(
         )
 
     return jax.jit(step, donate_argnums=(4, 5))
+
+
+def make_packed_sharded_round(
+    mesh: jax.sharding.Mesh,
+    *,
+    quorum: int,
+    axis: str = "groups",
+    use_kernels: bool = False,
+    block_b: int | None = None,
+) -> Callable[..., Any]:
+    """Build the *packed* groups-sharded cohort dispatch (DESIGN.md §13):
+    each shard advances only its resident, enabled cohort lanes — packed
+    into a uniform ``(n_sh, C)`` lane table — instead of walking its full
+    ``Gl``-row slab with non-members held inert.
+
+    Where ``make_sharded_multigroup_round`` satisfies shard_map's shape
+    uniformity by running full-width slabs per tier (cold cohorts pay
+    full-width slab cost), here uniformity comes from the GShard MoE
+    input-packing idiom: ``C`` lanes per shard (the cohort's max per-shard
+    residency), each lane routed to its slab row by a ``segids`` table
+    riding scalar prefetch, with pad lanes (``enabled == 0``) inert.  All
+    control tables are per-LANE, packed by the caller in lane order:
+
+        step(segids[S, C], next_inst[S, C], crnd[S, C], enabled[S, C],
+             alive[S, C, A], stack, lstate, values[S, C, B, V],
+             reclaim_limit[S, C] | None)
+          -> (stack', lstate', fresh[S*C, B], inst[S*C, B], win[S*C, B],
+              value[S*C, B, V])
+
+    with shard ``s``'s lane ``j`` at packed row ``s*C + j`` of the outputs,
+    state donated in place, and the slab state updated bit-identically to
+    the full-width dispatch (pads and absent rows untouched).  ``C`` is a
+    trace-time shape: the step retraces per distinct (C, B) — both pow2-
+    quantized vocabularies bounded by the planner.
+    """
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
+    q = quorum
+
+    def local(
+        ni: jax.Array,
+        cr: jax.Array,
+        en: jax.Array,
+        alive: jax.Array,
+        lim: jax.Array,
+        seg: jax.Array,
+        stack: AcceptorState,
+        lstate: batched.LearnerState,
+        values: jax.Array,
+    ) -> tuple[
+        AcceptorState, batched.LearnerState, jax.Array, jax.Array,
+        jax.Array, jax.Array,
+    ]:
+        # every control table is a per-lane (1, C[, A]) sheet of this
+        # shard's packed lanes; slabs are local (Gl rows, slot-indexed)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            from repro.kernels import wirepath as kwp
+
+            # block_b is a kernel-path grid knob only (the oracle has no
+            # blocks); None keeps the kernel's own default
+            kw: dict[str, int] = {} if block_b is None else {"block_b": block_b}
+            outs = kwp.packed_shard_round(
+                seg[0], ni[0], cr[0], jnp.int32(q), alive[0],
+                stack.rnd, stack.vrnd, stack.value,
+                lstate.delivered, lstate.inst, lstate.value, values[0],
+                en[0], lim[0], interpret=kops.INTERPRET, **kw,
+            )
+            stack = AcceptorState(*outs[:3])
+            lstate = batched.LearnerState(*outs[3:6])
+            fresh, win, value = outs[6] != 0, outs[7], outs[8]
+        else:
+            stack, lstate, fresh, win, value = (
+                batched.packed_multigroup_round(
+                    stack, lstate, seg[0], ni[0], cr[0], alive[0], q,
+                    values[0], en[0], reclaim_limit=lim[0],
+                )
+            )
+        b = values.shape[2]
+        inst = ni[0][:, None] + jnp.arange(b, dtype=jnp.int32)[None, :]
+        return stack, lstate, fresh, inst, win, value
+
+    sheet = P(axis)
+    if mesh.shape[axis] == 1:
+        # a single-shard mesh partitions nothing: every global table equals
+        # its one local block, so the shard body IS the global computation.
+        # Dispatching through shard_map anyway would only buy its fixed
+        # per-call resharding of the slab state — a pure copy tax on the
+        # interpret backend — for zero layout change.  Multi-shard meshes
+        # (the multidevice suite) take the shard_map path below and are
+        # bit-identical by construction: same `local`, same operands.
+        fn = local
+    else:
+        fn = _shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(
+                sheet,                             # next_inst (per-lane)
+                sheet,                             # crnd (per-lane)
+                sheet,                             # enabled (per-lane)
+                sheet,                             # alive (per-lane)
+                sheet,                             # reclaim limit (per-lane)
+                sheet,                             # segids (per-lane)
+                AcceptorState(sheet, sheet, sheet),  # type: ignore[arg-type]
+                batched.LearnerState(sheet, sheet, sheet),  # type: ignore[arg-type]
+                sheet,                             # values (per-lane)
+            ),
+            out_specs=(
+                AcceptorState(sheet, sheet, sheet),  # type: ignore[arg-type]
+                batched.LearnerState(sheet, sheet, sheet),  # type: ignore[arg-type]
+                sheet,                             # fresh
+                sheet,                             # inst
+                sheet,                             # win
+                sheet,                             # value
+            ),
+        )
+
+    def packed_step(
+        segids: Any,
+        next_inst: Any,
+        crnd: Any,
+        enabled: Any,
+        alive: Any,
+        stack: AcceptorState,
+        lstate: batched.LearnerState,
+        values: jax.Array,
+        reclaim_limit: Any | None = None,
+    ) -> Any:
+        s, c = values.shape[0], values.shape[1]
+        if reclaim_limit is None:
+            lim = jnp.full((s, c), jnp.iinfo(jnp.int32).max, jnp.int32)
+        else:
+            lim = jnp.asarray(reclaim_limit, jnp.int32).reshape((s, c))
+        return fn(
+            jnp.asarray(next_inst, jnp.int32).reshape((s, c)),
+            jnp.asarray(crnd, jnp.int32).reshape((s, c)),
+            jnp.asarray(enabled, jnp.int32).reshape((s, c)),
+            jnp.asarray(alive, jnp.int32),
+            lim,
+            jnp.asarray(segids, jnp.int32).reshape((s, c)),
+            stack,
+            lstate,
+            values,
+        )
+
+    return jax.jit(packed_step, donate_argnums=(5, 6))
 
 
 # ---------------------------------------------------------------------------

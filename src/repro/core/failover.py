@@ -222,9 +222,10 @@ def restore_acceptor(
     Returns the number of adopted (decided) instances.
     """
     if gid is not None:
-        ld = np.asarray(hw.lstate.delivered[gid])
-        li = np.asarray(hw.lstate.inst[gid])
-        lv = np.asarray(hw.lstate.value[gid])
+        srow = hw._slab_row(gid)
+        ld = np.asarray(hw.lstate.delivered[srow])
+        li = np.asarray(hw.lstate.inst[srow])
+        lv = np.asarray(hw.lstate.value[srow])
         crnd = int(hw.crnd_host[gid])
         hi = int(hw.next_inst_host[gid])
         rnd, vrnd, val = rebuild_acceptor_rows(ld, li, lv, crnd, watermark, hi)
@@ -232,7 +233,7 @@ def restore_acceptor(
             rnd=jnp.asarray(rnd), vrnd=jnp.asarray(vrnd), value=jnp.asarray(val)
         )
         hw.stack = jax.tree_util.tree_map(
-            lambda s, r: s.at[gid, aid].set(r), hw.stack, row
+            lambda s, r: s.at[srow, aid].set(r), hw.stack, row
         )
         hw.revive_acceptor(gid, aid)
     else:

@@ -220,6 +220,109 @@ class RoundPlan:
     full_fold: bool
 
 
+@dataclasses.dataclass(frozen=True)
+class PlacementMap:
+    """Load-weighted group -> shard placement for the sharded dataplane
+    (DESIGN.md §13): a permutation ``slot_of[gid] -> slot`` where slot
+    ``s * Gl + r`` is physical slab row ``r`` on mesh shard ``s``.
+
+    Device slabs are *slot*-indexed; group identity (and therefore session
+    routing hashes, log segment names and twin-oracle numbering) never
+    changes when a group moves — only its slot does.  The map is a plain
+    permutation so membership events compose with placement: every group id,
+    live or free, always owns exactly one slot, and a migration is a slot
+    swap between a live group and a free one.
+
+    Construction is deterministic and engine-agnostic: ``weighted`` is an
+    LPT greedy over ``(-load, gid)`` with ties broken by (shard load sum,
+    occupancy, shard id), so equal loads round-robin ``gid i -> shard
+    i % n_shards`` and all four backends resolve the identical map from the
+    identical ``group_loads()`` snapshot.
+    """
+
+    slot_of: tuple[int, ...]
+    groups_per_shard: int
+
+    def __post_init__(self) -> None:
+        n = len(self.slot_of)
+        if n % self.groups_per_shard:
+            raise ValueError(
+                f"{n} groups not divisible by Gl={self.groups_per_shard}"
+            )
+        if sorted(self.slot_of) != list(range(n)):
+            raise ValueError(f"slot_of is not a permutation: {self.slot_of}")
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.slot_of)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.slot_of) // self.groups_per_shard
+
+    @property
+    def group_of(self) -> tuple[int, ...]:
+        """Inverse permutation: physical slot -> group id."""
+        inv = [0] * len(self.slot_of)
+        for gid, slot in enumerate(self.slot_of):
+            inv[slot] = gid
+        return tuple(inv)
+
+    def shard_of(self, gid: int) -> int:
+        return self.slot_of[gid] // self.groups_per_shard
+
+    def row_of(self, gid: int) -> int:
+        """Local slab row of ``gid`` within its owning shard."""
+        return self.slot_of[gid] % self.groups_per_shard
+
+    def identity_map(self) -> bool:
+        return all(s == g for g, s in enumerate(self.slot_of))
+
+    def swapped(self, gid: int, other: int) -> "PlacementMap":
+        """The map with ``gid`` and ``other`` exchanging slots — the one
+        placement mutation migration performs (both identities keep exactly
+        one slot, so the result is again a permutation by construction)."""
+        slots = list(self.slot_of)
+        slots[gid], slots[other] = slots[other], slots[gid]
+        return PlacementMap(tuple(slots), self.groups_per_shard)
+
+    @classmethod
+    def identity(cls, n_groups: int, groups_per_shard: int) -> "PlacementMap":
+        return cls(tuple(range(n_groups)), groups_per_shard)
+
+    @classmethod
+    def weighted(
+        cls,
+        loads: Sequence[int],
+        n_shards: int,
+        groups_per_shard: int,
+    ) -> "PlacementMap":
+        """LPT greedy: heaviest group first onto the least-loaded non-full
+        shard.  Ragged by construction — a hot shard may host one tenant
+        while a cold shard hosts ``Gl`` — subject only to the ``Gl``-slot
+        capacity.  Within a shard, rows fill in assignment order."""
+        g = len(loads)
+        if g != n_shards * groups_per_shard:
+            raise ValueError(
+                f"{g} loads for {n_shards} x {groups_per_shard} slots"
+            )
+        order = sorted(range(g), key=lambda i: (-int(loads[i]), i))
+        sums = [0] * n_shards
+        rows: list[list[int]] = [[] for _ in range(n_shards)]
+        for gid in order:
+            s = min(
+                (s for s in range(n_shards) if len(rows[s]) < groups_per_shard),
+                key=lambda s: (sums[s], len(rows[s]), s),
+            )
+            sums[s] += int(loads[gid])
+            rows[s].append(gid)
+        slots = [0] * g
+        for s in range(n_shards):
+            for r, gid in enumerate(rows[s]):
+                slots[gid] = s * groups_per_shard + r
+        return cls(tuple(slots), groups_per_shard)
+
+
 class DispatchPlanner:
     """Owns the per-round dispatch policy for a multi-group context.
 
@@ -236,11 +339,18 @@ class DispatchPlanner:
         n_instances: int,
         realign_after: int | None = None,
         persistent_rounds: int = 1,
+        sharded: bool = False,
     ) -> None:
         self.batch = batch
         self.n_instances = n_instances
         self.realign_after = realign_after
         self.persistent_rounds = max(1, int(persistent_rounds))
+        # the sharded engine executes a K-round wave as K cohort dispatches
+        # (DESIGN.md §11's documented fallback); the PLANNER owns that
+        # clamp so ``persistent_waves`` telemetry counts only waves that
+        # actually ran device-persistent, instead of the dispatch layer
+        # silently unrolling K > 1 cohorts after they were counted
+        self.sharded = sharded
         self._fragmented_rounds = 0
         self.last_plan: RoundPlan | None = None
         self.stats: dict[str, Any] = {
@@ -289,9 +399,14 @@ class DispatchPlanner:
         consecutive batch-sized queue slices, so numbering is identical to
         K single-round waves by construction — and every member has K full
         chunks queued.  Clamped by the ``persistent_rounds`` policy knob and
-        by the ring (a wave may not lap itself: K * burst <= N)."""
+        by the ring (a wave may not lap itself: K * burst <= N).  On a
+        sharded planner K is clamped to 1 up front: the wave would unroll
+        into K cohort dispatches anyway (host-authoritative control scalars
+        enter every dispatch), so minting K > 1 would only inflate the
+        ``persistent_waves`` stat."""
         if (
-            self.persistent_rounds <= 1
+            self.sharded
+            or self.persistent_rounds <= 1
             or pending is None
             or burst != self.batch
         ):

@@ -286,6 +286,65 @@ def cohort_fused_round(
 
 
 @dataplane_contract(
+    oracle=_batched.packed_multigroup_round,
+    state_args=("stack", "lstate"),
+    extra=("block_b",),
+)
+def packed_shard_round(
+    stack: AcceptorState,       # leaves shaped (Gl, A, N[, V])
+    lstate: LearnerState,       # leaves shaped (Gl, N[, V])
+    segids: jax.Array,          # int32[C]  per-lane slab row (0..Gl)
+    next_inst: jax.Array,       # int32[C]  per-lane window base
+    crnd: jax.Array,            # int32[C]  per-lane coordinator round
+    alive: jax.Array,           # int32[C, A]  per-lane liveness row
+    quorum: int | jax.Array,
+    values: jax.Array,          # int32[C, B, V]  packed burst values
+    enabled: jax.Array,         # int32[C]  0 marks a pad lane
+    reclaim_limit: jax.Array | None = None,  # int32[C]; None = no reclamation
+    *,
+    block_b: int | None = None,
+) -> tuple[AcceptorState, LearnerState, jax.Array, jax.Array, jax.Array]:
+    """Packed ragged-shard round (DESIGN.md §13): ``C`` uniform lanes, each
+    routed to its resident slab row by the ``segids`` prefetch table, so a
+    shard's dispatch costs what its enabled lanes cost — not the full
+    ``Gl``-row slab.  Coordinator-stateless like ``cohort_fused_round``
+    (the dataplane advances its own watermark mirrors per lane).
+
+    Returns ``(stack', lstate', fresh[C, B], win[C, B], value[C, B, V])``
+    in packed lane order; pads return all-inert rows.
+    """
+    if block_b is None:
+        block_b = _wirepath.DEFAULT_BLOCK_B
+    (st_rnd, st_vrnd, st_val, ldel, linst, lval, fresh, win, value) = (
+        _wirepath.packed_shard_round(
+            jnp.asarray(segids, jnp.int32),
+            next_inst,
+            crnd,
+            jnp.asarray(quorum, jnp.int32),
+            jnp.asarray(alive, jnp.int32),
+            stack.rnd,
+            stack.vrnd,
+            stack.value,
+            lstate.delivered,
+            lstate.inst,
+            lstate.value,
+            values,
+            jnp.asarray(enabled, jnp.int32),
+            reclaim_limit,
+            block_b=block_b,
+            interpret=INTERPRET,
+        )
+    )
+    return (
+        AcceptorState(st_rnd, st_vrnd, st_val),
+        LearnerState(ldel, linst, lval),
+        fresh != 0,
+        win,
+        value,
+    )
+
+
+@dataplane_contract(
     oracle=_batched.persistent_multigroup_rounds,
     state_args=("stack", "lstate"),
     extra=("gsel", "wni", "wen", "crnd", "group_block", "block_b"),

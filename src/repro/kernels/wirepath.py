@@ -764,6 +764,184 @@ def shard_slab_round(
     )
 
 
+# ---------------------------------------------------------------------------
+# Packed ragged-shard entry: C resident lanes, slab rows routed by segment id
+# ---------------------------------------------------------------------------
+def _packed_shard_kernel(
+    ni_ref, crnd_ref, q_ref, alive_ref, lim_ref, seg_ref, *rest
+):
+    # ``seg_ref`` is consumed by the index maps only — it routes each packed
+    # lane to its resident slab row; the round body is the shared one
+    del seg_ref
+    _mg_wirepath_kernel(ni_ref, crnd_ref, q_ref, alive_ref, lim_ref, *rest)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def packed_shard_round(
+    segids: jax.Array,      # int32[C]  per-lane local slab row (0..Gl)
+    next_inst: jax.Array,   # int32[C]  per-lane window base (BB-aligned)
+    crnd: jax.Array,        # int32[C]  per-lane coordinator round
+    quorum: jax.Array,      # int32[]
+    alive: jax.Array,       # int32[C, A] (0/1)
+    st_rnd: jax.Array,      # int32[Gl, A, N]   this shard's acceptor slab
+    st_vrnd: jax.Array,     # int32[Gl, A, N]
+    st_val: jax.Array,      # int32[Gl, A, N, V]
+    ldel: jax.Array,        # int32[Gl, N]      this shard's learner slab
+    linst: jax.Array,       # int32[Gl, N]
+    lval: jax.Array,        # int32[Gl, N, V]
+    values: jax.Array,      # int32[C, B, V]  packed burst values, lane order
+    enabled: jax.Array | None = None,  # int32[C] (0/1); None = all lanes real
+    limit: jax.Array | None = None,    # int32[C]; None = no reclamation
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> tuple[jax.Array, ...]:
+    """One fused Phase-2 round over a shard's *packed* lane table: the grid
+    visits ``C`` uniform lanes and a ``segids`` scalar-prefetch vector routes
+    each lane to the slab row it serves — the GShard MoE input-packing idiom
+    (ragged segments inside a fixed dispatch shape) applied to the group
+    slabs (DESIGN.md §13).
+
+    Where ``shard_slab_round`` always walks the shard's full ``Gl``-row slab
+    (cold cohorts pay full-width slab cost), here the dispatch costs what
+    its *resident, enabled* lanes cost: lane ``j`` processes slab row
+    ``segids[j]`` with its own watermark/round/liveness/limit scalars — all
+    per-LANE vectors, packed by the caller in lane order.  Slab rows not
+    named by any lane are never loaded; their rows of the aliased state
+    outputs retain the input data, exactly like unselected cohort blocks.
+
+    Pad lanes (``enabled == 0``) make the lane count uniform across shards
+    (shard_map shape uniformity).  A pad rides inert — round forced to
+    NO_ROUND, so its row is loaded and stored back bit-identical — and its
+    segment id is *redirected to a provably-unused slab row*: enabled lanes
+    must name pairwise-distinct rows, so when any pad exists the enabled
+    count is < C <= Gl and a free row exists.  That redirection is the
+    safety argument under grid-step pipelining (the same argument as the
+    persistent kernel's revisited blocks): every slab row is touched either
+    by its single enabled lane, or only by pads whose writeback is
+    bit-identical — no interleaving can publish a stale block.
+
+    Returns ``(st_rnd', st_vrnd', st_val', ldel', linst', lval',
+    fresh[C, B], win_vrnd[C, B], value[C, B, V])`` with the state outputs
+    full-slab ``(Gl, ...)`` (aliased in place).
+    """
+    gl, a, n = st_rnd.shape
+    c, b, v = values.shape
+    bb = min(block_b, b)
+    assert b % bb == 0, (b, bb)
+    assert n % bb == 0, (n, bb)
+    assert b <= n, "burst may not lap the instance ring"
+    assert c <= gl, (
+        "packed lane count may not exceed the slab height (pad redirection "
+        "needs a free row whenever pads exist)", c, gl,
+    )
+    nb_ring = n // bb
+    grid = (c, b // bb)
+
+    # Each lane's ring offset comes from its OWN watermark; its slab row
+    # from its segment id — both per-lane prefetch lookups.
+    def ring2(gi, i, ni_ref, cr_ref, q_ref, al_ref, lim_ref, seg_ref):
+        return (seg_ref[gi], (ni_ref[gi] // bb + i) % nb_ring)
+
+    def ring3(gi, i, ni_ref, cr_ref, q_ref, al_ref, lim_ref, seg_ref):
+        return (seg_ref[gi], (ni_ref[gi] // bb + i) % nb_ring, 0)
+
+    def stack3(gi, i, ni_ref, cr_ref, q_ref, al_ref, lim_ref, seg_ref):
+        return (seg_ref[gi], 0, (ni_ref[gi] // bb + i) % nb_ring)
+
+    def stack4(gi, i, ni_ref, cr_ref, q_ref, al_ref, lim_ref, seg_ref):
+        return (seg_ref[gi], 0, (ni_ref[gi] // bb + i) % nb_ring, 0)
+
+    def batch2(gi, i, *_):
+        return (gi, i)
+
+    def batch3(gi, i, *_):
+        return (gi, i, 0)
+
+    def lane1(gi, i, *_):
+        return (gi,)
+
+    def lane2(gi, i, *_):
+        return (gi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bb, v), batch3),        # values (packed)
+            pl.BlockSpec((1, a, bb), stack3),        # st_rnd
+            pl.BlockSpec((1, a, bb), stack3),        # st_vrnd
+            pl.BlockSpec((1, a, bb, v), stack4),     # st_val
+            pl.BlockSpec((1, bb), ring2),            # ldel
+            pl.BlockSpec((1, bb), ring2),            # linst
+            pl.BlockSpec((1, bb, v), ring3),         # lval
+            pl.BlockSpec((1,), lane1),               # ni (VMEM mirror)
+            pl.BlockSpec((1,), lane1),               # crnd (VMEM mirror)
+            pl.BlockSpec((1, a), lane2),             # alive (VMEM mirror)
+            pl.BlockSpec((1,), lane1),               # limit (VMEM mirror)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, a, bb), stack3),        # st_rnd'
+            pl.BlockSpec((1, a, bb), stack3),        # st_vrnd'
+            pl.BlockSpec((1, a, bb, v), stack4),     # st_val'
+            pl.BlockSpec((1, bb), ring2),            # ldel'
+            pl.BlockSpec((1, bb), ring2),            # linst'
+            pl.BlockSpec((1, bb, v), ring3),         # lval'
+            pl.BlockSpec((1, bb), batch2),           # fresh (packed)
+            pl.BlockSpec((1, bb), batch2),           # win_vrnd (packed)
+            pl.BlockSpec((1, bb, v), batch3),        # value (packed)
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((gl, a, n), jnp.int32),
+        jax.ShapeDtypeStruct((gl, a, n), jnp.int32),
+        jax.ShapeDtypeStruct((gl, a, n, v), jnp.int32),
+        jax.ShapeDtypeStruct((gl, n), jnp.int32),
+        jax.ShapeDtypeStruct((gl, n), jnp.int32),
+        jax.ShapeDtypeStruct((gl, n, v), jnp.int32),
+        jax.ShapeDtypeStruct((c, b), jnp.int32),
+        jax.ShapeDtypeStruct((c, b), jnp.int32),
+        jax.ShapeDtypeStruct((c, b, v), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        _packed_shard_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        # all five state slabs update in place: inputs 7..12 (after the 6
+        # scalar-prefetch args) alias outputs 0..5 — device-resident state
+        input_output_aliases={7: 0, 8: 1, 9: 2, 10: 3, 11: 4, 12: 5},
+        interpret=interpret,
+    )
+    ni = jnp.asarray(next_inst, jnp.int32).reshape((c,))
+    cr = jnp.asarray(crnd, jnp.int32).reshape((c,))
+    seg = jnp.asarray(segids, jnp.int32).reshape((c,))
+    if enabled is not None:
+        en = jnp.asarray(enabled, jnp.int32).reshape((c,)) != 0
+        # a pad lane decides (and mutates) nothing: NO_ROUND rejects
+        cr = jnp.where(en, cr, jnp.int32(NO_ROUND))
+        # pad redirection: scatter enabled rows into a (Gl,) usage map (pads
+        # dropped past the end), then point every pad at the first unused
+        # row with an aligned window base — see the safety argument above
+        used = (
+            jnp.zeros((gl,), jnp.int32)
+            .at[jnp.where(en, seg, gl)]
+            .set(1, mode="drop")
+        )
+        pad_row = jnp.argmin(used).astype(jnp.int32)
+        seg = jnp.where(en, seg, pad_row)
+        ni = jnp.where(en, ni, 0)
+    q = jnp.asarray(quorum, jnp.int32).reshape((1,))
+    al = jnp.asarray(alive, jnp.int32).reshape((c, a))
+    if limit is None:
+        lim = jnp.full((c,), jnp.iinfo(jnp.int32).max, jnp.int32)
+    else:
+        lim = jnp.asarray(limit, jnp.int32).reshape((c,))
+    return tuple(
+        fn(ni, cr, q, al, lim, seg, values, st_rnd, st_vrnd, st_val, ldel,
+           linst, lval, ni, cr, al, lim)
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def wirepath_round(
     next_inst: jax.Array,   # int32[]  absolute window base (BB-aligned)

@@ -256,6 +256,28 @@ class ConsensusService:
         self._bump_epoch()
         return gid
 
+    def migrate_group(self, gid: int, dst_shard: int):
+        """Live slab migration through the serving tier (DESIGN.md §13):
+        drain -> sealed snapshot -> seal-verified slot swap on the sharded
+        dataplane, then a routing-epoch bump so placement-aware routers
+        (``shard_of``) re-resolve.  The group's *identity* is untouched —
+        no generation bump, session -> group routing and ``delivered``
+        stitching are placement-blind.  Returns the sealed snapshot the
+        transfer was verified against."""
+        snap = self.ctx.migrate_group(gid, dst_shard)
+        self._bump_epoch()
+        return snap
+
+    def plan_placement(self):
+        """The load-weighted ``PlacementMap`` the sharded dataplane would
+        adopt for the current ``group_loads()`` snapshot (LPT greedy,
+        deterministic) — pure planning; adopt it group-by-group with
+        ``migrate_group``."""
+        hw = self.ctx.hw
+        if not hasattr(hw, "plan_placement"):
+            raise ValueError("plan_placement requires the sharded dataplane")
+        return hw.plan_placement(self.group_loads())
+
     def group_of(self, session_id) -> int:
         """Epoch-aware session -> group routing over the live set."""
         live, _gens = self._epochs[-1]

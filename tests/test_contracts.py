@@ -55,6 +55,7 @@ def test_wirepath_pallas_site_coverage_is_exhaustive():
     assert entries == {
         "cohort_wirepath_round",
         "persistent_wirepath_round",
+        "packed_shard_round",
         "acceptor_vote_all_window",
     }
     for s in sites:
@@ -68,6 +69,7 @@ def test_wirepath_pallas_site_coverage_is_exhaustive():
         "cohort_wirepath_round",
         "shard_slab_round",
         "persistent_wirepath_round",
+        "packed_shard_round",
     }
 
 

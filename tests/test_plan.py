@@ -357,3 +357,77 @@ def test_wave_depth_policy_full_batch_and_covered_queues_only():
     )
     assert rp.cohorts[0].rounds == 1
     assert p1.stats["persistent_waves"] == 0
+
+# -- load-weighted placement (DESIGN.md §13) ---------------------------------
+
+def test_placement_identity_and_validation():
+    pm = plan_mod.PlacementMap.identity(8, 4)
+    assert pm.identity_map()
+    assert pm.n_groups == 8 and pm.n_shards == 2
+    assert [pm.shard_of(g) for g in range(8)] == [0] * 4 + [1] * 4
+    assert [pm.row_of(g) for g in range(8)] == [0, 1, 2, 3] * 2
+    assert pm.group_of == tuple(range(8))
+    with pytest.raises(ValueError):
+        plan_mod.PlacementMap((0, 0, 1, 3), 2)   # not a permutation
+    with pytest.raises(ValueError):
+        plan_mod.PlacementMap((0, 1, 2), 2)      # G not divisible by Gl
+
+
+def test_weighted_placement_is_ragged_and_load_balanced():
+    """LPT greedy: one hot tenant claims a shard while the cold majority
+    packs elsewhere — a ragged, non-contiguous assignment, not equal
+    contiguous slabs."""
+    pm = plan_mod.PlacementMap.weighted([100, 1, 1, 1, 1, 1, 1, 1], 2, 4)
+    shards = [pm.shard_of(g) for g in range(8)]
+    # the hot group sits alone-ish: its shard hosts the LIGHT tail only
+    # after the other shard fills to capacity
+    hot = shards[0]
+    cold_sum = sum(1 for g in range(1, 8) if shards[g] != hot)
+    assert cold_sum == 4  # cold shard filled to Gl before spill-back
+    # the assignment is non-contiguous: the hot shard's co-tenants are not
+    # a prefix/suffix run of group ids
+    mates = sorted(g for g in range(1, 8) if shards[g] == hot)
+    assert mates == [5, 6, 7]
+    # still a permutation; every backend resolves the same map
+    assert sorted(pm.slot_of) == list(range(8))
+    assert pm == plan_mod.PlacementMap.weighted(
+        [100, 1, 1, 1, 1, 1, 1, 1], 2, 4
+    )
+
+
+def test_weighted_placement_stable_under_equal_loads():
+    """Equal loads degrade to round-robin gid i -> shard i % n_shards, so
+    an all-idle service keeps the identity-like layout deterministically."""
+    for loads in ([0] * 8, [5] * 8):
+        pm = plan_mod.PlacementMap.weighted(loads, 2, 4)
+        assert [pm.shard_of(g) for g in range(8)] == [g % 2 for g in range(8)]
+        # repeated planning is a fixed point
+        assert pm == plan_mod.PlacementMap.weighted(loads, 2, 4)
+
+
+def test_placement_swap_is_migrations_only_mutation():
+    pm = plan_mod.PlacementMap.identity(4, 2)
+    moved = pm.swapped(0, 3)
+    assert moved.slot_of == (3, 1, 2, 0)
+    assert moved.shard_of(0) == 1 and moved.shard_of(3) == 0
+    # swap back restores identity; a swap never breaks the permutation
+    assert moved.swapped(0, 3) == pm
+    assert sorted(moved.group_of) == list(range(4))
+    with pytest.raises(ValueError):
+        plan_mod.PlacementMap.weighted([1, 2, 3], 2, 2)  # wrong cardinality
+
+
+def test_sharded_planner_clamps_wave_depth_to_one():
+    """Pin: a sharded planner never mints K > 1 — the wave would unroll to
+    K dispatches anyway, and ``persistent_waves`` must count only waves
+    that actually ran device-persistent (DESIGN.md §11)."""
+    p = DispatchPlanner(
+        batch=32, n_instances=128, persistent_rounds=8, sharded=True
+    )
+    rp = p.plan_round(
+        loads=[32, 32], marks=[0, 0], live=[True] * 2, crnd=[0, 0],
+        pending=[160, 96],
+    )
+    # the identical inputs mint rounds=3 on the unsharded planner (above)
+    assert rp.cohorts == (plan_mod.Cohort(gids=(0, 1), burst=32, rounds=1),)
+    assert p.stats["persistent_waves"] == 0
